@@ -1,0 +1,68 @@
+"""Paper Fig. 11 (center): per-iteration duration — sync vs async (buffer
+32) vs async with over-participation (2x client pool), under the
+heterogeneous-client virtual clock. Expected ordering (paper): sync >
+async > async+over-participation, with comparable accuracies."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import SpamWorld
+from repro.fl import ManagementService, TaskConfig
+from repro.fl.simulator import (make_heterogeneous_clients,
+                                run_async_simulation, run_sync_simulation)
+
+
+def main(rounds=8, quick=False):
+    if quick:
+        rounds = 3
+    world = SpamWorld(n_train=3000 if quick else 6000)
+    cohort = 32 if not quick else 8
+    pool = cohort
+
+    def mk_clients(n):
+        return make_heterogeneous_clients(n, world.make_trainer,
+                                          base_train_s=1.0,
+                                          straggler_frac=0.15)
+
+    svc = ManagementService()
+    t_sync = svc.create_task(
+        TaskConfig("sync", "app", "wf", clients_per_round=cohort,
+                   n_rounds=rounds, vg_size=8), world.model0)
+    r_sync = run_sync_simulation(svc, t_sync, mk_clients(pool),
+                                 eval_fn=world.test_accuracy)
+
+    svc = ManagementService()
+    t_async = svc.create_task(
+        TaskConfig("async", "app", "wf", clients_per_round=cohort,
+                   n_rounds=rounds, mode="async", buffer_size=cohort),
+        world.model0)
+    r_async = run_async_simulation(svc, t_async, mk_clients(pool),
+                                   eval_fn=world.test_accuracy)
+
+    svc = ManagementService()
+    t_over = svc.create_task(
+        TaskConfig("async-over", "app", "wf", clients_per_round=cohort,
+                   n_rounds=rounds, mode="async", buffer_size=cohort),
+        world.model0)
+    r_over = run_async_simulation(svc, t_over, mk_clients(2 * pool),
+                                  eval_fn=world.test_accuracy)
+
+    d_sync = float(np.mean(r_sync.round_durations))
+    d_async = float(np.mean(r_async.round_durations))
+    d_over = float(np.mean(r_over.round_durations))
+    a = lambda r: r.metrics_history[-1].get("eval_accuracy", float("nan"))
+    print(f"# fig11-center: duration sync={d_sync:.2f}s async={d_async:.2f}s "
+          f"async+over={d_over:.2f}s | acc {a(r_sync):.3f}/"
+          f"{a(r_async):.3f}/{a(r_over):.3f}")
+    return [
+        ("fig11_center_sync_iter_s", d_sync * 1e6, f"acc={a(r_sync):.3f}"),
+        ("fig11_center_async_iter_s", d_async * 1e6, f"acc={a(r_async):.3f}"),
+        ("fig11_center_async_over_iter_s", d_over * 1e6,
+         f"acc={a(r_over):.3f}"),
+        ("fig11_center_async_speedup", 0.0, f"{d_sync / d_async:.2f}x"),
+    ]
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,50 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU; compiled on TPU) vs the
+pure-jnp reference path, per secure-agg stage."""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, repeat=3):
+    out = fn(*args)
+    getattr(out, "block_until_ready", lambda: None)()
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args)
+    getattr(out, "block_until_ready", lambda: None)()
+    return (time.perf_counter() - t0) / repeat * 1e6
+
+
+def main(quick=False):
+    n = 1 << 18 if quick else 1 << 20
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.uniform(-1, 1, n).astype(np.float32))
+    q = ops.quantize(x)
+    seed = jnp.asarray([3, 4], jnp.uint32)
+    payloads = jnp.stack([q] * 8)
+    rows = []
+    for name, k_fn, r_fn, args in [
+        ("quantize", ops.quantize, ref.quantize, (x,)),
+        ("mask_apply_g8", lambda a: ops.mask_apply(a, 0, 8, seed),
+         lambda a: ref.mask_apply(a, 0, 8, seed), (q,)),
+        ("secure_sum_n8", ops.secure_sum, ref.secure_sum, (payloads,)),
+        ("dp_clip_noise", lambda a: ops.dp_clip_noise(a, 0.5, 0.1, seed),
+         lambda a: ref.dp_clip_noise(a, 0.5, 0.1, seed), (x,)),
+    ]:
+        tk = _time(k_fn, *args)
+        tr = _time(r_fn, *args)
+        print(f"# kernel {name}: pallas(interp)={tk:.0f}us jnp-ref={tr:.0f}us"
+              f" ({n} elems)")
+        rows.append((f"kernel_{name}_pallas", tk, f"n={n}"))
+        rows.append((f"kernel_{name}_ref", tr, f"n={n}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(str(x) for x in r))

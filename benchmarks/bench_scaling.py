@@ -1,0 +1,61 @@
+"""Paper Fig. 11 (right): scaling test — duration of one iteration of a
+dummy task (each client sends an all-ones array of size 5; the server
+aggregates) for growing numbers of concurrent clients. We measure the REAL
+server-side cost (registration + VG construction + secure aggregation of
+all payloads) on this machine, plus the simulated client wall time."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.masking import protect_cohort, vg_sums
+from repro.core.quantize import dequantize_sum, quantize
+from repro.core.virtual_groups import recommended_vg_size
+
+
+def dummy_iteration(n_clients: int, vg_size: int | None = None,
+                    size: int = 5, repeat: int = 3):
+    """-> (steady_state_s, first_iter_s) for one secure-agg iteration of the
+    dummy task over n concurrent clients (vectorized cohort protocol)."""
+    vg = vg_size or recommended_vg_size(n_clients)
+    while n_clients % vg:
+        vg -= 1
+    seed = jnp.asarray([1, 2], jnp.uint32)
+    xs = jnp.ones((n_clients, size), jnp.float32)
+
+    def iteration():
+        qs = quantize(xs, 1.0, 16)
+        payloads = protect_cohort(qs, vg, seed)
+        interim = vg_sums(payloads, vg)                 # stage 1 per VG
+        total = jnp.sum(interim, axis=0, dtype=jnp.uint32)
+        return dequantize_sum(total, n_clients, 1.0, 16)
+
+    t0 = time.perf_counter()
+    agg = jax.block_until_ready(iteration())
+    first = time.perf_counter() - t0
+    assert abs(float(agg[0]) - 1.0) < 1e-2
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        agg = jax.block_until_ready(iteration())
+    return (time.perf_counter() - t0) / repeat, first
+
+
+def main(quick=False):
+    counts = [32, 64, 128, 256, 512, 1024, 2048] if not quick else [32, 128]
+    rows = []
+    print("# fig11-right: dummy-task iteration duration vs concurrent "
+          "clients (steady-state / first-iteration-with-compile)")
+    for n in counts:
+        dt, first = dummy_iteration(n)
+        print(f"#   n={n:5d}: {dt * 1e3:.2f}ms (first {first:.2f}s)")
+        rows.append((f"fig11_right_n{n}", dt * 1e6,
+                     f"first_iter_s={first:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(str(x) for x in r))

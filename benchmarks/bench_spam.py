@@ -1,0 +1,102 @@
+"""Paper Fig. 11 (left): spam-classification accuracy per iteration,
+federated baseline vs federated + local DP — §5.1 protocol: 32 clients per
+round, 10 iterations, 100 splits @ 20%, batch 8, AdamW 5e-4; DP with clip
+0.5 and the RDP accountant's epsilon reported (paper: ~2 at delta=1e-5)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import SpamWorld
+from repro.core.dp import DPConfig, compute_rdp, get_privacy_spent
+from repro.fl import ManagementService, TaskConfig
+from repro.fl.simulator import make_heterogeneous_clients, run_sync_simulation
+
+
+def run_variant(world, dp: DPConfig, n_rounds=10, clients_per_round=32,
+                pool=64, label="fl"):
+    svc = ManagementService()
+    tid = svc.create_task(
+        TaskConfig(f"spam-{label}", "spam-app", "train",
+                   clients_per_round=clients_per_round, n_rounds=n_rounds,
+                   vg_size=8, dp=dp),
+        world.model0)
+    clients = make_heterogeneous_clients(pool, world.make_trainer,
+                                         base_train_s=1.0)
+    res = run_sync_simulation(svc, tid, clients, eval_fn=world.test_accuracy)
+    accs = [h["eval_accuracy"] for h in res.metrics_history]
+    eps = svc.epsilon(tid)
+    return accs, res.round_durations, eps
+
+
+def required_z_for_epsilon(target_eps=2.0, q=0.32, steps=10, delta=1e-5):
+    """Binary-search the noise multiplier giving the paper's quoted eps=2."""
+    lo, hi = 0.05, 20.0
+    for _ in range(40):
+        mid = 0.5 * (lo + hi)
+        eps, _ = get_privacy_spent(compute_rdp(q, mid, steps), delta)
+        if eps > target_eps:
+            lo = mid
+        else:
+            hi = mid
+    return hi
+
+
+def main(rounds=10, quick=False):
+    rows = []
+    if quick:
+        rounds = 5
+        world = SpamWorld(n_train=4000, n_splits=20, frac=0.5)
+        cpr, pool = 8, 16
+    else:
+        world = SpamWorld()
+        cpr, pool = 32, 64
+    base_acc, base_dur, _ = run_variant(
+        world, DPConfig(mechanism="off"), n_rounds=rounds,
+        clients_per_round=cpr, pool=pool, label="base")
+    # Honest accounting note (EXPERIMENTS.md §Paper-validation): the paper
+    # reports eps=2 with clip 0.5 and "noise scale 0.08" (z = 0.16). A
+    # standard subsampled-RDP accountant gives eps ~ 1.6e2 for that z; eps=2
+    # at q=0.32, T=10 needs z ~ 1.2. We run the DP variant at the z that
+    # actually yields the paper's quoted eps, and report both.
+    z_paper_quote = 0.08 / 0.5
+    z_for_eps2 = required_z_for_epsilon(2.0, q=32 / 100, steps=rounds)
+    # (a) the paper's exact setting (clip 0.5, z=0.16) — reproduces the
+    #     "slight decrease + convergence issues" of Fig. 11 left
+    dpp_acc, _, _ = run_variant(
+        world, DPConfig(mechanism="local", clip_norm=0.5,
+                        noise_multiplier=z_paper_quote, delta=1e-5),
+        n_rounds=rounds, clients_per_round=cpr, pool=pool, label="dp-paper")
+    # (b) the z that actually yields the quoted eps=2 per our accountant
+    dp_cfg = DPConfig(mechanism="local", clip_norm=0.5,
+                      noise_multiplier=z_for_eps2, delta=1e-5)
+    dp_acc, dp_dur, _ = run_variant(world, dp_cfg, n_rounds=rounds,
+                                    clients_per_round=cpr, pool=pool,
+                                    label="dp-eps2")
+    eps_quote, _ = get_privacy_spent(
+        compute_rdp(0.32, z_paper_quote, rounds), 1e-5)
+    eps_run, order = get_privacy_spent(
+        compute_rdp(0.32, z_for_eps2, rounds), 1e-5)
+    print(f"# fig11-left: final acc base={base_acc[-1]:.3f} "
+          f"dp(z=0.16 paper)={dpp_acc[-1]:.3f} (eps={eps_quote:.1f}) "
+          f"dp(z={z_for_eps2:.2f})={dp_acc[-1]:.3f} (eps={eps_run:.2f}"
+          f"@order{order})")
+    print(f"# accuracy/base    : {[round(a, 3) for a in base_acc]}")
+    print(f"# accuracy/dp-paper: {[round(a, 3) for a in dpp_acc]}")
+    print(f"# accuracy/dp-eps2 : {[round(a, 3) for a in dp_acc]}")
+    rows.append(("fig11_left_base_final_acc",
+                 np.mean(base_dur) * 1e6, f"{base_acc[-1]:.4f}"))
+    rows.append(("fig11_left_dp_paper_z016_final_acc", 0.0,
+                 f"{dpp_acc[-1]:.4f}"))
+    rows.append(("fig11_left_dp_paper_acc_drop", 0.0,
+                 f"{base_acc[-1] - dpp_acc[-1]:.4f}"))
+    rows.append(("fig11_left_dp_eps2_final_acc",
+                 np.mean(dp_dur) * 1e6, f"{dp_acc[-1]:.4f}"))
+    rows.append(("fig11_left_dp_epsilon", 0.0, f"{eps_run:.3f}"))
+    rows.append(("fig11_left_z_for_eps2", 0.0, f"{z_for_eps2:.3f}"))
+    rows.append(("fig11_left_eps_at_paper_z016", 0.0, f"{eps_quote:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(str(x) for x in r))

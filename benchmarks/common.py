@@ -1,0 +1,93 @@
+"""Shared benchmark harness pieces: the paper's §5.1 spam-classification
+training setup (BERT-tiny-class model, 100 splits, 20% per round, batch 8,
+AdamW 5e-4), reusable across Fig. 11 benchmarks."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import deserialize_pytree
+from repro.configs import get_config
+from repro.data import ClientDataAccess, batches, spam_dataset
+from repro.models import (classifier_init, classify_logits, classify_loss,
+                          init_params)
+from repro.optim import adamw
+from repro.optim.adamw import apply_updates
+
+
+def timed(fn, *args, repeat=3, **kw):
+    fn(*args, **kw)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out) if hasattr(out, "block_until_ready") else None
+    return (time.perf_counter() - t0) / repeat * 1e6, out  # us
+
+
+class SpamWorld:
+    """Paper §5.1 setup on synthetic enron-like data."""
+
+    def __init__(self, vocab=4096, d_model=128, seq_len=32, n_train=10_000,
+                 lr=5e-4, batch_size=8, n_splits=50, frac=0.2, seed=0):
+        # paper: 100 splits of enron (~330/split), 20% => ~67 samples/round.
+        # synthetic: 50 splits of 10k => 200/split, 20% => 40 samples/round
+        # (same order of local work per client per round).
+        self.cfg = get_config("bert-tiny-spam").replace(vocab_size=vocab,
+                                                        d_model=d_model)
+        key = jax.random.PRNGKey(seed)
+        self.model0 = {
+            "trunk": init_params(self.cfg, key),
+            "head": classifier_init(self.cfg, jax.random.fold_in(key, 1)),
+        }
+        self.train = spam_dataset(n_samples=n_train, vocab_size=vocab,
+                                  seq_len=seq_len, seed=seed)
+        self.test = spam_dataset(n_samples=800, vocab_size=vocab,
+                                 seq_len=seq_len, seed=seed + 77)
+        self.access = ClientDataAccess(self.train, n_splits=n_splits,
+                                       frac=frac, seed=seed)
+        self.batch_size = batch_size
+        opt = adamw(lr=lr)
+        cfg = self.cfg
+
+        @jax.jit
+        def local_step(model, opt_state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda m: classify_loss(cfg, m["trunk"], m["head"],
+                                        batch))(model)
+            upd, opt_state = opt.update(grads, opt_state, model)
+            return apply_updates(model, upd), opt_state, loss
+
+        self._local_step = local_step
+        self._opt = opt
+
+        @jax.jit
+        def _acc(model, batch):
+            logits = classify_logits(cfg, model["trunk"], model["head"],
+                                     batch)
+            return jnp.mean(jnp.argmax(logits, -1) == batch["label"])
+
+        self._acc = _acc
+        self._test_batch = {k: jnp.asarray(v) for k, v in self.test.items()}
+
+    def test_accuracy(self, model) -> float:
+        return float(self._acc(model, self._test_batch))
+
+    def make_trainer(self, i: int):
+        """Paper-protocol client trainer for the SDK/simulator."""
+        def trainer(blob, round_idx):
+            model = deserialize_pytree(blob, like=self.model0)
+            d = self.access.sample(client_seed=round_idx * 9973 + i)
+            opt_state = self._opt.init(model)
+            new, n, loss = model, 0, jnp.zeros(())
+            for b in batches(d, self.batch_size, seed=round_idx):
+                b = {k: jnp.asarray(v) for k, v in b.items()}
+                new, opt_state, loss = self._local_step(new, opt_state, b)
+                n += len(b["label"])
+            update = jax.tree.map(
+                lambda a, b_: np.asarray(a, np.float32)
+                - np.asarray(b_, np.float32), new, model)
+            return update, max(n, 1), {"loss": float(loss)}
+        return trainer

@@ -1,0 +1,59 @@
+"""Re-run the roofline analyzer over dumped HLO (experiments/dryrun/hlo/
+*.txt.gz) and refresh the 'roofline' section of the corresponding JSONs —
+lets analyzer fixes propagate without recompiling 76 programs.
+
+    PYTHONPATH=src python -m benchmarks.rescore [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import gzip
+import json
+import os
+
+from repro.configs import get_config, get_shape
+from repro.launch.roofline import analyze_hlo, roofline_terms
+
+
+def _jsonable(d):
+    out = {}
+    for k, v in d.items():
+        if isinstance(v, dict):
+            out[k] = _jsonable(v)
+        elif isinstance(v, (int, float, str, bool)) or v is None:
+            out[k] = v
+        else:
+            out[k] = float(v)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    n = 0
+    for gz in sorted(glob.glob(os.path.join(args.dir, "hlo", "*.txt.gz"))):
+        base = os.path.basename(gz)[:-len(".txt.gz")]
+        jpath = os.path.join(args.dir, base + ".json")
+        if not os.path.exists(jpath):
+            continue
+        rec = json.load(open(jpath))
+        if rec.get("status") != "ok":
+            continue
+        cfg = get_config(rec["arch"])
+        shape = get_shape(rec["shape"])
+        n_chips = rec["meta"]["n_chips"]
+        text = gzip.open(gz, "rt").read()
+        stats = analyze_hlo(text)
+        terms = roofline_terms(stats, cfg, shape, n_chips)
+        rec["roofline"] = _jsonable(terms)
+        json.dump(rec, open(jpath, "w"), indent=1)
+        n += 1
+        print(f"rescored {base}: dominant={terms['dominant']} "
+              f"mem={terms['memory_s']:.2f}s coll={terms['collective_s']:.2f}s")
+    print(f"{n} records rescored")
+
+
+if __name__ == "__main__":
+    main()

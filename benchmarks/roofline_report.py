@@ -1,0 +1,113 @@
+"""Render §Dry-run / §Roofline markdown tables from experiments/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ARCH_ORDER = ["command-r-35b", "whisper-medium", "rwkv6-7b", "gemma2-27b",
+              "llama4-maverick-400b-a17b", "llava-next-mistral-7b",
+              "jamba-v0.1-52b", "qwen3-moe-235b-a22b", "deepseek-67b",
+              "yi-9b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dirpath, mesh="single", tag=""):
+    recs = {}
+    for f in glob.glob(os.path.join(dirpath, f"*__{mesh}{tag}.json")):
+        r = json.load(open(f))
+        if r.get("tag", "") != tag:
+            continue
+        recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def roofline_table(recs):
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "dominant | useful ratio | mem GiB/dev | note |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape))
+            if r is None:
+                lines.append(f"| {arch} | {shape} | - | - | - | - | - | - | "
+                             f"missing |")
+                continue
+            if r["status"] == "skipped":
+                lines.append(f"| {arch} | {shape} | - | - | - | - | - | - | "
+                             f"SKIP: {r['reason'][:60]}... |")
+                continue
+            if r["status"] != "ok":
+                lines.append(f"| {arch} | {shape} | - | - | - | - | - | - | "
+                             f"ERROR |")
+                continue
+            t = r["roofline"]
+            mem = r["memory_analysis"].get("total_bytes_per_device", 0)
+            note = ""
+            if r.get("meta", {}).get("window_override"):
+                note = f"window={r['meta']['window_override']}"
+            lines.append(
+                f"| {arch} | {shape} | {t['compute_s']:.3f} | "
+                f"{t['memory_s']:.3f} | {t['collective_s']:.3f} | "
+                f"{t['dominant']} | {t['useful_flops_ratio']:.2f} | "
+                f"{fmt_bytes(mem)} | {note} |")
+    return "\n".join(lines)
+
+
+def dryrun_table(recs_single, recs_multi):
+    lines = ["| arch | shape | 1-pod (256) | 2-pod (512) | "
+             "collective bytes/dev (1-pod) | top collective |",
+             "|---|---|---|---|---|---|"]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            s = recs_single.get((arch, shape))
+            m = recs_multi.get((arch, shape))
+
+            def stat(r):
+                if r is None:
+                    return "missing"
+                if r["status"] == "skipped":
+                    return "skip"
+                if r["status"] != "ok":
+                    return "FAIL"
+                mem = r["memory_analysis"].get("total_bytes_per_device", 0)
+                return f"ok {fmt_bytes(mem)}GiB"
+
+            cb, top = "-", "-"
+            if s and s["status"] == "ok":
+                t = s["roofline"]
+                cb = f"{t['collective_bytes'] / 2**30:.2f}GiB"
+                kinds = t.get("collective_by_kind", {})
+                if kinds:
+                    top = max(kinds, key=kinds.get)
+            lines.append(f"| {arch} | {shape} | {stat(s)} | {stat(m)} | "
+                         f"{cb} | {top} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    single = load(args.dir, "single", args.tag)
+    multi = load(args.dir, "multi", args.tag)
+    print("## Dry-run grid\n")
+    print(dryrun_table(single, multi))
+    print("\n## Roofline (single-pod 16x16, per chip)\n")
+    print(roofline_table(single))
+    n_ok = sum(1 for r in single.values() if r["status"] == "ok")
+    n_ok_m = sum(1 for r in multi.values() if r["status"] == "ok")
+    print(f"\nsingle-pod ok: {n_ok}; multi-pod ok: {n_ok_m}")
+
+
+if __name__ == "__main__":
+    main()

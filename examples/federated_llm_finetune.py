@@ -1,0 +1,33 @@
+"""Cross-silo federated LLM fine-tuning — the production fl_round from
+``repro.launch.fl_step`` (quantize -> mask -> two-stage secure aggregation
+-> server AdamW) running REAL steps on a reduced assigned architecture.
+
+This is the on-pod path the dry-run lowers at full scale; here it trains a
+2-layer yi-9b-family model on the synthetic LM stream and shows the loss
+falling with the full secure-aggregation pipeline in the loop.
+
+    PYTHONPATH=src python examples/federated_llm_finetune.py \
+        [--arch yi-9b] [--steps 25]
+"""
+import argparse
+
+from repro.launch import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-9b")
+    ap.add_argument("--steps", type=int, default=25)
+    args = ap.parse_args()
+    loss = train_mod.main([
+        "--arch", args.arch, "--reduced",
+        "--steps", str(args.steps),
+        "--global-batch", "8", "--seq-len", "64",
+        "--server-lr", "3e-3",
+    ])
+    print(f"[example] final loss {loss:.3f} — secure FL round trains "
+          f"an assigned architecture end to end")
+
+
+if __name__ == "__main__":
+    main()

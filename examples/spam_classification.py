@@ -1,0 +1,50 @@
+"""Paper §5.1 end-to-end: federated spam classification with the exact
+experiment protocol — 32 clients/round from the AzureML-simulator-style
+pool, 100 data splits @ 20% per round, batch 8, AdamW 5e-4, 10 iterations —
+plus the DP variant (clip 0.5) with the RDP accountant's epsilon.
+
+    PYTHONPATH=src python examples/spam_classification.py [--dp] [--rounds N]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import SpamWorld  # noqa: E402
+from repro.core.dp import DPConfig  # noqa: E402
+from repro.fl import ManagementService, TaskConfig  # noqa: E402
+from repro.fl.simulator import (make_heterogeneous_clients,  # noqa: E402
+                                run_sync_simulation)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dp", action="store_true")
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--clients-per-round", type=int, default=32)
+    args = ap.parse_args()
+
+    world = SpamWorld()  # §5.1 protocol defaults
+    dp = (DPConfig(mechanism="local", clip_norm=0.5, noise_multiplier=0.16)
+          if args.dp else DPConfig())
+    svc = ManagementService()
+    tid = svc.create_task(
+        TaskConfig("spam-561", "spam-app", "train",
+                   clients_per_round=args.clients_per_round,
+                   n_rounds=args.rounds, vg_size=8, dp=dp),
+        world.model0)
+    clients = make_heterogeneous_clients(args.clients_per_round * 2,
+                                         world.make_trainer)
+    res = run_sync_simulation(svc, tid, clients,
+                              eval_fn=world.test_accuracy)
+    for i, h in enumerate(res.metrics_history):
+        print(f"iteration {i + 1:2d}: accuracy={h['eval_accuracy']:.3f} "
+              f"duration={res.round_durations[i]:.2f}s")
+    if args.dp:
+        print(f"privacy: epsilon={svc.epsilon(tid):.2f} at "
+              f"delta={dp.delta}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.checkpoint.checkpoint import (deserialize_pytree, load_checkpoint,
+                                         save_checkpoint, serialize_pytree)
+
+__all__ = ["deserialize_pytree", "load_checkpoint", "save_checkpoint",
+           "serialize_pytree"]

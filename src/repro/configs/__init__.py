@@ -1,0 +1,24 @@
+from repro.configs.base import ArchConfig, reduced
+from repro.configs.registry import (
+    ASSIGNED,
+    SKIPS,
+    get_config,
+    get_reduced_config,
+    is_skipped,
+    list_archs,
+)
+from repro.configs.shapes import SHAPES, InputShape, get_shape
+
+__all__ = [
+    "ArchConfig",
+    "reduced",
+    "ASSIGNED",
+    "SKIPS",
+    "get_config",
+    "get_reduced_config",
+    "is_skipped",
+    "list_archs",
+    "SHAPES",
+    "InputShape",
+    "get_shape",
+]

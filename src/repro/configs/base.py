@@ -1,0 +1,236 @@
+"""Architecture configuration schema.
+
+One ``ArchConfig`` instance per assigned architecture (see files in this
+package). The schema spans all six assigned families: dense GQA decoders,
+MoE decoders, attention-free SSM (RWKV6), hybrid Mamba+attention (Jamba),
+encoder-decoder audio backbones (Whisper), and VLM backbones (LLaVA-NeXT).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    # identity ---------------------------------------------------------
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | audio | vlm
+    source: str = ""               # citation from the assignment
+
+    # trunk ------------------------------------------------------------
+    num_layers: int = 2
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 64
+    d_ff: int = 1024
+    vocab_size: int = 512
+    use_bias: bool = False
+    norm_type: str = "rmsnorm"     # rmsnorm | layernorm
+    act: str = "silu"              # silu | gelu
+    glu: bool = True               # gated MLP (SwiGLU/GeGLU)
+    tie_embeddings: bool = False
+    rope_theta: float = 10_000.0
+    pos_embed: str = "rope"        # rope | learned | none
+
+    # attention variants -------------------------------------------------
+    sliding_window: int = 0        # >0: sliding-window attention everywhere
+    local_global_alternate: bool = False   # gemma2: even layers local
+    local_window: int = 4096               # window for local layers
+    attn_logit_softcap: float = 0.0        # gemma2 attn softcap
+    final_logit_softcap: float = 0.0       # gemma2 output softcap
+    qk_norm: bool = False                  # qwen3: rmsnorm on q,k heads
+
+    # mixture-of-experts -------------------------------------------------
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_every: int = 1             # MoE FFN in layers with (idx % moe_every == moe_offset)
+    moe_offset: int = 0
+    moe_shared_expert: bool = False        # llama4: shared expert alongside routed
+    capacity_factor: float = 1.25
+    moe_group_size: int = 1024     # token group size for dispatch einsum
+    # §Perf (hillclimb): pin expert-parallel shardings on the dispatched
+    # activations so GSPMD emits all-to-all instead of replicate+reshard
+    moe_dispatch_constraint: bool = False
+
+    # ssm / hybrid ---------------------------------------------------------
+    ssm_type: str = ""             # rwkv6 | mamba
+    # §Perf (hillclimb): two-level selective scan — outer scan over chunks
+    # of this many steps with a rematerialized inner scan, so backward
+    # stores only chunk-boundary states instead of (T, B, d_in, n) f32
+    # residual stacks. 0 = plain scan (paper-faithful baseline).
+    ssm_scan_chunk: int = 0
+    attn_every: int = 0            # jamba: layer idx % attn_every == attn_offset is attention
+    attn_offset: int = 0
+    d_state: int = 16              # mamba state dim
+    d_conv: int = 4                # mamba conv width
+    ssm_expand: int = 2            # mamba inner expansion
+    rwkv_head_dim: int = 64
+
+    # encoder-decoder ------------------------------------------------------
+    encoder_decoder: bool = False
+    num_encoder_layers: int = 0
+    max_decoder_len: int = 448     # whisper decoder hard cap
+
+    # modality frontend (STUB — input_specs provides embeddings directly) --
+    frontend: str = ""             # "" | audio_stub | vision_stub
+    num_patch_tokens: int = 0      # vlm: image patch tokens per example
+
+    # long-context variant -------------------------------------------------
+    # window used by full-attention archs for the long_500k decode shape
+    long_context_window: int = 8192
+
+    # §Perf: mesh axes to pin the activation batch dim to (empty = let
+    # GSPMD propagate). Set by launch/fl_step for per_pod training after
+    # measuring GSPMD replicate-batch/shard-feature propagation on jamba.
+    activation_batch_axes: tuple | None = None  # None=auto, ()=off
+
+    # §Perf: pin attention q/k/v head dims to the 'model' axis (GSPMD
+    # propagation can otherwise replicate heads for per_silo training —
+    # measured on gemma2). None=auto (on for per_silo train), False=off.
+    shard_attn_heads: bool | None = None
+
+    # §Perf: bf16 AdamW moments on the server optimizer (halves opt-state
+    # memory; update math stays f32). Off = paper-faithful f32.
+    opt_moments_bf16: bool = False
+
+    # FL integration --------------------------------------------------------
+    # per_silo: silo = one data-axis index, per-silo pseudo-grads via vmap
+    # per_pod : silo = one pod, masking applied to the FSDP-sharded update
+    fl_scheme: str = "per_silo"
+    # microbatches for the train_4k production step (grad accumulation)
+    train_microbatches: int = 1
+
+    # ---------------------------------------------------------------------
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    def is_attn_layer(self, idx: int) -> bool:
+        """hybrid archs: which layers are attention (vs SSM)."""
+        if self.ssm_type and self.attn_every:
+            return idx % self.attn_every == self.attn_offset
+        return not self.ssm_type
+
+    def is_moe_layer(self, idx: int) -> bool:
+        if self.num_experts == 0:
+            return False
+        return idx % self.moe_every == self.moe_offset
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for roofline MODEL_FLOPS)."""
+        c = self
+        n = c.vocab_size * c.d_model  # embed
+        if not c.tie_embeddings:
+            n += c.vocab_size * c.d_model
+        if c.pos_embed == "learned":
+            n += 8192 * c.d_model
+
+        def attn_params():
+            return c.d_model * (c.q_dim + 2 * c.kv_dim) + c.q_dim * c.d_model
+
+        def dense_ffn():
+            mult = 3 if c.glu else 2
+            return mult * c.d_model * c.d_ff
+
+        def moe_ffn():
+            mult = 3 if c.glu else 2
+            p = c.num_experts * mult * c.d_model * c.d_ff
+            p += c.d_model * c.num_experts  # router
+            if c.moe_shared_expert:
+                p += mult * c.d_model * c.d_ff
+            return p
+
+        def rwkv_block():
+            # time-mix: r,k,v,w,g projections + output + lora for w; channel-mix
+            d = c.d_model
+            return 6 * d * d + 2 * d * (c.d_ff if c.d_ff else 4 * d)
+
+        def mamba_block():
+            d_in = c.ssm_expand * c.d_model
+            p = c.d_model * d_in * 2          # in_proj (x, z)
+            p += d_in * c.d_conv              # conv
+            p += d_in * (c.d_state * 2 + 1)   # B, C, dt proj (approx)
+            p += d_in * c.d_model             # out proj
+            p += d_in * c.d_state             # A
+            return p
+
+        layers = c.num_layers + (c.num_encoder_layers if c.encoder_decoder else 0)
+        for i in range(c.num_layers):
+            if c.ssm_type == "rwkv6":
+                n += rwkv_block()
+            elif c.ssm_type == "mamba" and not c.is_attn_layer(i):
+                n += mamba_block()
+                n += moe_ffn() if c.is_moe_layer(i) else dense_ffn()
+                continue
+            else:
+                n += attn_params()
+                n += moe_ffn() if c.is_moe_layer(i) else dense_ffn()
+        if c.encoder_decoder:
+            for _ in range(c.num_encoder_layers):
+                n += attn_params() + dense_ffn()
+            n += c.num_layers * attn_params()  # cross attention
+        n += layers * 2 * c.d_model  # norms (approx)
+        return n
+
+    def active_param_count(self) -> int:
+        """Active (per-token) params for MoE rooflines: 6*N_active*D."""
+        if self.num_experts == 0:
+            return self.param_count()
+        dense_like = self.replace(num_experts=0, experts_per_token=0)
+        full_ffn_layers = sum(
+            1 for i in range(self.num_layers) if self.is_moe_layer(i)
+        )
+        mult = 3 if self.glu else 2
+        per_layer_ffn = mult * self.d_model * self.d_ff
+        extra = full_ffn_layers * per_layer_ffn * (
+            self.experts_per_token - 1 + (1 if self.moe_shared_expert else 0)
+        )
+        return dense_like.param_count() + extra
+
+
+def reduced(cfg: ArchConfig) -> ArchConfig:
+    """Reduced variant of the same family for CPU smoke tests.
+
+    2 layers, d_model<=512, <=4 experts, tiny vocab — per the deliverable
+    contract. Keeps every structural flag (GQA ratio, local/global pattern,
+    MoE interleave, SSM type, enc-dec) so the smoke test exercises the same
+    code paths as the full config.
+    """
+    d_model = min(cfg.d_model, 256)
+    head_dim = 32
+    num_heads = max(2, min(cfg.num_heads, 4))
+    ratio = max(1, cfg.num_heads // max(1, cfg.num_kv_heads))
+    num_kv = max(1, num_heads // ratio)
+    kw = dict(
+        num_layers=2,
+        d_model=d_model,
+        num_heads=num_heads,
+        num_kv_heads=num_kv,
+        head_dim=head_dim,
+        d_ff=min(cfg.d_ff, 512),
+        vocab_size=min(cfg.vocab_size, 512),
+        local_window=16,
+        sliding_window=16 if cfg.sliding_window else 0,
+        long_context_window=32,
+        moe_group_size=64,
+        train_microbatches=1,
+        rwkv_head_dim=32,
+    )
+    if cfg.num_experts:
+        kw.update(num_experts=4, experts_per_token=min(cfg.experts_per_token, 2))
+    if cfg.encoder_decoder:
+        kw.update(num_encoder_layers=2, max_decoder_len=16)
+    if cfg.ssm_type == "mamba" and cfg.attn_every:
+        kw.update(attn_every=2, attn_offset=1)  # keep the hybrid interleave
+    if cfg.num_patch_tokens:
+        kw.update(num_patch_tokens=8)
+    return cfg.replace(**kw)

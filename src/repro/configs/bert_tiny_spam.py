@@ -1,0 +1,26 @@
+"""BERT-Tiny-class spam classifier — the paper's own experiment model
+(prajjwal1/bert-tiny distilled BERT on SetFit/enron-spam, §5.1).
+
+Used by the paper-validation benchmarks and examples; not part of the
+assigned dry-run grid.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="bert-tiny-spam",
+    family="dense",
+    source="paper §5.1 (prajjwal1/bert-tiny on SetFit/enron-spam)",
+    num_layers=2,
+    d_model=128,
+    num_heads=2,
+    num_kv_heads=2,
+    head_dim=64,
+    d_ff=512,
+    vocab_size=8_192,             # synthetic-tokenizer vocab
+    use_bias=True,
+    norm_type="layernorm",
+    act="gelu",
+    glu=False,
+    pos_embed="learned",
+    fl_scheme="per_silo",
+)

@@ -1,0 +1,20 @@
+"""DeepSeek 67B — dense llama-arch GQA decoder.
+
+[arXiv:2401.02954]
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-67b",
+    family="dense",
+    source="arXiv:2401.02954",
+    num_layers=95,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=22016,
+    vocab_size=102_400,
+    fl_scheme="per_pod",
+    train_microbatches=8,
+)

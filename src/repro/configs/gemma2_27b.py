@@ -1,0 +1,27 @@
+"""Gemma 2 27B — dense GQA with alternating local/global attention + softcaps.
+
+[arXiv:2408.00118]
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma2-27b",
+    family="dense",
+    source="arXiv:2408.00118",
+    num_layers=46,
+    d_model=4608,
+    num_heads=32,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=36864,
+    vocab_size=256_000,
+    act="gelu",
+    glu=True,
+    local_global_alternate=True,
+    local_window=4096,
+    attn_logit_softcap=50.0,
+    final_logit_softcap=30.0,
+    tie_embeddings=True,
+    fl_scheme="per_silo",
+    train_microbatches=8,
+)

@@ -1,0 +1,37 @@
+"""Jamba v0.1 52B — hybrid Mamba+attention (1:7 interleave) with MoE 16e top-2.
+
+[arXiv:2403.19887]
+
+Layer l is attention iff l % 8 == 4 (1 attention per 8-layer Jamba block);
+MoE FFN every second layer (odd layers), dense FFN otherwise.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    source="arXiv:2403.19887",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=65_536,
+    num_experts=16,
+    experts_per_token=2,
+    moe_every=2,
+    moe_offset=1,
+    ssm_type="mamba",
+    attn_every=8,
+    attn_offset=4,
+    d_state=16,
+    d_conv=4,
+    ssm_expand=2,
+    pos_embed="none",             # jamba uses no positional encoding
+    ssm_scan_chunk=256,            # §Perf hillclimb 1 (chunk+remat scan)
+    # moe_dispatch_constraint measured HARMFUL here (21.1 -> 57.2 GiB):
+    # 16 experts/16-way model axis reshards badly under the pinned layout
+    fl_scheme="per_pod",
+    train_microbatches=4,
+)

@@ -1,0 +1,29 @@
+"""Llama 4 Maverick 400B (17B active) — MoE 128 experts top-1, shared expert,
+early-fusion multimodal (vision frontend out of scope for this entry: the
+assignment lists it as [moe]; the text backbone is what we build).
+
+[hf:meta-llama/Llama-4-Scout-17B-16E]
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    source="hf:meta-llama/Llama-4-Scout-17B-16E",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,                    # per-expert ffn dim
+    vocab_size=202_048,
+    num_experts=128,
+    experts_per_token=1,
+    moe_shared_expert=True,
+    moe_every=1,
+    capacity_factor=1.25,
+    moe_dispatch_constraint=True,  # §Perf hillclimb 2
+    opt_moments_bf16=True,         # §Perf hillclimb 2 (400B moments)
+    fl_scheme="per_pod",
+    train_microbatches=8,
+)

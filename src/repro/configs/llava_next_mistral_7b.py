@@ -1,0 +1,28 @@
+"""LLaVA-NeXT (Mistral-7B backbone) — VLM, anyres tiling frontend stubbed.
+
+[hf:llava-hf/llava-v1.6-mistral-7b-hf]
+
+The ViT/CLIP vision tower + projector is a STUB per the assignment:
+``input_specs()`` provides projected patch embeddings (B, P, d_model) which
+the backbone early-fuses with the text token embeddings. The Mistral
+backbone's native 4096 sliding window is kept.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    source="hf:llava-hf/llava-v1.6-mistral-7b-hf",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=32_000,
+    sliding_window=4096,
+    frontend="vision_stub",
+    num_patch_tokens=2880,        # anyres: 4 tiles + base, 576 each
+    fl_scheme="per_silo",
+    train_microbatches=2,
+)

@@ -1,0 +1,52 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ArchConfig, reduced
+
+_MODULES = {
+    "command-r-35b": "repro.configs.command_r_35b",
+    "whisper-medium": "repro.configs.whisper_medium",
+    "rwkv6-7b": "repro.configs.rwkv6_7b",
+    "gemma2-27b": "repro.configs.gemma2_27b",
+    "llama4-maverick-400b-a17b": "repro.configs.llama4_maverick_400b_a17b",
+    "llava-next-mistral-7b": "repro.configs.llava_next_mistral_7b",
+    "jamba-v0.1-52b": "repro.configs.jamba_v0_1_52b",
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b_a22b",
+    "deepseek-67b": "repro.configs.deepseek_67b",
+    "yi-9b": "repro.configs.yi_9b",
+    "bert-tiny-spam": "repro.configs.bert_tiny_spam",
+}
+
+# the 10 assigned architectures (bert-tiny-spam is the paper's own extra)
+ASSIGNED = [k for k in _MODULES if k != "bert-tiny-spam"]
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[name]).CONFIG
+
+
+def get_reduced_config(name: str) -> ArchConfig:
+    return reduced(get_config(name))
+
+
+def list_archs() -> list[str]:
+    return sorted(_MODULES)
+
+
+# (arch, shape) pairs skipped in the dry-run grid, with reasons
+SKIPS: dict[tuple[str, str], str] = {
+    ("whisper-medium", "decode_32k"):
+        "whisper decoder hard-capped at 448 positions; a 32k KV cache has no "
+        "meaning for this architecture (DESIGN.md §Arch-applicability)",
+    ("whisper-medium", "long_500k"):
+        "whisper decoder hard-capped at 448 positions (DESIGN.md "
+        "§Arch-applicability)",
+}
+
+
+def is_skipped(arch: str, shape: str) -> str | None:
+    return SKIPS.get((arch, shape))

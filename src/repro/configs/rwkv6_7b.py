@@ -1,0 +1,25 @@
+"""RWKV6 (Finch) 7B — attention-free SSM with data-dependent decay.
+
+[arXiv:2404.05892]
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="rwkv6-7b",
+    family="ssm",
+    source="arXiv:2404.05892",
+    num_layers=32,
+    d_model=4096,
+    num_heads=64,                 # rwkv heads = d_model / rwkv_head_dim
+    num_kv_heads=64,
+    head_dim=64,
+    rwkv_head_dim=64,
+    d_ff=14336,
+    vocab_size=65_536,
+    norm_type="layernorm",
+    pos_embed="none",
+    ssm_type="rwkv6",
+    glu=False,                    # rwkv channel-mix is its own gated form
+    fl_scheme="per_silo",
+    train_microbatches=4,
+)

@@ -1,0 +1,37 @@
+"""Whisper medium — encoder-decoder audio backbone, conv frontend stubbed.
+
+[arXiv:2212.04356]
+
+The mel-spectrogram + conv feature extractor is a STUB per the assignment:
+``input_specs()`` provides post-conv frame embeddings (B, S_enc, d_model)
+directly. The input-shape seq_len is interpreted as the encoder frame count;
+the decoder length is min(448, seq_len // 8) (Whisper's decoder is hard
+capped at 448 positions, hence decode_32k / long_500k are skipped — see
+DESIGN.md §Arch-applicability).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-medium",
+    family="audio",
+    source="arXiv:2212.04356",
+    num_layers=24,                # decoder layers
+    num_encoder_layers=24,
+    encoder_decoder=True,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=51_865,
+    use_bias=True,
+    norm_type="layernorm",
+    act="gelu",
+    glu=False,
+    pos_embed="learned",
+    max_decoder_len=448,
+    frontend="audio_stub",
+    tie_embeddings=True,
+    fl_scheme="per_silo",
+    train_microbatches=2,
+)

@@ -1,0 +1,20 @@
+"""Yi 9B — dense llama-arch GQA decoder.
+
+[arXiv:2403.04652]
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="yi-9b",
+    family="dense",
+    source="arXiv:2403.04652",
+    num_layers=48,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=11008,
+    vocab_size=64_000,
+    fl_scheme="per_silo",
+    train_microbatches=2,
+)

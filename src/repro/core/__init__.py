@@ -1,0 +1,17 @@
+"""Project Florida's primary contribution: two-stage secure aggregation over
+Virtual Groups, pairwise-mask protocol, DP, and aggregation strategies."""
+from repro.core.dp import DPConfig, RdpAccountant, compute_rdp, get_privacy_spent
+from repro.core.kdf import kdf_u32, mask_stream, pair_seed
+from repro.core.masking import apply_mask, modular_sum, net_mask
+from repro.core.orchestrator import (AsyncServer, ClientResult, RoundInfo,
+                                     run_sync_round)
+from repro.core.quantize import (DEFAULT_BITS, DEFAULT_CLIP, check_headroom,
+                                 dequantize, dequantize_sum, quantize)
+from repro.core.secure_agg import (SecureAggConfig, client_protect,
+                                   master_aggregate, secure_aggregate_round,
+                                   vg_aggregate)
+from repro.core.strategies import (DGA, STRATEGIES, FedAvg, FedBuff, FedProx,
+                                   make_strategy)
+from repro.core.virtual_groups import (VGPlan, VirtualGroup,
+                                       make_virtual_groups, pairwise_cost,
+                                       recommended_vg_size)

@@ -1,0 +1,69 @@
+"""Counter-based key-derivation function for pairwise mask generation.
+
+The paper (§4.1) requires *cross-platform consistent* mask generation from a
+negotiated pair secret: both ends of a client pair must expand the same seed
+into the same integer mask stream. Production Florida uses standard KDFs
+(HKDF family); here we use ``florida_kdf`` — a deterministic counter-mode ARX
+hash (murmur3-finalizer rounds keyed by the pair seed). It is NOT
+cryptographically strong (documented in DESIGN.md §2); it has the same
+interface and the same algebraic role, and is vector/TPU-friendly — the
+Pallas kernel in ``repro.kernels.mask_gen`` implements bit-identical logic.
+
+All arithmetic is uint32 with wraparound (mod 2^32).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+U32 = jnp.uint32
+
+# python-int constants (NOT jnp arrays): the same code must trace inside
+# Pallas kernel bodies, which reject captured device constants.
+_M1 = 0x7FEB352D
+_M2 = 0x846CA68B
+_GOLDEN = 0x9E3779B9
+
+
+def _mix(x):
+    x = x ^ (x >> U32(16))
+    x = x * U32(_M1)
+    x = x ^ (x >> U32(15))
+    x = x * U32(_M2)
+    x = x ^ (x >> U32(16))
+    return x
+
+
+def kdf_u32(k0, k1, ctr):
+    """Keyed hash of a uint32 counter -> uint32. All args broadcastable."""
+    k0 = jnp.asarray(k0, U32)
+    k1 = jnp.asarray(k1, U32)
+    x = jnp.asarray(ctr, U32)
+    x = _mix(x ^ k0)
+    x = _mix(x + (k1 ^ U32(_GOLDEN)))
+    x = _mix(x ^ (k0 + k1))
+    return x
+
+
+def pair_seed(round_seed, u, v):
+    """Derive the (k0, k1) seed for client pair (u, v), u < v.
+
+    Stands in for Diffie-Hellman key negotiation (DESIGN.md §2): the
+    orchestrator distributes ``round_seed``; the pair secret is a keyed hash
+    of the ordered pair ids, identical on both clients.
+    round_seed: (2,) uint32. Returns (2,) uint32.
+    """
+    r0, r1 = jnp.asarray(round_seed, U32)
+    u = jnp.asarray(u, U32)
+    v = jnp.asarray(v, U32)
+    s0 = kdf_u32(r0, r1, u * U32(0x01000193) + v)
+    s1 = kdf_u32(r1, r0 ^ U32(_GOLDEN), v * U32(0x01000193) + u + U32(1))
+    return jnp.stack([s0, s1])
+
+
+def mask_stream(seed, offset, size):
+    """Expand a (2,) uint32 seed into ``size`` uint32 mask words starting at
+    stream position ``offset`` (counter mode: position-addressable, which is
+    what lets the sharded/per-pod scheme mask disjoint shards independently).
+    """
+    ctr = jnp.arange(size, dtype=U32) + U32(offset)
+    return kdf_u32(seed[0], seed[1], ctr)

@@ -1,0 +1,102 @@
+"""Pairwise-mask secure aggregation math (paper §4.1, Bonawitz-style).
+
+Client i in a virtual group of n uploads, instead of its quantized update
+x_i, the masked payload
+
+    y_i = x_i + sum_{v > i} s_{i,v} - sum_{v < i} s_{v,i}      (mod 2^32)
+
+where s_{u,v} is the pair (u,v)'s KDF-expanded mask. Summing all y_i cancels
+every mask term exactly (uint32 wraparound arithmetic is associative and
+commutative), so sum y_i == sum x_i (mod 2^32) bit-exactly — `tests/` proves
+this with hypothesis over arbitrary group sizes and seeds.
+
+Cost: each client expands n-1 masks over the full update vector — the
+O(n^2)-total cost the paper's Virtual Groups exist to cap. This module is the
+pure-jnp reference; ``repro.kernels.mask_gen`` is the Pallas hot-path.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kdf import U32, mask_stream, pair_seed
+
+
+def net_mask(i: int, n: int, round_seed, size: int, offset: int = 0):
+    """Net mask for client i in a VG of n clients: (size,) uint32."""
+    if n == 1:
+        return jnp.zeros((size,), U32)
+
+    others = jnp.array([v for v in range(n) if v != i], U32)
+    i_arr = jnp.full_like(others, i)
+    lo = jnp.minimum(i_arr, others)
+    hi = jnp.maximum(i_arr, others)
+    seeds = jax.vmap(lambda u, v: pair_seed(round_seed, u, v))(lo, hi)
+    masks = jax.vmap(lambda s: mask_stream(s, offset, size))(seeds)
+    # + for pairs where i is the lower index, - (mod 2^32) otherwise
+    sign_pos = (i_arr < others)[:, None]
+    signed = jnp.where(sign_pos, masks, jnp.zeros((), U32) - masks)
+    return jnp.sum(signed, axis=0, dtype=U32)
+
+
+def apply_mask(q, i: int, n: int, round_seed, offset: int = 0):
+    """q: (size,) uint32 quantized update -> masked payload (size,) uint32."""
+    return q + net_mask(i, n, round_seed, q.shape[0], offset)
+
+
+def net_mask_traced(i, vg_id, vg_size: int, round_seed, size: int,
+                    offset: int = 0):
+    """Traced-index variant for in-jit cohorts (launch/fl_step.py).
+
+    i: traced global silo id; vg_id: traced virtual-group id; peers are the
+    ``vg_size`` silos of that VG (global ids vg_id*vg_size + 0..g-1).
+    Returns the net mask (size,) uint32; zero contribution for peer == i.
+    """
+    peers = jnp.asarray(vg_id, U32) * U32(vg_size) + jnp.arange(vg_size,
+                                                                dtype=U32)
+    i = jnp.asarray(i, U32)
+
+    def one(peer):
+        lo = jnp.minimum(i, peer)
+        hi = jnp.maximum(i, peer)
+        seed = pair_seed(round_seed, lo, hi)
+        m = mask_stream(seed, offset, size)
+        signed = jnp.where(i < peer, m, jnp.zeros((), U32) - m)
+        return jnp.where(peer == i, jnp.zeros((), U32), signed)
+
+    return jnp.sum(jax.vmap(one)(peers), axis=0, dtype=U32)
+
+
+def modular_sum(payloads):
+    """Stage-1 VG aggregation: wrapping uint32 sum over the client axis.
+
+    payloads: (n, size) uint32 -> (size,) uint32 == sum of unmasked updates.
+    """
+    return jnp.sum(payloads.astype(U32), axis=0, dtype=U32)
+
+
+@partial(jax.jit, static_argnums=(1,))
+def protect_cohort(qs, vg_size: int, round_seed):
+    """Vectorized whole-cohort masking: one jit, i traced via vmap.
+
+    qs: (n, size) uint32 with n % vg_size == 0 (uniform VGs, protocol order
+    = array order). Returns masked payloads, same shape. This is the
+    cohort-scale path used by the scaling benchmark and the production
+    fl_step (per-leaf variant there)."""
+    n = qs.shape[0]
+    ids = jnp.arange(n, dtype=U32)
+    vgs = ids // U32(vg_size)
+
+    def protect(i, vg, q):
+        return q + net_mask_traced(i, vg, vg_size, round_seed, q.shape[0])
+
+    return jax.vmap(protect)(ids, vgs, qs)
+
+
+def vg_sums(payloads, vg_size: int):
+    """(n, size) -> (n/vg_size, size) wrapping per-VG sums (stage 1)."""
+    n, size = payloads.shape
+    return jnp.sum(payloads.reshape(n // vg_size, vg_size, size),
+                   axis=1, dtype=U32)

@@ -1,0 +1,129 @@
+"""Round-level FL protocol engine: what the Management Service's "task
+orchestrator" role does per iteration (paper §3.1.1), with the privacy
+pipeline of §4 wired in the paper's order:
+
+  client update -> [local DP clip+noise] -> quantize -> pairwise mask
+    -> stage-1 VG modular sum -> stage-2 master combine
+    -> [global DP noise] -> strategy server update
+
+The service personas (selection, auth, task state) live in ``repro.fl``;
+this module is the pure protocol math so it can be tested and reused by both
+the cross-device simulator and the on-pod ``launch/train.py`` path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dp as dp_mod
+from repro.core import secure_agg as sa
+from repro.core.strategies import FedBuff
+from repro.core.virtual_groups import make_virtual_groups
+
+
+@dataclass
+class RoundInfo:
+    round_idx: int
+    n_participants: int
+    n_groups: int
+    metrics: dict = field(default_factory=dict)
+
+
+@dataclass
+class ClientResult:
+    update: Any                  # pseudo-gradient pytree
+    n_samples: int
+    metrics: dict = field(default_factory=dict)
+
+
+def run_sync_round(params, strategy, strategy_state,
+                   client_results: dict,
+                   *, round_idx: int, vg_size: int,
+                   secure_cfg: sa.SecureAggConfig = sa.SecureAggConfig(),
+                   dp_cfg: dp_mod.DPConfig = dp_mod.DPConfig(),
+                   key=None, round_seed=None):
+    """One synchronous FL round over a cohort of client results."""
+    key = key if key is not None else jax.random.PRNGKey(round_idx)
+    if round_seed is None:
+        round_seed = jax.random.key_data(
+            jax.random.fold_in(jax.random.PRNGKey(17), round_idx)
+        ).astype(jnp.uint32)[:2]
+
+    cids = sorted(client_results)
+    updates = {}
+    for j, cid in enumerate(cids):
+        u = client_results[cid].update
+        if dp_cfg.mechanism == "local":
+            u = dp_mod.local_dp(u, dp_cfg, jax.random.fold_in(key, j))
+        elif dp_cfg.mechanism == "global":
+            u, _ = dp_mod.clip_by_global_norm(u, dp_cfg.clip_norm)
+        updates[cid] = u
+
+    plan = make_virtual_groups(cids, vg_size, seed=round_idx)
+    delta = sa.secure_aggregate_round(updates, plan, round_seed, secure_cfg)
+
+    if dp_cfg.mechanism == "global":
+        delta = dp_mod.global_dp(delta, dp_cfg, len(cids),
+                                 jax.random.fold_in(key, 10_000))
+
+    # DGA-style strategies may re-weight using client metrics; the secure
+    # aggregate above is the privacy-preserving uniform mean, so strategies
+    # that need per-client weights blend the (non-private) metric weights at
+    # the interim level: we apply the strategy on the single cohort mean.
+    delta = strategy.combine([delta], [1.0],
+                             [avg_metrics(client_results)])
+    params, strategy_state = strategy.apply(params, strategy_state, delta)
+
+    info = RoundInfo(round_idx, len(cids), len(plan.groups),
+                     metrics=avg_metrics(client_results))
+    return params, strategy_state, info
+
+
+def avg_metrics(client_results: dict) -> dict:
+    keys = set()
+    for r in client_results.values():
+        keys |= set(r.metrics)
+    out = {}
+    for k in keys:
+        vals = [float(r.metrics[k]) for r in client_results.values()
+                if k in r.metrics]
+        if vals:
+            out[k] = sum(vals) / len(vals)
+    return out
+
+
+class AsyncServer:
+    """Papaya-style async loop (paper §4.3): no VG masking (trusted
+    aggregation boundary), staleness-weighted buffer of size K."""
+
+    def __init__(self, params, strategy: FedBuff,
+                 dp_cfg: dp_mod.DPConfig = dp_mod.DPConfig(), seed: int = 0):
+        self.params = params
+        self.strategy = strategy
+        self.state = strategy.init_state(params)
+        self.dp_cfg = dp_cfg
+        self._key = jax.random.PRNGKey(seed)
+        self.n_server_steps = 0
+
+    @property
+    def model_version(self) -> int:
+        return self.state["model_version"]
+
+    def submit(self, result: ClientResult, update_version: int):
+        """Client pushes one pseudo-gradient. Returns True if the buffer
+        drained (server step happened)."""
+        u = result.update
+        if self.dp_cfg.mechanism == "local":
+            self._key, sub = jax.random.split(self._key)
+            u = dp_mod.local_dp(u, self.dp_cfg, sub)
+        full = self.strategy.offer(u, float(result.n_samples),
+                                   update_version, self.model_version)
+        if full:
+            self.params, self.state = self.strategy.drain(self.params,
+                                                          self.state)
+            self.n_server_steps += 1
+            return True
+        return False

@@ -1,0 +1,102 @@
+"""Two-stage secure aggregation (paper §3.1.2–3.1.3, Fig. 2), over pytrees.
+
+Stage 1 (Secure Aggregator, per Virtual Group):
+    each client flattens its update pytree, quantizes it, applies its net
+    pairwise mask, and uploads the masked uint32 payload; the VG's wrapping
+    modular sum is the *interim result* (masks cancel exactly).
+
+Stage 2 (Master Aggregator):
+    interim results are dequantized to mean-updates and combined with the
+    user-defined aggregation logic (a Strategy — FedAvg/FedProx/DGA/...),
+    optionally after global DP noise.
+
+The async path (paper §4.3) skips masking: with a trusted aggregation
+boundary (confidential container / on-pod aggregation) clients upload
+quantized updates directly into a buffer — see ``strategies.FedBuff``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from repro.core import masking
+from repro.core.kdf import U32
+from repro.core.quantize import (DEFAULT_BITS, DEFAULT_CLIP, check_headroom,
+                                 dequantize_sum, quantize)
+
+
+@dataclass(frozen=True)
+class SecureAggConfig:
+    bits: int = DEFAULT_BITS
+    clip: float = DEFAULT_CLIP
+    use_kernels: bool = False   # route mask expansion through Pallas kernels
+
+
+def flatten_update(update_pytree):
+    """-> (flat f32 vector, unflatten fn)."""
+    flat, unflatten = ravel_pytree(update_pytree)
+    return flat.astype(jnp.float32), unflatten
+
+
+def client_protect(update_pytree, idx_in_vg: int, vg_size: int, round_seed,
+                   cfg: SecureAggConfig = SecureAggConfig()):
+    """Client-side: quantize + mask. Returns (payload uint32, unflatten)."""
+    check_headroom(cfg.bits, vg_size)
+    flat, unflatten = flatten_update(update_pytree)
+    q = quantize(flat, cfg.clip, cfg.bits)
+    if cfg.use_kernels:
+        from repro.kernels import ops
+        payload = ops.mask_apply(q, idx_in_vg, vg_size, round_seed)
+    else:
+        payload = masking.apply_mask(q, idx_in_vg, vg_size, round_seed)
+    return payload, unflatten
+
+
+def vg_aggregate(payloads):
+    """Stage 1: (n, size) uint32 masked payloads -> interim (size,) uint32."""
+    return masking.modular_sum(jnp.stack(list(payloads)))
+
+
+def master_aggregate(interims, group_sizes, unflatten,
+                     cfg: SecureAggConfig = SecureAggConfig()):
+    """Stage 2: combine interim VG sums into the cohort-mean update pytree.
+
+    interims: list of (size,) uint32; group_sizes: list of int.
+    """
+    total = jnp.zeros_like(interims[0])
+    n = 0
+    for interim, g in zip(interims, group_sizes):
+        total = (total + interim.astype(U32)).astype(U32)
+        n += g
+    mean_flat = dequantize_sum(total, n, cfg.clip, cfg.bits)
+    return unflatten(mean_flat)
+
+
+def secure_aggregate_round(client_updates, vg_plan, round_seed,
+                           cfg: SecureAggConfig = SecureAggConfig()):
+    """End-to-end reference protocol over a cohort (used by the simulator).
+
+    client_updates: dict client_id -> update pytree (all same structure).
+    Returns the cohort-mean update pytree.
+    """
+    interims, sizes, unflatten = [], [], None
+    for group in vg_plan.groups:
+        payloads = []
+        for idx, cid in enumerate(group.members):
+            payload, unflatten = client_protect(
+                client_updates[cid], idx, len(group.members),
+                _group_seed(round_seed, group.vg_id), cfg)
+            payloads.append(payload)
+        interims.append(vg_aggregate(payloads))
+        sizes.append(len(group.members))
+    return master_aggregate(interims, sizes, unflatten, cfg)
+
+
+def _group_seed(round_seed, vg_id: int):
+    from repro.core.kdf import kdf_u32
+    rs = jnp.asarray(round_seed, U32)
+    return jnp.stack([kdf_u32(rs[0], rs[1], jnp.uint32(vg_id)),
+                      kdf_u32(rs[1], rs[0], jnp.uint32(vg_id ^ 0x5BF03635))])

@@ -1,0 +1,138 @@
+"""Master-aggregation strategies (the paper's "user-defined logic", §3.1.3):
+FedAvg, FedProx, DGA, plus server momentum, and FedBuff for the async path.
+
+A Strategy consumes per-client (or per-VG-mean) pseudo-gradients and emits
+the server model update. Client-side parts (FedProx's proximal term) live in
+``repro.optim.fedprox``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+
+def _tree_scale(t, s):
+    return jax.tree.map(lambda a: a * s, t)
+
+
+def _tree_add(a, b, bs=1.0):
+    return jax.tree.map(lambda x, y: x + bs * y, a, b)
+
+
+def _tree_zeros_like(t):
+    return jax.tree.map(jnp.zeros_like, t)
+
+
+def weighted_mean(updates, weights):
+    """updates: list of pytrees; weights: list of float. -> pytree."""
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.clip(jnp.sum(w), 1e-12)
+    out = _tree_zeros_like(updates[0])
+    for u, wi in zip(updates, list(w)):
+        out = _tree_add(out, u, wi)
+    return out
+
+
+@dataclass
+class FedAvg:
+    """McMahan et al. 2017: sample-count-weighted mean of pseudo-gradients,
+    applied with server learning rate (and optional momentum = FedAvgM)."""
+    server_lr: float = 1.0
+    momentum: float = 0.0
+    name: str = "fedavg"
+
+    def init_state(self, params):
+        return {"m": _tree_zeros_like(params)} if self.momentum else {}
+
+    def combine(self, updates, weights, client_metrics=None):
+        return weighted_mean(updates, weights)
+
+    def apply(self, params, state, delta):
+        if self.momentum:
+            m = _tree_add(_tree_scale(state["m"], self.momentum), delta)
+            state = {"m": m}
+            delta = m
+        return _tree_add(params, delta, self.server_lr), state
+
+
+@dataclass
+class FedProx(FedAvg):
+    """Li et al. 2018: server side == FedAvg; the proximal term
+    mu/2 ||w - w_global||^2 is applied in the client optimizer
+    (repro.optim.fedprox.proximal_sgd). ``mu`` recorded here for the task
+    config."""
+    mu: float = 0.01
+    name: str = "fedprox"
+
+
+@dataclass
+class DGA(FedAvg):
+    """Dynamic Gradient Aggregation (Dimitriadis et al. 2021): re-weight
+    client updates by training-loss-derived softmax weights (clients with
+    lower loss get larger weight), blended with sample counts."""
+    beta: float = 1.0
+    name: str = "dga"
+
+    def combine(self, updates, weights, client_metrics=None):
+        if not client_metrics:
+            return weighted_mean(updates, weights)
+        losses = jnp.asarray([m.get("loss", 0.0) for m in client_metrics],
+                             jnp.float32)
+        dyn = jax.nn.softmax(-self.beta * losses)
+        w = jnp.asarray(weights, jnp.float32) * dyn
+        return weighted_mean(updates, list(w))
+
+
+@dataclass
+class FedBuff:
+    """Papaya-style async buffered aggregation (paper §2, §4.3): the server
+    updates the model after every ``buffer_size`` received pseudo-gradients,
+    discounting by staleness (1 + s)^-0.5. No pairwise masking — the trusted
+    aggregation boundary (confidential container / on-pod) replaces it."""
+    buffer_size: int = 32
+    server_lr: float = 1.0
+    staleness_exponent: float = 0.5
+    name: str = "fedbuff"
+    _buffer: list = field(default_factory=list)
+
+    def init_state(self, params):
+        return {"model_version": 0}
+
+    def staleness_weight(self, update_version: int, current_version: int):
+        s = max(0, current_version - update_version)
+        return (1.0 + s) ** (-self.staleness_exponent)
+
+    def offer(self, update, weight: float, update_version: int,
+              current_version: int):
+        """Add one client update to the buffer. Returns True if full."""
+        w = weight * self.staleness_weight(update_version, current_version)
+        self._buffer.append((update, w))
+        return len(self._buffer) >= self.buffer_size
+
+    def drain(self, params, state):
+        """Apply the buffered aggregate; empties the buffer."""
+        if not self._buffer:
+            return params, state
+        updates, ws = zip(*self._buffer)
+        delta = weighted_mean(list(updates), list(ws))
+        self._buffer = []
+        params = _tree_add(params, delta, self.server_lr)
+        state = dict(state, model_version=state["model_version"] + 1)
+        return params, state
+
+
+STRATEGIES = {
+    "fedavg": FedAvg,
+    "fedavgm": lambda **kw: FedAvg(momentum=kw.pop("momentum", 0.9), **kw),
+    "fedprox": FedProx,
+    "dga": DGA,
+    "fedbuff": FedBuff,
+}
+
+
+def make_strategy(name: str, **kw):
+    if name not in STRATEGIES:
+        raise KeyError(f"unknown strategy {name!r}: {sorted(STRATEGIES)}")
+    return STRATEGIES[name](**kw)

@@ -1,0 +1,6 @@
+from repro.data.federated import (ClientDataAccess, batches, dirichlet_splits,
+                                  equal_splits, take)
+from repro.data.synthetic import lm_batches, lm_dataset, spam_dataset
+
+__all__ = ["ClientDataAccess", "batches", "dirichlet_splits", "equal_splits",
+           "take", "lm_batches", "lm_dataset", "spam_dataset"]

@@ -1,0 +1,71 @@
+"""Federated partitioning: split a dataset across clients.
+
+The paper's spam experiment uses 100 equal random splits with each client
+picking a split at random per round (§5.1) — ``equal_splits`` +
+``ClientDataAccess``. ``dirichlet_splits`` adds the standard non-IID
+label-skew partitioner for heterogeneity studies.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def equal_splits(dataset: dict, n_splits: int, seed: int = 0):
+    """Random permutation -> n equal splits (list of index arrays)."""
+    n = len(next(iter(dataset.values())))
+    rng = np.random.RandomState(seed)
+    perm = rng.permutation(n)
+    return np.array_split(perm, n_splits)
+
+
+def dirichlet_splits(labels: np.ndarray, n_clients: int, alpha: float = 0.5,
+                     seed: int = 0):
+    """Label-skewed non-IID partition (Dirichlet over class proportions)."""
+    rng = np.random.RandomState(seed)
+    classes = np.unique(labels)
+    idx_by_class = {c: rng.permutation(np.where(labels == c)[0])
+                    for c in classes}
+    client_indices = [[] for _ in range(n_clients)]
+    for c in classes:
+        props = rng.dirichlet([alpha] * n_clients)
+        counts = (props * len(idx_by_class[c])).astype(int)
+        counts[-1] = len(idx_by_class[c]) - counts[:-1].sum()
+        start = 0
+        for i, cnt in enumerate(counts):
+            client_indices[i].extend(idx_by_class[c][start:start + cnt])
+            start += cnt
+    return [np.asarray(sorted(ix)) for ix in client_indices]
+
+
+def take(dataset: dict, indices) -> dict:
+    return {k: v[indices] for k, v in dataset.items()}
+
+
+class ClientDataAccess:
+    """Paper §5.1 protocol: 'each client accesses one of the 100 splits at
+    random, and uses 20% of the data in the split to update the model'."""
+
+    def __init__(self, dataset: dict, n_splits: int = 100, frac: float = 0.2,
+                 seed: int = 0):
+        self.dataset = dataset
+        self.splits = equal_splits(dataset, n_splits, seed)
+        self.frac = frac
+        self._rng = np.random.RandomState(seed + 1)
+
+    def sample(self, client_seed: int) -> dict:
+        rng = np.random.RandomState(client_seed)
+        split = self.splits[rng.randint(len(self.splits))]
+        k = max(1, int(len(split) * self.frac))
+        picked = rng.choice(split, size=k, replace=False)
+        return take(self.dataset, picked)
+
+
+def batches(data: dict, batch_size: int, seed: int = 0, drop_last=False):
+    """Single-epoch minibatch iterator over a dict dataset."""
+    n = len(next(iter(data.values())))
+    order = np.random.RandomState(seed).permutation(n)
+    for start in range(0, n, batch_size):
+        idx = order[start:start + batch_size]
+        if drop_last and len(idx) < batch_size:
+            return
+        yield take(data, idx)

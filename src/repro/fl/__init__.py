@@ -1,0 +1,14 @@
+"""Florida service layer: Management/Selection/Authentication services,
+client SDK (paper Fig. 3 API), and the multi-client simulator."""
+from repro.fl.auth import AttestationAuthority, AuthenticationService
+from repro.fl.client import (ConsoleLogger, FederatedLearningClient,
+                             NullLogger, WorkflowDetails,
+                             load_model_snapshot)
+from repro.fl.selection import SelectionService
+from repro.fl.server import ManagementService
+from repro.fl.simulator import (SimClient, SimResult,
+                                make_heterogeneous_clients,
+                                run_async_simulation, run_sync_simulation)
+from repro.fl.task import (SelectionCriteria, TaskConfig, TaskRecord,
+                           TaskStatus)
+from repro.fl.telemetry import MetricsStore

@@ -1,0 +1,62 @@
+"""Authentication Service (paper §3.1.5): device attestation.
+
+Production Florida validates Google Play Integrity verdicts and Huawei
+SysIntegrity responses through the vendor services; here the trusted
+third-party verdict is an HMAC-SHA256-signed token with the same fields and
+the same accept/reject semantics (MEETS_DEVICE_INTEGRITY etc.)."""
+from __future__ import annotations
+
+import hashlib
+import hmac
+import json
+import time
+from dataclasses import dataclass
+
+VALID_VERDICTS = ("MEETS_DEVICE_INTEGRITY", "MEETS_STRONG_INTEGRITY")
+REJECT_VERDICTS = ("MEETS_BASIC_INTEGRITY", "NO_INTEGRITY")
+
+
+def _sign(payload: bytes, key: bytes) -> str:
+    return hmac.new(key, payload, hashlib.sha256).hexdigest()
+
+
+@dataclass
+class AttestationAuthority:
+    """Stands in for the vendor integrity service (issues verdicts)."""
+    key: bytes = b"play-integrity-root-key"
+
+    def issue(self, device_id: str, verdict: str = "MEETS_DEVICE_INTEGRITY",
+              os: str = "android") -> dict:
+        body = {"device_id": device_id, "verdict": verdict, "os": os,
+                "issued_at": time.time()}
+        payload = json.dumps(body, sort_keys=True).encode()
+        return {"body": body, "signature": _sign(payload, self.key)}
+
+
+class AuthenticationService:
+    """Validates attestation certificates before task participation."""
+
+    def __init__(self, authority_key: bytes = b"play-integrity-root-key",
+                 max_age_s: float = 3600.0):
+        self.key = authority_key
+        self.max_age_s = max_age_s
+        self.rejections = 0
+
+    def verify(self, certificate: dict) -> bool:
+        try:
+            body = certificate["body"]
+            payload = json.dumps(body, sort_keys=True).encode()
+            if not hmac.compare_digest(_sign(payload, self.key),
+                                       certificate["signature"]):
+                self.rejections += 1
+                return False
+            if body["verdict"] not in VALID_VERDICTS:
+                self.rejections += 1
+                return False
+            if time.time() - body["issued_at"] > self.max_age_s:
+                self.rejections += 1
+                return False
+            return True
+        except (KeyError, TypeError):
+            self.rejections += 1
+            return False

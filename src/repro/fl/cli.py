@@ -1,0 +1,140 @@
+"""Florida CLI (paper §3.3: "a command-line interface for scripting service
+and workflow management" with the same functionality as the web UI).
+
+Because the container runs everything in-process, the CLI operates on a
+*service session file*: commands construct/load a ManagementService whose
+task state persists between invocations via the checkpoint module.
+
+    PYTHONPATH=src python -m repro.fl.cli create --task-name spam \\
+        --app-name spam-app --workflow train --clients-per-round 8 \\
+        --rounds 5 [--dp local --noise 1.0 --clip 0.5] [--mode async]
+    PYTHONPATH=src python -m repro.fl.cli list
+    PYTHONPATH=src python -m repro.fl.cli run <task_id> --clients 16
+    PYTHONPATH=src python -m repro.fl.cli show <task_id>
+    PYTHONPATH=src python -m repro.fl.cli pause|resume|cancel <task_id>
+    PYTHONPATH=src python -m repro.fl.cli metrics <task_id>
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import pickle
+import sys
+
+from repro.core.dp import DPConfig
+from repro.fl.dashboard import render_metrics, render_task_list, render_task_view
+from repro.fl.server import ManagementService
+from repro.fl.task import TaskConfig
+
+DEFAULT_SESSION = os.environ.get("FLORIDA_SESSION",
+                                 os.path.expanduser("~/.florida-session.pkl"))
+
+
+def load_service(path=DEFAULT_SESSION) -> ManagementService:
+    if os.path.exists(path):
+        with open(path, "rb") as f:
+            return pickle.load(f)
+    return ManagementService()
+
+
+def save_service(svc, path=DEFAULT_SESSION):
+    with open(path, "wb") as f:
+        pickle.dump(svc, f)
+
+
+def cmd_create(svc, args):
+    import jax
+    from repro.configs import get_config
+    from repro.models import classifier_init, init_params
+    cfg = get_config("bert-tiny-spam").replace(vocab_size=1024, d_model=64,
+                                               d_ff=128)
+    key = jax.random.PRNGKey(args.seed)
+    model = {"trunk": init_params(cfg, key),
+             "head": classifier_init(cfg, jax.random.fold_in(key, 1))}
+    dp = DPConfig(mechanism=args.dp, clip_norm=args.clip,
+                  noise_multiplier=args.noise) if args.dp != "off" \
+        else DPConfig()
+    tc = TaskConfig(task_name=args.task_name, app_name=args.app_name,
+                    workflow_name=args.workflow,
+                    clients_per_round=args.clients_per_round,
+                    n_rounds=args.rounds, strategy=args.strategy,
+                    mode=args.mode, vg_size=args.vg_size, dp=dp)
+    tid = svc.create_task(tc, model, user=args.user)
+    print(f"created task {tid} ({args.task_name})")
+    return tid
+
+
+def cmd_run(svc, args):
+    """Drive a task with simulated SDK clients (the CLI's test harness)."""
+    sys.path.insert(0, os.getcwd())
+    from benchmarks.common import SpamWorld
+    from repro.fl.simulator import (make_heterogeneous_clients,
+                                    run_async_simulation, run_sync_simulation)
+    task = svc.get_task(args.task_id)
+    world = SpamWorld(vocab=1024, d_model=64, n_train=3000, n_splits=20,
+                      frac=0.5)
+    world.model0 = task.model  # continue from the task's current snapshot
+    clients = make_heterogeneous_clients(args.clients, world.make_trainer)
+    runner = (run_async_simulation if task.config.mode == "async"
+              else run_sync_simulation)
+    res = runner(svc, args.task_id, clients, eval_fn=world.test_accuracy)
+    accs = [h.get("eval_accuracy") for h in res.metrics_history]
+    print(f"task {args.task_id}: {len(res.round_durations)} iterations, "
+          f"acc {accs[0]:.3f} -> {accs[-1]:.3f}" if accs else "no rounds ran")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(prog="florida")
+    ap.add_argument("--session", default=DEFAULT_SESSION)
+    ap.add_argument("--user", default="default-user")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    c = sub.add_parser("create")
+    c.add_argument("--task-name", required=True)
+    c.add_argument("--app-name", required=True)
+    c.add_argument("--workflow", required=True)
+    c.add_argument("--clients-per-round", type=int, default=8)
+    c.add_argument("--rounds", type=int, default=5)
+    c.add_argument("--strategy", default="fedavg",
+                   choices=["fedavg", "fedavgm", "fedprox", "dga"])
+    c.add_argument("--mode", default="sync", choices=["sync", "async"])
+    c.add_argument("--vg-size", type=int, default=4)
+    c.add_argument("--dp", default="off", choices=["off", "local", "global"])
+    c.add_argument("--clip", type=float, default=0.5)
+    c.add_argument("--noise", type=float, default=1.0)
+    c.add_argument("--seed", type=int, default=0)
+
+    sub.add_parser("list")
+    for name in ("show", "pause", "resume", "cancel", "metrics"):
+        p = sub.add_parser(name)
+        p.add_argument("task_id", type=int)
+    r = sub.add_parser("run")
+    r.add_argument("task_id", type=int)
+    r.add_argument("--clients", type=int, default=16)
+
+    args = ap.parse_args(argv)
+    svc = load_service(args.session)
+    if args.cmd == "create":
+        cmd_create(svc, args)
+    elif args.cmd == "list":
+        print(render_task_list(svc))
+    elif args.cmd == "show":
+        print(render_task_view(svc, args.task_id))
+    elif args.cmd == "metrics":
+        print(render_metrics(svc, args.task_id))
+    elif args.cmd == "pause":
+        svc.pause_task(args.task_id, user=args.user)
+        print(f"task {args.task_id} paused")
+    elif args.cmd == "resume":
+        svc.resume_task(args.task_id, user=args.user)
+        print(f"task {args.task_id} resumed")
+    elif args.cmd == "cancel":
+        svc.cancel_task(args.task_id, user=args.user)
+        print(f"task {args.task_id} cancelled")
+    elif args.cmd == "run":
+        cmd_run(svc, args)
+    save_service(svc, args.session)
+
+
+if __name__ == "__main__":
+    main()

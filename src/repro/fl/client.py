@@ -1,0 +1,136 @@
+"""Client SDK mirroring the paper's Fig. 3 Python API:
+
+    def trainer(model: bytes, iteration_id: int):
+        ...train locally, return the pseudo-gradient...
+
+    work = WorkflowDetails(app_name=..., workflow_name=..., trainer=trainer)
+    client = FederatedLearningClient.get_instance()
+    client.execute(endpoint=service, workflows=[work], logger=ConsoleLogger())
+
+``endpoint`` is the in-process ManagementService (production: gRPC/REST URL —
+the ``isEndpointHttp1`` flag is accepted for interface fidelity and ignored).
+The trainer receives the *serialized* model snapshot (bytes), exactly as in
+the paper, and returns an update pytree or flat float list.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.checkpoint import deserialize_pytree
+from repro.fl.auth import AttestationAuthority
+
+
+class ConsoleLogger:
+    def log(self, msg):
+        print(f"[florida-client] {msg}")
+
+
+class NullLogger:
+    def log(self, msg):
+        pass
+
+
+@dataclass
+class WorkflowDetails:
+    app_name: str
+    workflow_name: str
+    trainer: Callable           # trainer(model_bytes, iteration_id) -> update
+    selector: Optional[Callable] = None   # optional local eligibility gate
+
+
+@dataclass
+class FederatedLearningClient:
+    client_id: str = "client-0"
+    device_info: dict = field(default_factory=lambda: {
+        "os": "linux", "n_samples": 100, "battery": 1.0})
+    _authority: AttestationAuthority = field(
+        default_factory=AttestationAuthority)
+
+    _instance = None
+
+    @classmethod
+    def get_instance(cls, client_id: str = "client-0", **kw):
+        # paper API is a singleton accessor; we key by client id so the
+        # simulator can hold many
+        return cls(client_id=client_id, **kw)
+
+    def execute(self, endpoint, workflows, *, cert_path: str | None = None,
+                isEndpointHttp1: bool = False, logger=None, event=None,
+                max_iterations: int | None = None):
+        """Participate in matching tasks until they complete.
+
+        Returns the number of updates contributed.
+        """
+        logger = logger or NullLogger()
+        contributed = 0
+        for wf in workflows:
+            tasks = endpoint.list_tasks(wf.app_name, wf.workflow_name)
+            for task in tasks:
+                cert = self._authority.issue(self.client_id,
+                                             os=self.device_info.get(
+                                                 "os", "linux"))
+                ok = endpoint.register_client(task.task_id, self.client_id,
+                                              self.device_info, cert)
+                if not ok:
+                    logger.log(f"registration rejected for {task.task_id}")
+                    continue
+                contributed += self._participate(endpoint, task, wf, logger,
+                                                 max_iterations)
+        return contributed
+
+    def _participate(self, endpoint, task, wf, logger, max_iterations):
+        n = 0
+        while task.status.value == "running":
+            if max_iterations is not None and n >= max_iterations:
+                break
+            round_idx, cohort = endpoint.begin_round(task.task_id)
+            if self.client_id not in cohort:
+                break
+            n += self.run_assignment(endpoint, task.task_id, wf,
+                                     round_idx, logger)
+        return n
+
+    def run_assignment(self, endpoint, task_id, wf, iteration_id, logger=None):
+        """Fetch snapshot, run the user trainer, submit the update."""
+        if wf.selector is not None and not wf.selector(self.device_info):
+            return 0
+        blob = endpoint.model_snapshot(task_id)
+        t0 = time.perf_counter()
+        out = wf.trainer(blob, iteration_id)
+        duration = time.perf_counter() - t0
+        update, n_samples, metrics = _normalize_trainer_output(out)
+        metrics.setdefault("client_train_s", duration)
+        endpoint.submit_update(task_id, self.client_id, update, n_samples,
+                               metrics)
+        if logger:
+            logger.log(f"{self.client_id} round {iteration_id}: "
+                       f"{n_samples} samples in {duration:.3f}s")
+        return 1
+
+
+def _normalize_trainer_output(out):
+    """Trainer may return update | (update, n) | (update, n, metrics);
+    update may be a pytree or a flat float list (paper Fig. 3 returns a
+    list of floats)."""
+    n_samples, metrics = 1, {}
+    if isinstance(out, tuple):
+        if len(out) == 3:
+            update, n_samples, metrics = out
+        elif len(out) == 2:
+            update, n_samples = out
+        else:
+            update = out[0]
+    else:
+        update = out
+    if isinstance(update, (list,)):
+        update = np.asarray(update, np.float32)
+    return update, int(n_samples), dict(metrics)
+
+
+def load_model_snapshot(blob: bytes):
+    """Helper for trainers: deserialize the model bytes into a pytree."""
+    return deserialize_pytree(blob)

@@ -1,0 +1,67 @@
+"""Text renderings of the Florida dashboard views (paper Figs. 6-9):
+task management list, task view with round history, and metric plots
+(unicode sparkline charts standing in for the web UI)."""
+from __future__ import annotations
+
+BLOCKS = " ▁▂▃▄▅▆▇█"
+
+
+def sparkline(values, width=48):
+    if not values:
+        return "(no data)"
+    vals = values[-width:]
+    lo, hi = min(vals), max(vals)
+    rng = (hi - lo) or 1.0
+    return "".join(BLOCKS[1 + int((v - lo) / rng * (len(BLOCKS) - 2))]
+                   for v in vals)
+
+
+def render_task_list(svc) -> str:
+    rows = [f"{'id':>4} {'task':<18} {'status':<10} {'mode':<6} "
+            f"{'round':>5} {'clients':>7}"]
+    rows.append("-" * len(rows[0]))
+    for t in svc.list_tasks():
+        registered = len(svc.selection.registered(t))
+        rows.append(f"{t.task_id:>4} {t.config.task_name:<18} "
+                    f"{t.status.value:<10} {t.config.mode:<6} "
+                    f"{t.round_idx:>2}/{t.config.n_rounds:<2} "
+                    f"{registered:>7}")
+    return "\n".join(rows)
+
+
+def render_task_view(svc, task_id: int) -> str:
+    t = svc.get_task(task_id)
+    c = t.config
+    lines = [
+        f"Task {t.task_id}: {c.task_name}   [{t.status.value}]",
+        f"  app={c.app_name} workflow={c.workflow_name} mode={c.mode}",
+        f"  rounds: {t.round_idx}/{c.n_rounds}   "
+        f"clients/round: {c.clients_per_round}   vg_size: {c.vg_size}",
+        f"  strategy: {c.strategy}   dp: {c.dp.mechanism}"
+        + (f" (clip={c.dp.clip_norm}, z={c.dp.noise_multiplier})"
+           if c.dp.mechanism != "off" else ""),
+    ]
+    eps = svc.epsilon(task_id)
+    if eps is not None:
+        lines.append(f"  privacy spent: epsilon={eps:.2f} "
+                     f"at delta={c.dp.delta}")
+    if t.history:
+        lines.append("  round history:")
+        for h in t.history[-8:]:
+            extras = " ".join(f"{k}={v:.4g}" for k, v in h.items()
+                              if k != "round" and isinstance(v, float))
+            lines.append(f"    round {h['round']:>3}: {extras}")
+    return "\n".join(lines)
+
+
+def render_metrics(svc, task_id: int) -> str:
+    """Fig. 8/9 analogue: per-metric sparkline series."""
+    rows = [f"metrics for task {task_id}:"]
+    metrics = sorted({r["metric"] for r in svc.metrics._rows[task_id]})
+    if not metrics:
+        return rows[0] + " (none)"
+    for m in metrics:
+        rounds, vals = svc.metrics.series(task_id, m)
+        rows.append(f"  {m:<18} {sparkline(vals)}  "
+                    f"last={vals[-1]:.4g} (n={len(vals)})")
+    return "\n".join(rows)

@@ -1,0 +1,69 @@
+"""Selection Service (paper §3.1.4): advertises tasks, registers clients
+that meet the criteria, randomly selects the round cohort, and tracks
+per-participant training status."""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+
+from repro.fl.auth import AuthenticationService
+from repro.fl.task import TaskRecord
+
+
+@dataclass
+class Registration:
+    client_id: str
+    device_info: dict
+    status: str = "registered"   # registered | selected | training | done | dropped
+
+
+class SelectionService:
+    def __init__(self, auth: AuthenticationService | None = None, seed=0):
+        self.auth = auth or AuthenticationService()
+        self._rng = random.Random(seed)
+        # task_id -> {client_id -> Registration}
+        self._registrations: dict = {}
+
+    # -- client side -------------------------------------------------------
+    def advertise(self, tasks: list[TaskRecord], app_name: str,
+                  workflow_name: str) -> list[TaskRecord]:
+        """Which running tasks match this app/workflow?"""
+        return [t for t in tasks
+                if t.config.app_name == app_name
+                and t.config.workflow_name == workflow_name
+                and t.status.value in ("created", "running")]
+
+    def register(self, task: TaskRecord, client_id: str, device_info: dict,
+                 certificate: dict | None = None) -> bool:
+        crit = task.config.selection
+        if crit.require_attestation:
+            if certificate is None or not self.auth.verify(certificate):
+                return False
+        if not crit.matches(device_info):
+            return False
+        self._registrations.setdefault(task.task_id, {})[client_id] = \
+            Registration(client_id, device_info)
+        return True
+
+    # -- server side -------------------------------------------------------
+    def registered(self, task: TaskRecord) -> list[str]:
+        return sorted(self._registrations.get(task.task_id, {}))
+
+    def ready(self, task: TaskRecord) -> bool:
+        return len(self.registered(task)) >= task.config.clients_per_round
+
+    def select_cohort(self, task: TaskRecord) -> list[str]:
+        """Random subset of registered participants, evenly spreading load."""
+        pool = self.registered(task)
+        k = min(task.config.clients_per_round, len(pool))
+        cohort = self._rng.sample(pool, k)
+        regs = self._registrations[task.task_id]
+        for cid in cohort:
+            regs[cid].status = "selected"
+        return sorted(cohort)
+
+    def mark(self, task: TaskRecord, client_id: str, status: str):
+        self._registrations[task.task_id][client_id].status = status
+
+    def drop(self, task: TaskRecord, client_id: str):
+        self.mark(task, client_id, "dropped")

@@ -1,0 +1,180 @@
+"""Management Service (paper §3.1.1): the user-interface API (create /
+manage / monitor tasks) and the task orchestrator (advertise to Selection,
+drive Secure/Master aggregation, track progress).
+
+Task state is an in-process store (production: Redis); the aggregation math
+is ``repro.core`` — this layer only sequences it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dp as dp_mod
+from repro.core.orchestrator import AsyncServer, ClientResult, run_sync_round
+from repro.core.strategies import FedBuff, make_strategy
+from repro.fl.auth import AuthenticationService
+from repro.fl.selection import SelectionService
+from repro.fl.task import TaskConfig, TaskRecord, TaskStatus
+from repro.fl.telemetry import MetricsStore
+from repro.checkpoint import deserialize_pytree, serialize_pytree
+
+
+class PermissionError_(Exception):
+    pass
+
+
+@dataclass
+class _RoundCollector:
+    round_idx: int
+    cohort: list
+    results: dict = field(default_factory=dict)
+
+    def complete(self):
+        return set(self.results) >= set(self.cohort)
+
+
+class ManagementService:
+    def __init__(self, seed: int = 0):
+        self.auth = AuthenticationService()
+        self.selection = SelectionService(self.auth, seed=seed)
+        self.metrics = MetricsStore()
+        self._tasks: dict[int, TaskRecord] = {}
+        self._strategies: dict[int, Any] = {}
+        self._strategy_state: dict[int, Any] = {}
+        self._collectors: dict[int, _RoundCollector] = {}
+        self._async: dict[int, AsyncServer] = {}
+        self._accountants: dict[int, dp_mod.RdpAccountant] = {}
+
+    # ------------------------------------------------------------------
+    # user-interface API (dashboard / CLI)
+    # ------------------------------------------------------------------
+
+    def create_task(self, config: TaskConfig, initial_model,
+                    user: str = "default-user") -> int:
+        config.owner = user
+        rec = TaskRecord(config=config, model=initial_model)
+        self._tasks[rec.task_id] = rec
+        kw = dict(config.strategy_kwargs)
+        if config.mode == "async":
+            strategy = FedBuff(buffer_size=config.buffer_size, **kw)
+            self._async[rec.task_id] = AsyncServer(
+                initial_model, strategy, config.dp)
+        else:
+            strategy = make_strategy(config.strategy, **kw)
+            self._strategy_state[rec.task_id] = strategy.init_state(
+                initial_model)
+        self._strategies[rec.task_id] = strategy
+        if config.dp.mechanism != "off":
+            self._accountants[rec.task_id] = dp_mod.RdpAccountant(
+                config.dp, sample_rate=1.0)  # rate set per round below
+        rec.status = TaskStatus.RUNNING
+        return rec.task_id
+
+    def get_task(self, task_id: int) -> TaskRecord:
+        return self._tasks[task_id]
+
+    def list_tasks(self, app_name=None, workflow_name=None):
+        tasks = list(self._tasks.values())
+        if app_name is not None:
+            tasks = [t for t in tasks if t.config.app_name == app_name]
+        if workflow_name is not None:
+            tasks = [t for t in tasks
+                     if t.config.workflow_name == workflow_name]
+        return tasks
+
+    def _check_perm(self, task_id: int, user: str):
+        if not self._tasks[task_id].can_manage(user):
+            raise PermissionError_(f"user {user!r} cannot manage {task_id}")
+
+    def pause_task(self, task_id: int, user="default-user"):
+        self._check_perm(task_id, user)
+        self._tasks[task_id].status = TaskStatus.PAUSED
+
+    def resume_task(self, task_id: int, user="default-user"):
+        self._check_perm(task_id, user)
+        self._tasks[task_id].status = TaskStatus.RUNNING
+
+    def cancel_task(self, task_id: int, user="default-user"):
+        self._check_perm(task_id, user)
+        self._tasks[task_id].status = TaskStatus.CANCELLED
+
+    def epsilon(self, task_id: int):
+        acc = self._accountants.get(task_id)
+        return acc.epsilon() if acc else None
+
+    # ------------------------------------------------------------------
+    # client-facing API (via the SDK)
+    # ------------------------------------------------------------------
+
+    def register_client(self, task_id: int, client_id: str, device_info: dict,
+                        certificate=None) -> bool:
+        return self.selection.register(self._tasks[task_id], client_id,
+                                       device_info, certificate)
+
+    def model_snapshot(self, task_id: int) -> bytes:
+        return serialize_pytree(self._tasks[task_id].model)
+
+    def submit_update(self, task_id: int, client_id: str, update,
+                      n_samples: int, metrics=None) -> bool:
+        """Returns True if this submission completed a server step."""
+        rec = self._tasks[task_id]
+        if rec.status is not TaskStatus.RUNNING:
+            return False
+        result = ClientResult(update=update, n_samples=n_samples,
+                              metrics=metrics or {})
+        if rec.config.mode == "async":
+            server = self._async[task_id]
+            stepped = server.submit(result, update_version=rec.round_idx)
+            if stepped:
+                rec.model = server.params
+                rec.round_idx += 1
+                self._finish_round(rec, {"n": server.strategy.buffer_size})
+            return stepped
+        coll = self._collectors.get(task_id)
+        if coll is None or client_id not in coll.cohort:
+            return False
+        coll.results[client_id] = result
+        if coll.complete():
+            self._run_sync_aggregation(rec, coll)
+            return True
+        return False
+
+    # ------------------------------------------------------------------
+    # orchestration
+    # ------------------------------------------------------------------
+
+    def begin_round(self, task_id: int):
+        """Select the cohort for the next round. -> (round_idx, cohort)."""
+        rec = self._tasks[task_id]
+        if rec.status is not TaskStatus.RUNNING:
+            return rec.round_idx, []
+        cohort = self.selection.select_cohort(rec)
+        self._collectors[task_id] = _RoundCollector(rec.round_idx, cohort)
+        return rec.round_idx, cohort
+
+    def _run_sync_aggregation(self, rec: TaskRecord, coll: _RoundCollector):
+        strategy = self._strategies[rec.task_id]
+        state = self._strategy_state[rec.task_id]
+        rec.model, state, info = run_sync_round(
+            rec.model, strategy, state, coll.results,
+            round_idx=coll.round_idx, vg_size=rec.config.vg_size,
+            secure_cfg=rec.config.secure_agg, dp_cfg=rec.config.dp)
+        self._strategy_state[rec.task_id] = state
+        rec.round_idx += 1
+        self._finish_round(rec, dict(info.metrics, n=info.n_participants,
+                                     n_groups=info.n_groups))
+
+    def _finish_round(self, rec: TaskRecord, metrics: dict):
+        rec.history.append({"round": rec.round_idx, **metrics})
+        self.metrics.log(rec.task_id, rec.round_idx, **metrics)
+        acc = self._accountants.get(rec.task_id)
+        if acc is not None:
+            pool = max(1, len(self.selection.registered(rec)))
+            acc.q = min(1.0, rec.config.clients_per_round / pool)
+            acc.step()
+        if rec.round_idx >= rec.config.n_rounds:
+            rec.status = TaskStatus.COMPLETED

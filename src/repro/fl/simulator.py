@@ -1,0 +1,155 @@
+"""Multi-client simulation harness (the paper's AzureML simulator analogue,
+§5/Fig. 10): runs many SDK clients against an in-process ManagementService
+under a *virtual clock* with heterogeneous client speeds, producing the
+per-iteration duration measurements of Fig. 11 (center/right).
+
+Sync mode: round duration = slowest selected client (barrier) + server agg.
+Async mode: an event queue; the server steps whenever the FedBuff buffer
+fills, so stragglers never block a round — the paper's measured speedup.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+from repro.fl.client import FederatedLearningClient, WorkflowDetails, \
+    _normalize_trainer_output
+from repro.fl.server import ManagementService
+from repro.fl.task import TaskConfig
+
+
+@dataclass
+class SimClient:
+    client_id: str
+    trainer: Callable                   # trainer(model_bytes, round) -> update
+    speed: float = 1.0                  # relative compute speed
+    base_train_s: float = 1.0           # nominal seconds per local update
+    device_info: dict = field(default_factory=lambda: {
+        "os": "linux", "n_samples": 100, "battery": 1.0})
+
+    def duration(self, rng) -> float:
+        # log-normal jitter around base/speed: heterogeneous device model
+        return float(self.base_train_s / self.speed *
+                     rng.lognormal(mean=0.0, sigma=0.25))
+
+
+@dataclass
+class SimResult:
+    round_durations: list
+    metrics_history: list
+    total_time: float
+    n_server_steps: int
+
+
+def run_sync_simulation(service: ManagementService, task_id: int,
+                        clients: dict[str, SimClient],
+                        server_agg_s: float = 0.05, seed: int = 0,
+                        eval_fn: Callable | None = None) -> SimResult:
+    """Drive a sync task to completion under the virtual clock."""
+    rng = np.random.RandomState(seed)
+    task = service.get_task(task_id)
+    wf_by_cid = {}
+    for cid, sc in clients.items():
+        sdk = FederatedLearningClient.get_instance(cid,
+                                                   device_info=sc.device_info)
+        cert = sdk._authority.issue(cid, os=sc.device_info.get("os", "linux"))
+        assert service.register_client(task_id, cid, sc.device_info, cert), cid
+        wf_by_cid[cid] = (sdk, WorkflowDetails(task.config.app_name,
+                                               task.config.workflow_name,
+                                               sc.trainer))
+
+    durations, history, clock = [], [], 0.0
+    while task.status.value == "running":
+        round_idx, cohort = service.begin_round(task_id)
+        if not cohort:
+            break
+        blob = service.model_snapshot(task_id)
+        round_wall = 0.0
+        for cid in cohort:
+            sc = clients[cid]
+            out = sc.trainer(blob, round_idx)
+            update, n_samples, metrics = _normalize_trainer_output(out)
+            service.submit_update(task_id, cid, update, n_samples, metrics)
+            round_wall = max(round_wall, sc.duration(rng))  # barrier
+        round_wall += server_agg_s
+        clock += round_wall
+        durations.append(round_wall)
+        row = dict(task.history[-1]) if task.history else {}
+        if eval_fn is not None:
+            row["eval_accuracy"] = float(eval_fn(task.model))
+            service.metrics.log(task_id, round_idx + 1,
+                                eval_accuracy=row["eval_accuracy"],
+                                round_duration_s=round_wall)
+        history.append(row)
+    return SimResult(durations, history, clock, len(durations))
+
+
+def run_async_simulation(service: ManagementService, task_id: int,
+                         clients: dict[str, SimClient],
+                         server_agg_s: float = 0.05, seed: int = 0,
+                         eval_fn: Callable | None = None) -> SimResult:
+    """Event-driven async run: each client trains continuously; the server
+    steps whenever the buffer fills (no barrier — stragglers contribute
+    stale updates, discounted by FedBuff)."""
+    rng = np.random.RandomState(seed)
+    task = service.get_task(task_id)
+    for cid, sc in clients.items():
+        sdk = FederatedLearningClient.get_instance(cid,
+                                                   device_info=sc.device_info)
+        cert = sdk._authority.issue(cid, os=sc.device_info.get("os", "linux"))
+        assert service.register_client(task_id, cid, sc.device_info, cert)
+
+    # event queue: (finish_time, seq, cid, model_version_at_start)
+    q: list = []
+    seq = 0
+    for cid, sc in clients.items():
+        heapq.heappush(q, (sc.duration(rng), seq, cid, 0))
+        seq += 1
+    snapshots = {0: service.model_snapshot(task_id)}
+    durations, history = [], []
+    last_step_t = 0.0
+    clock = 0.0
+    while q and task.status.value == "running":
+        clock, _, cid, version = heapq.heappop(q)
+        sc = clients[cid]
+        blob = snapshots.get(version) or service.model_snapshot(task_id)
+        out = sc.trainer(blob, version)
+        update, n_samples, metrics = _normalize_trainer_output(out)
+        stepped = service.submit_update(task_id, cid, update, n_samples,
+                                        metrics)
+        if stepped:
+            clock += server_agg_s
+            durations.append(clock - last_step_t)
+            last_step_t = clock
+            snapshots = {task.round_idx: service.model_snapshot(task_id)}
+            row = {}
+            if eval_fn is not None:
+                row["eval_accuracy"] = float(eval_fn(task.model))
+                service.metrics.log(task_id, task.round_idx,
+                                    eval_accuracy=row["eval_accuracy"],
+                                    round_duration_s=durations[-1])
+            history.append(row)
+        if task.status.value == "running":
+            heapq.heappush(q, (clock + sc.duration(rng), seq, cid,
+                               task.round_idx))
+            seq += 1
+    return SimResult(durations, history, clock, len(durations))
+
+
+def make_heterogeneous_clients(n: int, trainer_factory, seed: int = 0,
+                               base_train_s: float = 1.0,
+                               straggler_frac: float = 0.1):
+    """n clients with log-normal speeds; ``straggler_frac`` get 4x slower."""
+    rng = np.random.RandomState(seed)
+    clients = {}
+    for i in range(n):
+        speed = float(rng.lognormal(0.0, 0.3))
+        if rng.rand() < straggler_frac:
+            speed /= 4.0
+        cid = f"client-{i:04d}"
+        clients[cid] = SimClient(cid, trainer_factory(i), speed=speed,
+                                 base_train_s=base_train_s)
+    return clients

@@ -1,0 +1,83 @@
+"""FL task definitions (paper §3.3.1): the fields of the task-creation
+interface — task/app/workflow names, clients-per-round, rounds, aggregation
+logic, privacy config, selection criteria, permissions."""
+from __future__ import annotations
+
+import enum
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+from repro.core.dp import DPConfig
+from repro.core.secure_agg import SecureAggConfig
+
+
+class TaskStatus(enum.Enum):
+    CREATED = "created"
+    RUNNING = "running"
+    PAUSED = "paused"
+    COMPLETED = "completed"
+    CANCELLED = "cancelled"
+    FAILED = "failed"
+
+
+@dataclass
+class SelectionCriteria:
+    """Device-participation requirements (paper §3.1.4/§3.3.1)."""
+    allowed_os: tuple = ("android", "ios", "windows", "linux", "macos")
+    min_samples: int = 1
+    min_battery: float = 0.2
+    require_attestation: bool = True
+    custom: Optional[Callable[[dict], bool]] = None
+
+    def matches(self, device_info: dict) -> bool:
+        if device_info.get("os", "linux") not in self.allowed_os:
+            return False
+        if device_info.get("n_samples", 0) < self.min_samples:
+            return False
+        if device_info.get("battery", 1.0) < self.min_battery:
+            return False
+        if self.custom and not self.custom(device_info):
+            return False
+        return True
+
+
+@dataclass
+class TaskConfig:
+    task_name: str
+    app_name: str
+    workflow_name: str
+    clients_per_round: int
+    n_rounds: int
+    # user-defined master aggregation logic: a strategy name (the paper also
+    # accepts a python script / native executable — same role)
+    strategy: str = "fedavg"
+    strategy_kwargs: dict = field(default_factory=dict)
+    mode: str = "sync"                      # sync | async
+    buffer_size: int = 32                   # async: FedBuff K
+    vg_size: int = 8                        # secure-agg virtual group size
+    secure_agg: SecureAggConfig = field(default_factory=SecureAggConfig)
+    dp: DPConfig = field(default_factory=DPConfig)
+    selection: SelectionCriteria = field(default_factory=SelectionCriteria)
+    eval_interval: int = 1
+    round_timeout_s: float = 600.0
+    permissions: tuple = ()                 # user ids allowed to manage
+    owner: str = "default-user"
+
+
+_task_counter = itertools.count(1)
+
+
+@dataclass
+class TaskRecord:
+    config: TaskConfig
+    model: Any                              # current global model pytree
+    task_id: int = field(default_factory=lambda: next(_task_counter))
+    status: TaskStatus = TaskStatus.CREATED
+    round_idx: int = 0
+    created_at: float = field(default_factory=time.time)
+    history: list = field(default_factory=list)   # RoundInfo-like dicts
+
+    def can_manage(self, user: str) -> bool:
+        return user == self.config.owner or user in self.config.permissions

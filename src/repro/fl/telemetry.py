@@ -1,0 +1,31 @@
+"""Metrics store backing the Florida dashboard / task view (paper §3.3):
+per-round training metrics, evaluation metrics, and run-time performance."""
+from __future__ import annotations
+
+import json
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+
+@dataclass
+class MetricsStore:
+    # task_id -> list of {"round": i, "metric": name, "value": v, ...}
+    _rows: dict = field(default_factory=lambda: defaultdict(list))
+
+    def log(self, task_id: int, round_idx: int, **metrics):
+        for k, v in metrics.items():
+            self._rows[task_id].append(
+                {"round": round_idx, "metric": k, "value": float(v)})
+
+    def series(self, task_id: int, metric: str):
+        """-> (rounds, values) for dashboard plots."""
+        rows = [r for r in self._rows[task_id] if r["metric"] == metric]
+        rows.sort(key=lambda r: r["round"])
+        return ([r["round"] for r in rows], [r["value"] for r in rows])
+
+    def latest(self, task_id: int, metric: str, default=None):
+        _, vals = self.series(task_id, metric)
+        return vals[-1] if vals else default
+
+    def to_json(self, task_id: int) -> str:
+        return json.dumps(self._rows[task_id])

@@ -1,0 +1,45 @@
+"""Shared Pallas kernel helpers: tiling geometry + in-kernel KDF rounds.
+
+TPU geometry: lanes are 128-wide, the VPU operates on (8, 128) uint32 tiles,
+so every kernel here works on payloads reshaped to (rows, 128) with row
+blocks that are multiples of 8. ``pad_to_tiles`` / ``unpad`` handle arbitrary
+flat payload sizes at the ops.py boundary.
+
+The in-kernel ``kdf_u32`` is bit-identical to ``repro.core.kdf.kdf_u32``
+(pure uint32 ARX ops — the same jnp code runs inside the kernel body).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kdf import kdf_u32  # bit-identical inside kernel bodies
+
+LANES = 128
+ROW_BLOCK = 256        # (256, 128) uint32 = 128 KiB per operand block in VMEM
+
+
+def interpret_mode() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def pad_to_tiles(flat, block_rows=ROW_BLOCK):
+    """flat (N,) -> (rows, 128) with rows % block_rows == 0. Returns
+    (tiled, original_n)."""
+    n = flat.shape[0]
+    per_block = block_rows * LANES
+    padded = (n + per_block - 1) // per_block * per_block
+    flat = jnp.pad(flat, (0, padded - n))
+    return flat.reshape(-1, LANES), n
+
+
+def unpad(tiled, n):
+    return tiled.reshape(-1)[:n]
+
+
+def global_index(pid, block_rows=ROW_BLOCK):
+    """uint32 flat element indices for grid cell ``pid``: (block_rows, 128)."""
+    base = (pid * block_rows * LANES).astype(jnp.uint32)
+    row = jax.lax.broadcasted_iota(jnp.uint32, (block_rows, LANES), 0)
+    lane = jax.lax.broadcasted_iota(jnp.uint32, (block_rows, LANES), 1)
+    return base + row * jnp.uint32(LANES) + lane

@@ -1,0 +1,62 @@
+"""Pallas kernel: fused pairwise-mask generation + application.
+
+The secure-aggregation hot loop (paper §4.1): client i must expand one KDF
+mask stream per VG peer over the FULL update vector and fold them into its
+quantized payload — O(P * (g-1)) integer ops, the dominant client-side
+secure-agg cost (this is what makes the MPC protocol O(n^2) per VG and why
+VGs exist).
+
+Kernel layout: payload tiled (rows, 128) uint32; grid over row blocks; per
+block, a ``fori_loop`` over the g-1 peers generates the (ROW_BLOCK, 128)
+mask tile from the pair seed + global element counter (counter mode — no
+cross-block state) and accumulates it signed into the quantized payload.
+Mask words never round-trip to HBM: HBM traffic is exactly read-q + write-y,
+while compute is (g-1) KDF rounds per element — arithmetic intensity scales
+with VG size, which is why this is a kernel and not jnp.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import (LANES, ROW_BLOCK, global_index,
+                                  interpret_mode, kdf_u32)
+
+
+def _mask_apply_kernel(seeds_ref, q_ref, out_ref, *, n_pairs, base_offset):
+    pid = pl.program_id(0)
+    ctr = global_index(pid) + jnp.uint32(base_offset)
+
+    def body(j, acc):
+        k0 = seeds_ref[j, 0]
+        k1 = seeds_ref[j, 1]
+        sign_pos = seeds_ref[j, 2]  # 1 -> add mask, 0 -> subtract (mod 2^32)
+        m = kdf_u32(k0, k1, ctr)
+        return acc + jnp.where(sign_pos == jnp.uint32(1), m,
+                               jnp.uint32(0) - m)
+
+    out_ref[...] = jax.lax.fori_loop(0, n_pairs, body, q_ref[...])
+
+
+def mask_apply_tiled(q_tiled, seeds_signs, base_offset=0, *, interpret=None):
+    """q_tiled: (rows, 128) uint32; seeds_signs: (n_pairs, 3) uint32
+    [k0, k1, sign_pos]. Returns masked payload, same shape."""
+    rows = q_tiled.shape[0]
+    assert rows % ROW_BLOCK == 0 and q_tiled.shape[1] == LANES
+    n_pairs = seeds_signs.shape[0]
+    interpret = interpret_mode() if interpret is None else interpret
+    return pl.pallas_call(
+        partial(_mask_apply_kernel, n_pairs=n_pairs,
+                base_offset=base_offset),
+        grid=(rows // ROW_BLOCK,),
+        in_specs=[
+            pl.BlockSpec((n_pairs, 3), lambda i: (0, 0)),   # seeds: replicated
+            pl.BlockSpec((ROW_BLOCK, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROW_BLOCK, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q_tiled.shape, jnp.uint32),
+        interpret=interpret,
+    )(seeds_signs, q_tiled)

@@ -1,0 +1,76 @@
+"""Public jit'd wrappers for the secure-aggregation Pallas kernels.
+
+Each op takes flat (N,) payload vectors, handles (rows, 128) tiling/padding,
+and dispatches to the kernel. ``repro.kernels.ref`` holds the pure-jnp
+oracles with identical signatures; tests sweep shapes/dtypes and
+assert_allclose (bit-equality for the integer ops) between the two.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kdf import U32, pair_seed
+from repro.core.quantize import DEFAULT_BITS, DEFAULT_CLIP
+from repro.kernels import dp_noise as _dp
+from repro.kernels import mask_gen as _mg
+from repro.kernels import quantize as _qz
+from repro.kernels import secure_sum as _ss
+from repro.kernels.common import pad_to_tiles, unpad
+
+
+def build_pair_seeds(i: int, n: int, round_seed):
+    """(n-1, 3) uint32 rows [k0, k1, sign_pos] for client i's peers."""
+    rows = []
+    for v in range(n):
+        if v == i:
+            continue
+        u, w = min(i, v), max(i, v)
+        s = pair_seed(round_seed, u, w)
+        rows.append(jnp.concatenate([s, jnp.asarray([1 if i < v else 0],
+                                                    U32)]))
+    if not rows:
+        return jnp.zeros((0, 3), U32)
+    return jnp.stack(rows)
+
+
+@partial(jax.jit, static_argnums=(1, 2))
+def mask_apply(q_flat, i: int, n: int, round_seed, offset: int = 0):
+    """Kernel-path equivalent of ``core.masking.apply_mask``."""
+    if n <= 1:
+        return q_flat
+    seeds = build_pair_seeds(i, n, round_seed)
+    tiled, size = pad_to_tiles(q_flat)
+    out = _mg.mask_apply_tiled(tiled, seeds, base_offset=offset)
+    return unpad(out, size)
+
+
+@partial(jax.jit, static_argnums=(1, 2))
+def quantize(x_flat, clip: float = DEFAULT_CLIP, bits: int = DEFAULT_BITS):
+    tiled, size = pad_to_tiles(x_flat.astype(jnp.float32))
+    return unpad(_qz.quantize_tiled(tiled, clip, bits), size)
+
+
+@partial(jax.jit, static_argnums=(1, 2, 3))
+def dequantize_sum(q_flat, n: int, clip: float = DEFAULT_CLIP,
+                   bits: int = DEFAULT_BITS):
+    tiled, size = pad_to_tiles(q_flat)
+    return unpad(_qz.dequantize_sum_tiled(tiled, n, clip, bits), size)
+
+
+@jax.jit
+def secure_sum(payloads):
+    """payloads (n, N) uint32 -> (N,) wrapping modular sum."""
+    n = payloads.shape[0]
+    tiled0, size = pad_to_tiles(payloads[0])
+    stacked = jnp.stack([pad_to_tiles(payloads[j])[0] for j in range(n)])
+    return unpad(_ss.secure_sum_tiled(stacked), size)
+
+
+@partial(jax.jit, static_argnums=(2,))
+def dp_clip_noise(x_flat, clip_factor, sigma: float, seed):
+    tiled, size = pad_to_tiles(x_flat.astype(jnp.float32))
+    return unpad(_dp.dp_clip_noise_tiled(tiled, clip_factor, sigma, seed),
+                 size)

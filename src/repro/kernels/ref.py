@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel (same signatures as ops.py).
+
+These delegate to ``repro.core`` where the reference math already lives —
+the kernels must match them bit-exactly for the integer ops and to float
+rounding for the f32 ops.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import masking
+from repro.core.kdf import kdf_u32
+from repro.core.quantize import (DEFAULT_BITS, DEFAULT_CLIP, dequantize_sum
+                                 as _dequantize_sum, quantize as _quantize)
+
+
+def mask_apply(q_flat, i: int, n: int, round_seed, offset: int = 0):
+    return masking.apply_mask(q_flat, i, n, round_seed, offset)
+
+
+def quantize(x_flat, clip=DEFAULT_CLIP, bits=DEFAULT_BITS):
+    return _quantize(x_flat, clip, bits)
+
+
+def dequantize_sum(q_flat, n, clip=DEFAULT_CLIP, bits=DEFAULT_BITS):
+    return _dequantize_sum(q_flat, n, clip, bits)
+
+
+def secure_sum(payloads):
+    return masking.modular_sum(payloads)
+
+
+def dp_clip_noise(x_flat, clip_factor, sigma: float, seed):
+    """Bit-matches the kernel's in-lane Box–Muller draw."""
+    seed = jnp.asarray(seed, jnp.uint32)
+    ctr = jnp.arange(x_flat.shape[0], dtype=jnp.uint32)
+    b1 = kdf_u32(seed[0], seed[1], ctr * jnp.uint32(2))
+    b2 = kdf_u32(seed[0], seed[1], ctr * jnp.uint32(2) + jnp.uint32(1))
+    u1 = (b1.astype(jnp.float32) + 1.0) * (1.0 / 4294967296.0)
+    u2 = b2.astype(jnp.float32) * (1.0 / 4294967296.0)
+    z = jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos(6.2831853071795864 * u2)
+    return (x_flat.astype(jnp.float32) * jnp.asarray(clip_factor, jnp.float32)
+            + jnp.float32(sigma) * z)

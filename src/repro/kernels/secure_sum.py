@@ -1,0 +1,41 @@
+"""Pallas kernel: stage-1 modular (wrapping uint32) sum over the client axis.
+
+Input (n_clients, rows, 128) masked payloads -> (rows, 128) interim VG
+aggregate. Grid is (row_blocks, n_clients) with the client axis innermost;
+the output block is revisited across the client axis and accumulated in VMEM
+(classic reduction pattern), so each payload word is read from HBM exactly
+once and the interim result written once.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import LANES, ROW_BLOCK, interpret_mode
+
+
+def _secure_sum_kernel(x_ref, out_ref):
+    i_client = pl.program_id(1)
+
+    @pl.when(i_client == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += x_ref[0]
+
+
+def secure_sum_tiled(payloads, *, interpret=None):
+    """payloads: (n, rows, 128) uint32 -> (rows, 128) uint32 wrapping sum."""
+    n, rows, lanes = payloads.shape
+    assert lanes == LANES and rows % ROW_BLOCK == 0
+    interpret = interpret_mode() if interpret is None else interpret
+    return pl.pallas_call(
+        _secure_sum_kernel,
+        grid=(rows // ROW_BLOCK, n),
+        in_specs=[pl.BlockSpec((1, ROW_BLOCK, LANES),
+                               lambda r, c: (c, r, 0))],
+        out_specs=pl.BlockSpec((ROW_BLOCK, LANES), lambda r, c: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.uint32),
+        interpret=interpret,
+    )(payloads)

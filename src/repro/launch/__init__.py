@@ -1,0 +1,11 @@
+"""Launch layer (devops persona): mesh construction, sharding rules,
+multi-pod dry-run, roofline analysis, train/serve drivers.
+
+NOTE: do not import ``repro.launch.dryrun`` from library code — it sets
+XLA_FLAGS at import time (device-count override) by design.
+"""
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_host_mesh, make_production_mesh)
+
+__all__ = ["make_host_mesh", "make_production_mesh", "PEAK_FLOPS_BF16",
+           "HBM_BW", "ICI_BW"]

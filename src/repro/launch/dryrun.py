@@ -1,0 +1,269 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture x input shape x mesh) combination against the production mesh
+— 16x16 single-pod and 2x16x16 multi-pod — and record memory / cost /
+collective analysis for the roofline.
+
+The XLA_FLAGS line above MUST run before any jax import (device count locks
+on first init); this module is therefore the process entry point:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.configs import ASSIGNED, get_config, get_shape, is_skipped  # noqa: E402
+from repro.launch import input_specs as ispec  # noqa: E402
+from repro.launch import sharding as shd  # noqa: E402
+from repro.launch.fl_step import make_fl_train_step  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.roofline import analyze_hlo, roofline_terms  # noqa: E402
+from repro.models import decode_step, prefill_logits  # noqa: E402
+
+
+def needs_window_override(cfg) -> bool:
+    """Full-attention archs need the sliding-window variant for long_500k."""
+    return (not cfg.ssm_type and not cfg.local_global_alternate
+            and cfg.sliding_window == 0)
+
+
+def lower_pair(cfg, shape, mesh, *, secure=True, microbatches=None,
+               vg_size=None, packed=False, donate=True, extra_tag=""):
+    """-> (lowered, meta) for one (arch, shape) on one mesh."""
+    n_chips = 1
+    for v in mesh.shape.values():
+        n_chips *= v
+
+    if shape.kind == "train":
+        fl_round, fl_meta = make_fl_train_step(
+            cfg, mesh, secure=secure, microbatches=microbatches,
+            vg_size=vg_size, packed=packed)
+        specs = ispec.input_specs(cfg, shape, mesh, "train")
+        p_sh = shd.to_shardings(mesh, shd.params_pspecs(
+            cfg, specs["params"], mesh))
+        o_sh = shd.to_shardings(mesh, shd.opt_pspecs(
+            cfg, specs["opt_state"], mesh))
+        b_sh = shd.to_shardings(mesh, shd.silo_batch_pspecs(
+            cfg, specs["batch"], mesh, cfg.fl_scheme))
+        seed_sh = NamedSharding(mesh, P())
+        lowered = jax.jit(
+            fl_round,
+            in_shardings=(p_sh, o_sh, b_sh, seed_sh),
+            out_shardings=(p_sh, o_sh, NamedSharding(mesh, P())),
+            # params/opt-state buffers are consumed by the update — without
+            # donation the old and new copies coexist (§Perf: measured
+            # ~31 GiB on llama4-400b: 2x (params bf16 + adam moments f32))
+            donate_argnums=(0, 1) if donate else (),
+        ).lower(specs["params"], specs["opt_state"], specs["batch"],
+                ispec.round_seed_spec())
+        return lowered, dict(fl_meta, n_chips=n_chips)
+
+    if shape.kind == "prefill":
+        # §Perf: same GSPMD propagation pins as training (batch dim +
+        # attention heads), measured on the train hillclimbs
+        if cfg.activation_batch_axes is None:
+            cfg = cfg.replace(activation_batch_axes=("pod", "data"))
+        if cfg.shard_attn_heads is None:
+            cfg = cfg.replace(shard_attn_heads=True)
+        specs = ispec.input_specs(cfg, shape, mesh=None, kind="prefill")
+        p_sh = shd.to_shardings(mesh, shd.params_pspecs(
+            cfg, specs["params"], mesh, scheme="per_pod"))
+        b_sh = shd.to_shardings(mesh, shd.batch_pspecs(
+            cfg, specs["batch"], mesh, silo_blocked=False))
+
+        def step(params, batch):
+            return prefill_logits(cfg, params, batch)
+
+        lowered = jax.jit(step, in_shardings=(p_sh, b_sh)).lower(
+            specs["params"], specs["batch"])
+        return lowered, dict(n_chips=n_chips)
+
+    # decode — do NOT pin heads: the KV-cache sequence dim owns the
+    # 'model' axis (flash-decode layout); pinning heads there too forces
+    # per-layer cache regathers (measured neutral-to-negative)
+    if cfg.shard_attn_heads is None:
+        cfg = cfg.replace(shard_attn_heads=False)
+    wo = cfg.long_context_window if (shape.name == "long_500k"
+                                     and needs_window_override(cfg)) else None
+    specs = ispec.input_specs(cfg, shape, mesh=None, kind="decode")
+    p_sh = shd.to_shardings(mesh, shd.params_pspecs(
+        cfg, specs["params"], mesh, scheme="per_pod"))
+    c_sh = shd.to_shardings(mesh, shd.cache_pspecs(
+        cfg, specs["cache"], mesh, shape.global_batch))
+    t_sh = shd.to_shardings(mesh, shd.batch_pspecs(
+        cfg, specs["tokens"], mesh, silo_blocked=False))
+
+    def step(params, cache, tokens):
+        return decode_step(cfg, params, cache, tokens, window_override=wo)
+
+    lowered = jax.jit(step, in_shardings=(p_sh, c_sh, t_sh),
+                      # serving updates the KV cache in place
+                      donate_argnums=(1,) if donate else ()).lower(
+        specs["params"], specs["cache"], specs["tokens"])
+    return lowered, dict(n_chips=n_chips, window_override=wo)
+
+
+def _mem_analysis_dict(compiled):
+    ma = compiled.memory_analysis()
+    if ma is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if out:
+        out["total_bytes_per_device"] = (
+            out.get("argument_size_in_bytes", 0)
+            + out.get("temp_size_in_bytes", 0)
+            + out.get("output_size_in_bytes", 0)
+            - out.get("alias_size_in_bytes", 0))
+    return out
+
+
+def _parse_overrides(s: str | None) -> dict:
+    """--override "moe_dispatch_constraint=True,train_microbatches=8"."""
+    import ast
+    out = {}
+    for item in (s or "").split(","):
+        if not item.strip():
+            continue
+        k, v = item.split("=", 1)
+        out[k.strip()] = ast.literal_eval(v.strip())
+    return out
+
+
+def run_pair(arch: str, shape_name: str, mesh_kind: str, outdir: str,
+             *, secure=True, microbatches=None, vg_size=None, tag="",
+             overrides=None, packed=False, donate=True):
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = get_shape(shape_name)
+    skip = is_skipped(arch, shape_name)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "secure": secure, "tag": tag}
+    os.makedirs(outdir, exist_ok=True)
+    fname = os.path.join(
+        outdir, f"{arch}__{shape_name}__{mesh_kind}{tag}.json")
+    if skip:
+        rec.update(status="skipped", reason=skip)
+        json.dump(rec, open(fname, "w"), indent=1)
+        print(f"[dryrun] SKIP {arch} x {shape_name}: {skip}")
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    try:
+        with jax.set_mesh(mesh):
+            lowered, meta = lower_pair(cfg, shape, mesh, secure=secure,
+                                       microbatches=microbatches,
+                                       vg_size=vg_size, packed=packed,
+                                       donate=donate)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = _mem_analysis_dict(compiled)
+            print(compiled.memory_analysis())
+            ca = compiled.cost_analysis() or {}
+            text = compiled.as_text()
+            hlo = analyze_hlo(text)
+            terms = roofline_terms(hlo, cfg, shape, meta["n_chips"])
+            _dump_hlo(outdir, arch, shape_name, mesh_kind, tag, text)
+        rec.update(status="ok", lower_s=round(t_lower, 1),
+                   compile_s=round(t_compile, 1), meta=meta,
+                   memory_analysis=mem,
+                   cost_analysis={k: float(v) for k, v in ca.items()
+                                  if isinstance(v, (int, float))},
+                   roofline=_jsonable(terms))
+        print(f"[dryrun] OK {arch} x {shape_name} x {mesh_kind}{tag} "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s) "
+              f"dominant={terms['dominant']} "
+              f"mem/device={mem.get('total_bytes_per_device', 0)/2**30:.2f}GiB")
+    except Exception as e:  # noqa: BLE001 — record failures, keep sweeping
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        print(f"[dryrun] FAIL {arch} x {shape_name} x {mesh_kind}: {e}")
+    json.dump(rec, open(fname, "w"), indent=1)
+    return rec
+
+
+def _dump_hlo(outdir, arch, shape_name, mesh_kind, tag, text):
+    """Gzip the compiled HLO so the roofline can be re-analyzed offline
+    (no recompile) — experiments/dryrun/hlo/<pair>.txt.gz."""
+    import gzip
+    d = os.path.join(outdir, "hlo")
+    os.makedirs(d, exist_ok=True)
+    path = os.path.join(d, f"{arch}__{shape_name}__{mesh_kind}{tag}.txt.gz")
+    with gzip.open(path, "wt") as f:
+        f.write(text)
+
+
+def _jsonable(d):
+    out = {}
+    for k, v in d.items():
+        if isinstance(v, dict):
+            out[k] = _jsonable(v)
+        elif isinstance(v, (int, float, str, bool)) or v is None:
+            out[k] = v
+        else:
+            out[k] = float(v)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--insecure", action="store_true",
+                    help="ablation: skip quantize/mask (plain f32 mean)")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--vg-size", type=int, default=None)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--override", default=None)
+    ap.add_argument("--packed", action="store_true",
+                    help="packed modular aggregation (2x13-bit per word)")
+    ap.add_argument("--no-donate", action="store_true")
+    args = ap.parse_args()
+
+    archs = ASSIGNED if args.arch == "all" else args.arch.split(",")
+    shapes = (["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+              if args.shape == "all" else args.shape.split(","))
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    n_ok = n_fail = n_skip = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                rec = run_pair(arch, shape, mesh_kind, args.out,
+                               secure=not args.insecure,
+                               microbatches=args.microbatches,
+                               vg_size=args.vg_size, tag=args.tag,
+                               overrides=_parse_overrides(args.override),
+                               packed=args.packed, donate=not args.no_donate)
+                n_ok += rec["status"] == "ok"
+                n_fail += rec["status"] == "error"
+                n_skip += rec["status"] == "skipped"
+    print(f"[dryrun] done: {n_ok} ok, {n_fail} failed, {n_skip} skipped")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

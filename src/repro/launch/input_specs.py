@@ -1,0 +1,126 @@
+"""ShapeDtypeStruct stand-ins for every model input of every (arch x shape)
+pair — shardable, weak-type-correct, no device allocation (deliverable e.2).
+
+Shape-kind semantics:
+  train   : one FL round; batch silo-blocked (n_silos, per_silo_B, ...).
+  prefill : full-prompt forward, last-token logits.
+  decode  : ONE new token against a KV cache of shape.seq_len.
+
+Per-arch adaptations (DESIGN.md §Arch-applicability):
+  whisper: seq_len = ENCODER frame count (stub embeddings); decoder length
+           min(448, seq//8); decode shapes skipped (448-position decoder).
+  llava  : 2880 stub patch embeddings + (seq_len - 2880) text tokens.
+  full-attention archs at long_500k decode: sliding-window variant
+           (window = cfg.long_context_window).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.fl_step import n_silos_for
+
+I32 = jnp.int32
+F32 = jnp.float32
+BF16 = jnp.bfloat16
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def whisper_decoder_len(cfg, seq_len: int) -> int:
+    return min(cfg.max_decoder_len, max(32, seq_len // 8))
+
+
+def train_batch_specs(cfg, shape, mesh):
+    """Silo-blocked training batch structs."""
+    n_silos = n_silos_for(cfg, mesh)
+    assert shape.global_batch % n_silos == 0, (shape.name, n_silos)
+    b = shape.global_batch // n_silos
+    s = shape.seq_len
+    if cfg.encoder_decoder:
+        sd = whisper_decoder_len(cfg, s)
+        return {
+            "frames": sds((n_silos, b, s, cfg.d_model), BF16),
+            "tokens": sds((n_silos, b, sd), I32),
+            "targets": sds((n_silos, b, sd), I32),
+            "mask": sds((n_silos, b, sd), F32),
+        }
+    if cfg.frontend == "vision_stub":
+        p = cfg.num_patch_tokens
+        st = s - p
+        assert st > 0
+        return {
+            "patches": sds((n_silos, b, p, cfg.d_model), BF16),
+            "tokens": sds((n_silos, b, st), I32),
+            "targets": sds((n_silos, b, st), I32),
+            "mask": sds((n_silos, b, st), F32),
+        }
+    return {
+        "tokens": sds((n_silos, b, s), I32),
+        "targets": sds((n_silos, b, s), I32),
+        "mask": sds((n_silos, b, s), F32),
+    }
+
+
+def prefill_batch_specs(cfg, shape):
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.encoder_decoder:
+        sd = whisper_decoder_len(cfg, s)
+        return {"frames": sds((b, s, cfg.d_model), BF16),
+                "tokens": sds((b, sd), I32)}
+    if cfg.frontend == "vision_stub":
+        p = cfg.num_patch_tokens
+        return {"patches": sds((b, p, cfg.d_model), BF16),
+                "tokens": sds((b, s - p), I32)}
+    return {"tokens": sds((b, s), I32)}
+
+
+def decode_token_specs(cfg, shape):
+    return sds((shape.global_batch, 1), I32)
+
+
+def abstract_params(cfg, dtype=BF16):
+    from repro.models import init_params
+    return jax.eval_shape(
+        lambda k: init_params(cfg, k, dtype), jax.random.PRNGKey(0))
+
+
+def abstract_cache(cfg, shape, dtype=BF16):
+    from repro.models import init_cache
+    return jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len, dtype))
+
+
+def abstract_opt_state(params_struct, cfg=None):
+    from repro.optim import adamw
+    mdt = BF16 if (cfg is not None and cfg.opt_moments_bf16) else None
+    return jax.eval_shape(lambda p: adamw(moment_dtype=mdt).init(p),
+                          params_struct)
+
+
+def round_seed_spec():
+    return sds((2,), jnp.uint32)
+
+
+def input_specs(cfg, shape, mesh=None, kind=None):
+    """The full input-struct dict for the step lowered at (cfg, shape)."""
+    kind = kind or shape.kind
+    if kind == "train":
+        assert mesh is not None
+        params = abstract_params(cfg)
+        return {
+            "params": params,
+            "opt_state": abstract_opt_state(params, cfg),
+            "batch": train_batch_specs(cfg, shape, mesh),
+            "round_seed": round_seed_spec(),
+        }
+    if kind == "prefill":
+        return {"params": abstract_params(cfg),
+                "batch": prefill_batch_specs(cfg, shape)}
+    if kind == "decode":
+        return {"params": abstract_params(cfg),
+                "cache": abstract_cache(cfg, shape),
+                "tokens": decode_token_specs(cfg, shape)}
+    raise ValueError(kind)

@@ -1,0 +1,41 @@
+"""Production mesh construction (devops persona).
+
+Single pod: 256 chips as (16, 16) = ("data", "model").
+Multi-pod:  2 pods x 256 = (2, 16, 16) = ("pod", "data", "model").
+
+Defined as functions (NOT module constants) so importing never touches jax
+device state; ``dryrun.py`` sets XLA_FLAGS before any jax import.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Degenerate mesh for CPU smoke tests (1 real device)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def mesh_axis_size(mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def data_axes(mesh):
+    """Axes the batch/silo dimension shards over."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+# hardware constants for the roofline (TPU v5e)
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link

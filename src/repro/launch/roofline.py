@@ -1,0 +1,320 @@
+"""Roofline analysis from compiled HLO (deliverable g).
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified
+empirically), and every layer stack here is a ``lax.scan`` — so this module
+parses ``compiled.as_text()`` directly and aggregates recursively through
+while loops using their ``known_trip_count`` backend config:
+
+  flops            : 2 * prod(result_shape) * prod(contracting dims) per dot
+                     (fusion subcomputations traversed; elementwise flops
+                     ignored — documented, dots dominate at these sizes)
+  memory bytes     : sum over top-level ops of operand+result bytes
+                     (post-fusion: fusion internals never touch HBM, so
+                     top-level operands/results are the HBM traffic proxy)
+  collective bytes : operand bytes of all-reduce / all-gather /
+                     reduce-scatter / all-to-all / collective-permute
+                     (operand size = bytes each device actually sends)
+
+Terms (TPU v5e): compute = flops / 197e12, memory = bytes / 819e9,
+collective = coll_bytes / 50e9. All per-chip (the HLO is the per-device
+SPMD program).
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "opaque": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "all-reduce-start", "all-gather-start",
+               "collective-permute-start")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT )?%([\w\.\-]+) = (\(.*?\)|\S+?\[[^\]]*\]\S*) "
+    r"([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY )?%([\w\.\-]+)\s*\((.*?)\)\s*->.*{")
+_PARAM_RE = re.compile(r"([\w\.\-]+):\s*(\(.*?\)|\S+?\[[^\]]*\])")
+
+
+def shape_bytes(type_str: str) -> int:
+    """bytes of 'f32[2,3]{...}' or tuple '(f32[2], u32[4])'."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def shape_dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str            # everything after the '(' of operands
+    operands: list = field(default_factory=list)
+
+    @property
+    def result_bytes(self):
+        return shape_bytes(self.type_str)
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)   # value name -> type_str
+
+
+def _split_operands(rest: str):
+    """operand list = %names before the closing paren at depth 0."""
+    depth, out, cur = 0, [], []
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                break
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    out.append("".join(cur))
+    return [o.strip().lstrip("%") for o in out if o.strip().startswith("%")]
+
+
+def parse_module(text: str) -> dict:
+    comps: dict[str, Computation] = {}
+    cur = None
+    entry = None
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        m = _COMP_RE.match(line)
+        if m and not line.startswith(" "):
+            cur = Computation(m.group(1))
+            comps[cur.name] = cur
+            if line.startswith("ENTRY"):
+                entry = cur.name
+            for pname, ptype in _PARAM_RE.findall(m.group(2)):
+                cur.shapes[pname] = ptype
+            continue
+        if cur is None:
+            continue
+        mo = _OP_RE.match(line)
+        if mo:
+            op = Op(mo.group(1), mo.group(2), mo.group(3), mo.group(4))
+            op.operands = _split_operands(op.rest)
+            cur.ops.append(op)
+            cur.shapes[op.name] = op.type_str
+        if line.startswith("}") and not line.startswith("  "):
+            cur = None
+    return {"computations": comps, "entry": entry}
+
+
+def _trip_count(op: Op) -> int:
+    m = re.search(r'known_trip_count[\'":{\s]+n[\'":\s]+(\d+)', op.rest)
+    if m:
+        return int(m.group(1))
+    return 1
+
+
+def _called(op: Op, attr: str):
+    m = re.search(attr + r"=%([\w\.\-]+)", op.rest)
+    return m.group(1) if m else None
+
+
+def _dot_flops(comp: Computation, op: Op) -> float:
+    out_elems = 1
+    for d in shape_dims(op.type_str):
+        out_elems *= d
+    lhs = op.operands[0] if op.operands else None
+    m = re.search(r"lhs_contracting_dims={([\d,]*)}", op.rest)
+    contract = 1
+    if lhs and lhs in comp.shapes and m:
+        dims = shape_dims(comp.shapes[lhs])
+        for idx in m.group(1).split(","):
+            if idx and int(idx) < len(dims):
+                contract *= dims[int(idx)]
+    return 2.0 * out_elems * contract
+
+
+_SKIP_MEM = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "partition-id", "replica-id", "after-all", "copy-start",
+             "copy-done", "iota"}
+_CONTROL = {"while", "conditional", "call"}
+# ops that touch only slice/result-sized memory, NOT their full operand
+# (counting the whole operand of a scan's per-step dynamic-slice would
+# overcount traffic by the trip count — measured 3 orders of magnitude on
+# jamba's selective scan before this fix)
+_RESULT_SIZED = {"dynamic-slice", "gather", "broadcast", "slice", "reshape",
+                 "transpose", "reverse", "pad"}
+_UPDATE_SIZED = {"dynamic-update-slice", "scatter"}  # in-place update ops
+
+
+def analyze_computation(comps, name, memo):
+    if name in memo:
+        return memo[name]
+    comp = comps[name]
+    flops = mem = coll = 0.0
+    coll_by_kind: dict = {}
+    n_coll = 0
+    for op in comp.ops:
+        base = op.opcode.replace("-done", "").replace("-start", "")
+        if op.opcode == "while":
+            body = _called(op, "body")
+            cond = _called(op, "condition")
+            trips = _trip_count(op)
+            for sub in (body, cond):
+                if sub and sub in comps:
+                    s = analyze_computation(comps, sub, memo)
+                    flops += trips * s["flops"]
+                    mem += trips * s["memory_bytes"]
+                    coll += trips * s["collective_bytes"]
+                    n_coll += trips * s["n_collectives"]
+                    for k, v in s["collective_by_kind"].items():
+                        coll_by_kind[k] = coll_by_kind.get(k, 0) + trips * v
+            continue
+        if op.opcode in ("conditional", "call", "async-start"):
+            sub = (_called(op, "to_apply") or _called(op, "called_computation")
+                   or _called(op, "calls"))
+            if sub and sub in comps:
+                s = analyze_computation(comps, sub, memo)
+                flops += s["flops"]
+                mem += s["memory_bytes"]
+                coll += s["collective_bytes"]
+                n_coll += s["n_collectives"]
+                for k, v in s["collective_by_kind"].items():
+                    coll_by_kind[k] = coll_by_kind.get(k, 0) + v
+            continue
+        if op.opcode == "fusion":
+            sub = _called(op, "calls")
+            if sub and sub in comps:
+                # dots inside fusions still execute; memory is top-level only
+                s = analyze_computation(comps, sub, memo)
+                flops += s["flops"]
+            # memory: recognize in-place slice-update / slice-read fusions —
+            # XLA aliases the big buffer, so HBM traffic is slice-sized,
+            # not buffer-sized (a 4096-trip scan writing per-step residuals
+            # would otherwise be charged trips x full-buffer).
+            opb_list = [shape_bytes(comp.shapes.get(o, ""))
+                        for o in op.operands]
+            big = max(opb_list) if opb_list else 0
+            if ("dynamic-update-slice" in op.name
+                    and big == op.result_bytes and big > 0):
+                mem += 2 * (sum(b for b in opb_list if b != big)
+                            + (opb_list.count(big) - 1) * big)
+            elif "dynamic-slice" in op.name and big > op.result_bytes:
+                mem += 2 * op.result_bytes + (sum(opb_list) - big)
+            else:
+                # operands vastly larger than the result are sliced reads
+                # (a dynamic-slice fused into the consumer): cap at result
+                capped = [min(b, op.result_bytes)
+                          if op.result_bytes and b > 32 * op.result_bytes
+                          else b for b in opb_list]
+                mem += sum(capped) + op.result_bytes
+            continue
+        if op.opcode == "dot":
+            flops += _dot_flops(comp, op)
+        if base in COLLECTIVES or op.opcode in COLLECTIVES:
+            if op.opcode.endswith("-done"):
+                continue  # counted at -start
+            opb = sum(shape_bytes(comp.shapes.get(o, "")) for o in
+                      op.operands)
+            opb = opb or op.result_bytes
+            coll += opb
+            n_coll += 1
+            coll_by_kind[base] = coll_by_kind.get(base, 0) + opb
+        if op.opcode in _RESULT_SIZED:
+            mem += 2 * op.result_bytes            # read slice + write result
+        elif op.opcode in _UPDATE_SIZED:
+            upd = (shape_bytes(comp.shapes.get(op.operands[1], ""))
+                   if len(op.operands) > 1 else op.result_bytes)
+            mem += 2 * upd                        # in-place region rw
+        elif op.opcode not in _SKIP_MEM and op.opcode not in _CONTROL:
+            opb = sum(shape_bytes(comp.shapes.get(o, "")) for o in
+                      op.operands)
+            mem += opb + op.result_bytes
+    out = {"flops": flops, "memory_bytes": mem, "collective_bytes": coll,
+           "n_collectives": n_coll, "collective_by_kind": coll_by_kind}
+    memo[name] = out
+    return out
+
+
+def analyze_hlo(text: str) -> dict:
+    mod = parse_module(text)
+    memo: dict = {}
+    entry = mod["entry"]
+    stats = analyze_computation(mod["computations"], entry, memo)
+    return dict(stats)
+
+
+# --------------------------------------------------------------------------
+# roofline terms
+# --------------------------------------------------------------------------
+
+def model_flops(cfg, shape, n_chips: int) -> float:
+    """Analytic 'useful' FLOPs per chip: 6*N_active*tokens (train),
+    2*N_active*tokens (prefill/decode)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        per = 6.0
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        per = 2.0
+    else:  # decode: ONE token per sequence
+        tokens = shape.global_batch * 1
+        per = 2.0
+    return per * n_active * tokens / n_chips
+
+
+def roofline_terms(hlo_stats: dict, cfg, shape, n_chips: int) -> dict:
+    compute_s = hlo_stats["flops"] / PEAK_FLOPS_BF16
+    memory_s = hlo_stats["memory_bytes"] / HBM_BW
+    collective_s = hlo_stats["collective_bytes"] / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape, n_chips)
+    return {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": mf,
+        "hlo_flops": hlo_stats["flops"],
+        "useful_flops_ratio": (mf / hlo_stats["flops"]
+                               if hlo_stats["flops"] else 0.0),
+        "collective_by_kind": hlo_stats["collective_by_kind"],
+        "n_collectives": hlo_stats["n_collectives"],
+        "memory_bytes": hlo_stats["memory_bytes"],
+        "collective_bytes": hlo_stats["collective_bytes"],
+    }
+
+
+def format_report(name: str, terms: dict) -> str:
+    t = terms
+    return (f"{name}: compute={t['compute_s']:.4f}s "
+            f"memory={t['memory_s']:.4f}s collective={t['collective_s']:.4f}s "
+            f"dominant={t['dominant']} useful={t['useful_flops_ratio']:.2f}")

@@ -1,0 +1,87 @@
+"""Batched decode driver (deliverable b): prefill a prompt batch then decode
+tokens with the KV cache, on a host mesh (reduced config) or the production
+mesh (full config, real TPU).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --reduced \
+        --batch 4 --prompt-len 16 --new-tokens 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_reduced_config
+from repro.launch import sharding as shd
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import decode_step, init_cache, init_params
+from repro.models.model import forward_hidden
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-9b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    cfg = (get_reduced_config(args.arch) if args.reduced
+           else get_config(args.arch))
+    if cfg.encoder_decoder:
+        raise SystemExit("whisper decode is out of scope (DESIGN.md)")
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_host_mesh())
+    B = args.batch
+    max_len = args.prompt_len + args.new_tokens
+
+    with jax.set_mesh(mesh):
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.RandomState(0)
+        prompts = rng.randint(1, cfg.vocab_size, (B, args.prompt_len))
+        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        if cfg.frontend == "vision_stub":
+            batch["patches"] = jnp.asarray(
+                rng.randn(B, cfg.num_patch_tokens, cfg.d_model) * 0.02,
+                jnp.float32)
+        cache = init_cache(cfg, B, max_len)
+
+        # prefill by stepping tokens through the cache (cache-faithful path)
+        step = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t))
+        t0 = time.time()
+        logits = None
+        for t in range(args.prompt_len):
+            logits, cache = step(params, cache, batch["tokens"][:, t:t + 1])
+        prefill_s = time.time() - t0
+
+        out_tokens = []
+        key = jax.random.PRNGKey(7)
+        t0 = time.time()
+        for _ in range(args.new_tokens):
+            if args.temperature > 0:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(
+                    sub, logits / args.temperature, axis=-1)[:, None]
+            else:
+                nxt = jnp.argmax(logits, axis=-1)[:, None]
+            out_tokens.append(np.asarray(nxt))
+            logits, cache = step(params, cache, nxt.astype(jnp.int32))
+        decode_s = time.time() - t0
+
+    gen = np.concatenate(out_tokens, axis=1)
+    print(f"[serve] {cfg.name}: batch={B} prompt={args.prompt_len} "
+          f"new={args.new_tokens}")
+    print(f"[serve] prefill {prefill_s:.2f}s, decode {decode_s:.2f}s "
+          f"({B * args.new_tokens / max(decode_s, 1e-9):.1f} tok/s)")
+    print(f"[serve] sample generations: {gen[:2].tolist()}")
+    return gen
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,192 @@
+"""Sharding rules (MaxText-style logical rules, shape-driven).
+
+Parameter rule, given a leaf's shape (ignoring the stacked n_blocks leading
+dim for scanned layers):
+
+  - rank-3 expert weights (E, D, F): E -> "model" (expert parallelism:
+    dispatch einsum becomes the all-to-all), D==d_model -> FSDP axis.
+  - rank-2: the first dim equal to d_model -> FSDP axis; one remaining
+    large divisible dim -> "model" (tensor parallelism).
+  - rank-1 / small: replicated.
+
+FSDP axis by FL scheme (DESIGN.md §6):
+  per_silo: params replicated over data (each silo owns a full replica of
+            its model-shard; pseudo-grads stay per-silo) -> FSDP axis = None,
+            but OPTIMIZER state still shards over "data" (ZeRO-1).
+  per_pod : params shard over "data" within a pod, replicate over "pod"
+            (each pod is one silo running FSDP+TP internally).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def _divisible(dim, size):
+    return size > 1 and dim % size == 0 and dim >= size
+
+
+def leaf_pspec(shape, cfg, mesh, *, fsdp_axis, stacked: bool):
+    d_model = cfg.d_model
+    model_ok = "model" in mesh.shape
+    model_size = mesh.shape.get("model", 1)
+    fsdp_size = mesh.shape.get(fsdp_axis, 1) if fsdp_axis else 1
+
+    body = list(shape[1:]) if stacked else list(shape)
+    spec = [None] * len(body)
+    if len(body) >= 2:
+        model_used = False
+        fsdp_used = False
+        # expert weights: dim0 == num_experts -> model axis
+        if (len(body) == 3 and cfg.num_experts
+                and body[0] == cfg.num_experts
+                and _divisible(body[0], model_size)):
+            spec[0] = "model"
+            model_used = True
+        for i, s in enumerate(body):
+            if spec[i] is not None:
+                continue
+            if (not fsdp_used and fsdp_axis and s == d_model
+                    and _divisible(s, fsdp_size)):
+                spec[i] = fsdp_axis
+                fsdp_used = True
+        # one remaining largest divisible dim -> model
+        if model_ok and not model_used:
+            cands = [(s, i) for i, s in enumerate(body)
+                     if spec[i] is None and _divisible(s, model_size)
+                     and s >= 128]
+            if cands:
+                _, i = max(cands)
+                spec[i] = "model"
+    if stacked:
+        spec = [None] + spec
+    return P(*spec)
+
+
+def _is_stacked(path) -> bool:
+    s = jax.tree_util.keystr(path)
+    return ("'blocks'" in s) or ("'encoder'" in s) or ("'decoder'" in s)
+
+
+def params_pspecs(cfg, params_struct, mesh, *, scheme=None):
+    """PartitionSpec pytree for the parameter pytree (or its eval_shape)."""
+    scheme = scheme or cfg.fl_scheme
+    fsdp_axis = "data" if scheme == "per_pod" else None
+
+    def rule(path, leaf):
+        return leaf_pspec(leaf.shape, cfg, mesh, fsdp_axis=fsdp_axis,
+                          stacked=_is_stacked(path))
+
+    return jax.tree_util.tree_map_with_path(rule, params_struct)
+
+
+def opt_pspecs(cfg, params_struct, mesh):
+    """Optimizer moments always FSDP over 'data' (ZeRO-1), both schemes."""
+    def rule(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        return leaf_pspec(leaf.shape, cfg, mesh, fsdp_axis="data",
+                          stacked=_is_stacked(path))
+    return jax.tree_util.tree_map_with_path(rule, params_struct)
+
+
+def batch_pspecs(cfg, batch_struct, mesh, *, silo_blocked: bool):
+    """Batch arrays: leading dim over the data axes when divisible (small
+    batches — e.g. long_500k's global_batch=1 — replicate instead)."""
+    d_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    d_size = 1
+    for a in d_axes:
+        d_size *= mesh.shape[a]
+
+    def rule(leaf):
+        lead = d_axes if leaf.shape[0] % d_size == 0 and \
+            leaf.shape[0] >= d_size else None
+        spec = [lead] + [None] * (leaf.ndim - 1)
+        return P(*spec)
+
+    return jax.tree.map(rule, batch_struct)
+
+
+def silo_batch_pspecs(cfg, batch_struct, mesh, scheme):
+    """Training batches blocked (n_silos, per_silo_B, S, ...).
+
+    per_silo: silo dim over (pod, data); inner batch unsharded.
+    per_pod : silo dim over (pod,); inner batch over data (FSDP grouping).
+    """
+    if scheme == "per_silo":
+        lead = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        inner = None
+    else:
+        lead = ("pod",) if "pod" in mesh.shape else None
+        inner = "data"
+
+    def rule(leaf):
+        spec = [lead, inner] + [None] * (leaf.ndim - 2)
+        return P(*spec)
+
+    return jax.tree.map(rule, batch_struct)
+
+
+def cache_pspecs(cfg, cache_struct, mesh, batch_size: int):
+    """Decode caches: batch over (pod, data) when divisible; the KV-cache
+    sequence dim over 'model' (flash-decode style: partial softmax + small
+    cross-shard reductions); SSM state heads/d_inner over 'model'."""
+    d_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    d_size = 1
+    for a in d_axes:
+        d_size *= mesh.shape[a]
+    model_size = mesh.shape.get("model", 1)
+    batch_axes = d_axes if batch_size % max(d_size, 1) == 0 and \
+        batch_size >= d_size else None
+
+    def rule(path, leaf):
+        s = jax.tree_util.keystr(path)
+        if leaf.ndim == 0:   # index scalar
+            return P()
+        if "'k'" in s or "'v'" in s:
+            # (n_blocks, B, S, KV, hd). Preference order:
+            #   1. KV heads over 'model' when divisible (classic TP decode:
+            #      attention fully local, no softmax psum)
+            #   2. else sequence over 'model' (flash-decode partials)
+            #   3. B=1 long-context: sequence over (data, model)
+            spec = [None, batch_axes, None, None, None]
+            if leaf.ndim >= 4 and _divisible(leaf.shape[3], model_size):
+                spec[3] = "model"
+                if not batch_axes and _divisible(leaf.shape[2], d_size):
+                    spec[2] = "data"
+                return P(*spec[:leaf.ndim])
+            seq_axes = ("model",) if batch_axes else ("data", "model")
+            seq_size = model_size
+            if not batch_axes:
+                seq_size = model_size * d_size
+            if leaf.shape[2] % seq_size == 0 and leaf.shape[2] >= seq_size:
+                spec[2] = seq_axes if len(seq_axes) > 1 else seq_axes[0]
+            elif leaf.shape[2] % model_size == 0 \
+                    and leaf.shape[2] >= model_size:
+                spec[2] = "model"
+            return P(*spec[:leaf.ndim])
+        if "'S'" in s:
+            # rwkv state (n_blocks, B, H, hd, hd)
+            spec = [None, batch_axes, None, None, None]
+            if leaf.shape[2] % model_size == 0:
+                spec[2] = "model"
+            return P(*spec[:leaf.ndim])
+        if "'h'" in s or "'conv'" in s:
+            # mamba (n_blocks, B, d_in, n) / (n_blocks, B, c, d_in)
+            spec = [None, batch_axes] + [None] * (leaf.ndim - 2)
+            for i in range(2, leaf.ndim):
+                if leaf.shape[i] % model_size == 0 and leaf.shape[i] >= 1024:
+                    spec[i] = "model"
+                    break
+            return P(*spec)
+        # last_tm/last_cm (n_blocks, B, d)
+        spec = [None, batch_axes] + [None] * (leaf.ndim - 2)
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, cache_struct)
+
+
+def to_shardings(mesh, pspecs):
+    return jax.tree.map(lambda p: NamedSharding(mesh, p), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))

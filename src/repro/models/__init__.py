@@ -1,0 +1,19 @@
+from repro.models.model import (
+    cast_floats,
+    chunked_lm_loss,
+    classifier_init,
+    classify_logits,
+    classify_loss,
+    decode_step,
+    forward_hidden,
+    init_cache,
+    init_params,
+    loss_fn,
+    prefill_logits,
+)
+
+__all__ = [
+    "cast_floats", "chunked_lm_loss", "classifier_init", "classify_logits",
+    "classify_loss", "decode_step", "forward_hidden", "init_cache",
+    "init_params", "loss_fn", "prefill_logits",
+]

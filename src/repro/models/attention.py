@@ -1,0 +1,176 @@
+"""GQA attention with sliding windows, logit softcap, q-chunking and KV cache.
+
+Supports the assigned variants:
+  - grouped-query attention (any heads:kv ratio)           [all dense archs]
+  - sliding-window / local attention                        [mistral, gemma2]
+  - attention-logit softcapping                             [gemma2]
+  - per-head q/k RMS norm                                   [qwen3]
+  - cross attention (encoder-decoder)                       [whisper]
+  - one-token decode against a (possibly sequence-sharded) KV cache
+
+Long sequences use query-chunking (``lax.scan`` over query blocks) so the
+(Sq, Sk) score matrix never materializes at more than (chunk, Sk) — the pure
+JAX analogue of flash attention's memory behaviour (compute is left to the
+MXU via einsum; see DESIGN.md §5 for why there is no Pallas kernel here).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _dense_init, rms_head_norm, rope
+
+Q_CHUNK = 2048
+NEG_INF = -2.3819763e38  # == finfo(f32).min / 2, safe under softcap tanh
+
+
+def attn_init(cfg, key, cross=False):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p = {
+        "wq": _dense_init(ks[0], (d, cfg.q_dim)),
+        "wk": _dense_init(ks[1], (d, cfg.kv_dim)),
+        "wv": _dense_init(ks[2], (d, cfg.kv_dim)),
+        "wo": _dense_init(ks[3], (cfg.q_dim, d)),
+    }
+    if cfg.use_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,))
+        p["bk"] = jnp.zeros((cfg.kv_dim,))
+        p["bv"] = jnp.zeros((cfg.kv_dim,))
+        p["bo"] = jnp.zeros((d,))
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.head_dim,))
+        p["k_norm"] = jnp.ones((cfg.head_dim,))
+    return p
+
+
+def _shard_heads(cfg, t):
+    """Pin the heads dim to 'model' (§Perf: GSPMD can silently replicate
+    attention heads when params are replicated over data — per_silo)."""
+    if not cfg.shard_attn_heads:
+        return t
+    mesh = jax.sharding.get_abstract_mesh()
+    names = getattr(mesh, "axis_names", ()) if mesh is not None else ()
+    if "model" not in names:
+        return t
+    size = dict(zip(mesh.axis_names, mesh.axis_sizes))["model"]
+    if t.shape[2] % size or t.shape[2] < size:
+        return t
+    return jax.lax.with_sharding_constraint(
+        t, jax.sharding.PartitionSpec(None, None, "model", None))
+
+
+def _project_qkv(cfg, params, x, kv_src=None):
+    B, S, _ = x.shape
+    kv_src = x if kv_src is None else kv_src
+    Skv = kv_src.shape[1]
+    q = x @ params["wq"]
+    k = kv_src @ params["wk"]
+    v = kv_src @ params["wv"]
+    if cfg.use_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = _shard_heads(cfg, q.reshape(B, S, cfg.num_heads, cfg.head_dim))
+    k = _shard_heads(cfg, k.reshape(B, Skv, cfg.num_kv_heads, cfg.head_dim))
+    v = _shard_heads(cfg, v.reshape(B, Skv, cfg.num_kv_heads, cfg.head_dim))
+    if cfg.qk_norm:
+        q = rms_head_norm(q, params["q_norm"])
+        k = rms_head_norm(k, params["k_norm"])
+    return q, k, v
+
+
+def _scores_to_out(cfg, q, k, v, mask):
+    """q: (B,Sq,H,hd)  k,v: (B,Sk,KV,hd)  mask: (B|1, Sq, Sk) bool."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    qg = q.reshape(B, Sq, KV, rep, hd)
+    scores = jnp.einsum("bqkrh,bskh->bkrqs", qg, k).astype(jnp.float32)
+    scores = scores * (hd ** -0.5)
+    if cfg.attn_logit_softcap > 0:
+        c = cfg.attn_logit_softcap
+        scores = jnp.tanh(scores / c) * c
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkrqs,bskh->bqkrh", probs, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def _make_mask(q_pos, k_pos, *, causal, window):
+    """q_pos: (Sq,), k_pos: (Sk,) absolute positions -> (Sq, Sk) bool."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window and window > 0:
+        m &= k_pos[None, :] > (q_pos[:, None] - window)
+    return m
+
+
+def multihead_attention(cfg, params, x, *, causal=True, window=0,
+                        kv_src=None, q_offset=0):
+    """Full-sequence attention (train / prefill / encoder / cross)."""
+    q, k, v = _project_qkv(cfg, params, x, kv_src=kv_src)
+    B, Sq = q.shape[:2]
+    Sk = k.shape[1]
+    q_pos = jnp.arange(Sq) + q_offset
+    k_pos = jnp.arange(Sk)
+    if cfg.pos_embed == "rope" and kv_src is None:
+        q = rope(q, q_pos, cfg.rope_theta)
+        k = rope(k, k_pos, cfg.rope_theta)
+
+    if Sq > Q_CHUNK and Sq % Q_CHUNK == 0:
+        n_chunk = Sq // Q_CHUNK
+        qc = q.reshape(B, n_chunk, Q_CHUNK, cfg.num_heads, cfg.head_dim)
+        qc = jnp.moveaxis(qc, 1, 0)  # (n_chunk, B, C, H, hd)
+        qpc = q_pos.reshape(n_chunk, Q_CHUNK)
+
+        def body(carry, inp):
+            qi, qpi = inp
+            mask = _make_mask(qpi, k_pos, causal=causal, window=window)[None]
+            return carry, _scores_to_out(cfg, qi, k, v, mask)
+
+        _, outs = jax.lax.scan(body, None, (qc, qpc))
+        out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, cfg.num_heads,
+                                               cfg.head_dim)
+    else:
+        mask = _make_mask(q_pos, k_pos, causal=causal, window=window)[None]
+        out = _scores_to_out(cfg, q, k, v, mask)
+
+    y = out.reshape(B, Sq, cfg.q_dim) @ params["wo"]
+    if cfg.use_bias:
+        y = y + params["bo"]
+    return y
+
+
+# --------------------------------------------------------------------------
+# decode with KV cache
+# --------------------------------------------------------------------------
+
+def init_kv_cache(cfg, batch, max_len, dtype):
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim),
+                       dtype=dtype),
+        "v": jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim),
+                       dtype=dtype),
+    }
+
+
+def decode_attention(cfg, params, x, cache, index, *, window=0):
+    """One-token decode step. x: (B, 1, D); index: scalar position."""
+    q, k_new, v_new = _project_qkv(cfg, params, x)
+    B = x.shape[0]
+    S_max = cache["k"].shape[1]
+    pos = jnp.full((1,), index)
+    if cfg.pos_embed == "rope":
+        q = rope(q, pos, cfg.rope_theta)
+        k_new = rope(k_new, pos, cfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice(
+        cache["k"], k_new.astype(cache["k"].dtype), (0, index, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        cache["v"], v_new.astype(cache["v"].dtype), (0, index, 0, 0))
+    k_pos = jnp.arange(S_max)
+    mask = _make_mask(pos, k_pos, causal=True, window=window)[None]
+    out = _scores_to_out(cfg, q, k_cache, v_cache, mask)
+    y = out.reshape(B, 1, cfg.q_dim) @ params["wo"]
+    if cfg.use_bias:
+        y = y + params["bo"]
+    return y, {"k": k_cache, "v": v_cache}

@@ -1,0 +1,89 @@
+"""Encoder-decoder backbone (Whisper-style). Conv/mel frontend is stubbed:
+the encoder consumes precomputed frame embeddings (B, S_enc, D) directly
+(see DESIGN.md §Arch-applicability). Encoder positions use sinusoidal
+embeddings (any length); decoder uses the learned table capped at
+``cfg.max_decoder_len``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.layers import mlp_apply, mlp_init, norm_apply, norm_init
+
+
+def _sinusoidal(S, D, dtype):
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, D, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10_000.0, dim / D)
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    return pe[:, :D].astype(dtype)
+
+
+def _enc_layer_init(cfg, key):
+    ks = jax.random.split(key, 3)
+    return {"norm1": norm_init(cfg, ks[0]), "attn": attn.attn_init(cfg, ks[1]),
+            "norm2": norm_init(cfg, ks[2]),
+            "ffn": mlp_init(cfg, jax.random.fold_in(key, 7))}
+
+
+def _dec_layer_init(cfg, key):
+    ks = jax.random.split(key, 5)
+    return {
+        "norm1": norm_init(cfg, ks[0]), "self_attn": attn.attn_init(cfg, ks[1]),
+        "norm_x": norm_init(cfg, ks[2]), "cross_attn": attn.attn_init(cfg, ks[3]),
+        "norm2": norm_init(cfg, ks[4]),
+        "ffn": mlp_init(cfg, jax.random.fold_in(key, 7)),
+    }
+
+
+def encdec_init(cfg, key):
+    k_enc = jax.random.split(jax.random.fold_in(key, 0),
+                             cfg.num_encoder_layers)
+    k_dec = jax.random.split(jax.random.fold_in(key, 1), cfg.num_layers)
+    return {
+        "encoder": jax.vmap(partial(_enc_layer_init, cfg))(k_enc),
+        "decoder": jax.vmap(partial(_dec_layer_init, cfg))(k_dec),
+        "enc_norm": norm_init(cfg, jax.random.fold_in(key, 2)),
+        "final_norm": norm_init(cfg, jax.random.fold_in(key, 3)),
+    }
+
+
+def encoder_apply(cfg, params, frames, *, remat=True):
+    """frames: (B, S_enc, D) stub embeddings -> (B, S_enc, D)."""
+    x = frames + _sinusoidal(frames.shape[1], cfg.d_model, frames.dtype)
+
+    def body(x, p):
+        h = attn.multihead_attention(cfg, p["attn"],
+                                     norm_apply(cfg, p["norm1"], x),
+                                     causal=False)
+        x = x + h
+        x = x + mlp_apply(cfg, p["ffn"], norm_apply(cfg, p["norm2"], x))
+        return x, None
+
+    body = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return norm_apply(cfg, params["enc_norm"], x)
+
+
+def decoder_apply(cfg, params, x, enc_out, *, remat=True):
+    """x: (B, S_dec, D) token embeds (learned pos added by caller)."""
+
+    def body(x, p):
+        h = attn.multihead_attention(cfg, p["self_attn"],
+                                     norm_apply(cfg, p["norm1"], x),
+                                     causal=True)
+        x = x + h
+        h = attn.multihead_attention(cfg, p["cross_attn"],
+                                     norm_apply(cfg, p["norm_x"], x),
+                                     causal=False, kv_src=enc_out)
+        x = x + h
+        x = x + mlp_apply(cfg, p["ffn"], norm_apply(cfg, p["norm2"], x))
+        return x, None
+
+    body = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body, x, params["decoder"])
+    return norm_apply(cfg, params["final_norm"], x)

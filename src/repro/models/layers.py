@@ -1,0 +1,143 @@
+"""Shared building blocks: norms, MLPs, embeddings, rotary embeddings.
+
+Pure-functional style: ``*_init(cfg, key) -> params dict`` and
+``*_apply(cfg, params, x) -> y``. Parameters for scanned layer stacks carry a
+leading ``n_blocks`` dimension added by the caller via ``jax.vmap`` over init.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _dense_init(key, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[0]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def norm_init(cfg, key, dim=None):
+    dim = dim or cfg.d_model
+    p = {"scale": jnp.ones((dim,))}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = jnp.zeros((dim,))
+    return p
+
+
+def norm_apply(cfg, params, x):
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-6)
+        y = y * params["scale"] + params["bias"]
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + 1e-6) * params["scale"]
+    return y.astype(x.dtype)
+
+
+def rms_head_norm(x, scale):
+    """qwen3-style per-head q/k norm. x: (..., head_dim)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + 1e-6) * scale).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# activations / MLP
+# --------------------------------------------------------------------------
+
+def _act(cfg, x):
+    if cfg.act == "gelu":
+        return jax.nn.gelu(x)
+    return jax.nn.silu(x)
+
+
+def mlp_init(cfg, key, d_in=None, d_ff=None):
+    d_in = d_in or cfg.d_model
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_in": _dense_init(ks[0], (d_in, d_ff)),
+        "w_out": _dense_init(ks[1], (d_ff, d_in)),
+    }
+    if cfg.glu:
+        p["w_gate"] = _dense_init(ks[2], (d_in, d_ff))
+    if cfg.use_bias:
+        p["b_in"] = jnp.zeros((d_ff,))
+        p["b_out"] = jnp.zeros((d_in,))
+    return p
+
+
+def mlp_apply(cfg, params, x):
+    h = x @ params["w_in"]
+    if cfg.use_bias:
+        h = h + params["b_in"]
+    h = _act(cfg, h)
+    if cfg.glu:
+        h = h * (x @ params["w_gate"])
+    y = h @ params["w_out"]
+    if cfg.use_bias:
+        y = y + params["b_out"]
+    return y
+
+
+# --------------------------------------------------------------------------
+# embeddings
+# --------------------------------------------------------------------------
+
+def embed_init(cfg, key, max_positions=8192):
+    ks = jax.random.split(key, 3)
+    p = {"tok": _dense_init(ks[0], (cfg.vocab_size, cfg.d_model), scale=0.02)}
+    if cfg.pos_embed == "learned":
+        p["pos"] = _dense_init(ks[1], (max_positions, cfg.d_model), scale=0.02)
+    if not cfg.tie_embeddings:
+        p["unembed"] = _dense_init(ks[2], (cfg.d_model, cfg.vocab_size))
+    return p
+
+
+def embed_tokens(cfg, params, tokens, positions=None):
+    x = jnp.take(params["tok"], tokens, axis=0)
+    if cfg.name.startswith("gemma2"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if cfg.pos_embed == "learned":
+        if positions is None:
+            positions = jnp.arange(tokens.shape[-1])
+        x = x + jnp.take(params["pos"], positions, axis=0)
+    return x
+
+
+def unembed(cfg, params, x):
+    if cfg.tie_embeddings:
+        logits = x @ params["tok"].T.astype(x.dtype)
+    else:
+        logits = x @ params["unembed"]
+    if cfg.final_logit_softcap > 0:
+        c = cfg.final_logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logits
+
+
+# --------------------------------------------------------------------------
+# rotary
+# --------------------------------------------------------------------------
+
+def rope(x, positions, theta):
+    """x: (B, S, H, hd); positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    if ang.ndim == 2:  # (S, half) -> broadcast over batch
+        ang = ang[None]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)

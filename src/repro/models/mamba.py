@@ -1,0 +1,138 @@
+"""Mamba (S6) selective-state-space block, as used by Jamba's SSM layers.
+
+Training/prefill runs the selective scan as a ``lax.scan`` over time with a
+(B, d_inner, d_state) carry (sequential but compile-cheap; the chunked
+variant is a §Perf candidate — RWKV6 demonstrates the chunked pattern).
+Decode is the natural O(1) recurrent step with conv + ssm state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _dense_init
+
+
+def mamba_init(cfg, key):
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    n = cfg.d_state
+    ks = jax.random.split(key, 6)
+    dt_rank = max(16, d // 16)
+    return {
+        "w_in": _dense_init(ks[0], (d, 2 * d_in)),
+        "conv": _dense_init(ks[1], (cfg.d_conv, d_in), scale=0.5),
+        "conv_b": jnp.zeros((d_in,)),
+        "w_bcdt": _dense_init(ks[2], (d_in, 2 * n + dt_rank)),
+        "w_dt": _dense_init(ks[3], (dt_rank, d_in), scale=dt_rank ** -0.5),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[4], (d_in,),
+                                       minval=jnp.log(1e-3),
+                                       maxval=jnp.log(1e-1))))),
+        "A_log": jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32)
+                         )[None, :].repeat(d_in, 0),
+        "D": jnp.ones((d_in,)),
+        "w_out": _dense_init(ks[5], (d_in, d)),
+    }
+
+
+def _ssm_inputs(cfg, p, xc):
+    """xc: (B, T, d_in) post-conv activations -> dt, B_t, C_t."""
+    n = cfg.d_state
+    bcdt = xc @ p["w_bcdt"]
+    B_t = bcdt[..., :n]
+    C_t = bcdt[..., n:2 * n]
+    dt = jax.nn.softplus(bcdt[..., 2 * n:] @ p["w_dt"] + p["dt_bias"])
+    return dt, B_t, C_t
+
+
+def _selective_scan(cfg, p, xc, h0):
+    """xc: (B,T,d_in); h0: (B,d_in,n) -> y: (B,T,d_in), hT.
+
+    With cfg.ssm_scan_chunk > 0 the scan is two-level: an outer scan over
+    T/K chunks whose body is ``jax.checkpoint``ed, so reverse-mode stores
+    only the (B, d_in, n) chunk-boundary states and replays each chunk —
+    peak residuals drop from O(T) to O(K + T/K) step-tensors (§Perf
+    hillclimb 1; the plain path stacks (T, B, d_in, n) f32 residuals).
+    """
+    dt, B_t, C_t = _ssm_inputs(cfg, p, xc)
+    A = -jnp.exp(p["A_log"])                       # (d_in, n)
+
+    def step(h, inp):
+        # xs stream in bf16 (halves the saved-residual stacks); the
+        # recurrence carry h and per-step math stay f32
+        x_t, dt_t, b_t, c_t = (a.astype(jnp.float32) for a in inp)
+        dA = jnp.exp(dt_t[..., None] * A[None])    # (B,d_in,n)
+        dBx = (dt_t * x_t)[..., None] * b_t[:, None, :]
+        h = dA * h + dBx
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y.astype(ys_dtype)
+
+    T = xc.shape[1]
+    ys_dtype = jnp.bfloat16 if cfg.ssm_scan_chunk else jnp.float32
+    xs_dtype = ys_dtype
+    xs = tuple(jnp.moveaxis(a, 1, 0).astype(xs_dtype)
+               for a in (xc, dt, B_t, C_t))
+    K = cfg.ssm_scan_chunk
+    if K and T % K == 0 and T > K:
+        chunked = tuple(a.reshape(T // K, K, *a.shape[1:]) for a in xs)
+
+        @jax.checkpoint
+        def chunk_body(h, chunk_xs):
+            return jax.lax.scan(step, h, chunk_xs)
+
+        hT, ys = jax.lax.scan(chunk_body, h0.astype(jnp.float32), chunked)
+        ys = ys.reshape(T, *ys.shape[2:])
+    else:
+        hT, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(xc.dtype)
+    return y + xc * p["D"].astype(xc.dtype), hT
+
+
+def _causal_conv(p, x, d_conv):
+    """depthwise causal conv. x: (B,T,d_in)."""
+    pad = jnp.pad(x, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * p["conv"][i]
+              for i in range(d_conv))
+    return out + p["conv_b"]
+
+
+def mamba_apply(cfg, p, x, state=None):
+    """x: (B,T,D). state: None (train) or dict (carried across calls)."""
+    B, T, _ = x.shape
+    d_in = cfg.ssm_expand * cfg.d_model
+    xz = x @ p["w_in"]
+    xi, z = xz[..., :d_in], xz[..., d_in:]
+    if state is None:
+        h0 = jnp.zeros((B, d_in, cfg.d_state))
+        xc = jax.nn.silu(_causal_conv(p, xi, cfg.d_conv))
+        y, _ = _selective_scan(cfg, p, xc, h0)
+    else:
+        y, state = mamba_decode_inner(cfg, p, xi, z, state)
+        return (y * jax.nn.silu(z)) @ p["w_out"], state
+    return (y * jax.nn.silu(z)) @ p["w_out"], None
+
+
+def mamba_state_init(cfg, batch, dtype=jnp.float32):
+    d_in = cfg.ssm_expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, d_in), dtype),
+        "h": jnp.zeros((batch, d_in, cfg.d_state), jnp.float32),
+    }
+
+
+def mamba_decode_inner(cfg, p, xi, z, state):
+    """One-token step. xi: (B,1,d_in)."""
+    window = jnp.concatenate([state["conv"], xi.astype(state["conv"].dtype)],
+                             axis=1)  # (B, d_conv, d_in)
+    conv_out = jnp.einsum("bcd,cd->bd", window, p["conv"]) + p["conv_b"]
+    xc = jax.nn.silu(conv_out)[:, None, :]          # (B,1,d_in)
+    dt, B_t, C_t = _ssm_inputs(cfg, p, xc)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[:, 0, :, None] * A[None])
+    dBx = (dt[:, 0] * xc[:, 0])[..., None] * B_t[:, 0][:, None, :]
+    h = dA * state["h"] + dBx
+    y = jnp.einsum("bdn,bn->bd", h, C_t[:, 0])[:, None, :]
+    y = y.astype(xc.dtype) + xc * p["D"].astype(xc.dtype)
+    new_state = {"conv": window[:, 1:], "h": h}
+    return y, new_state

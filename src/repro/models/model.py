@@ -1,0 +1,183 @@
+"""Public model API: init / loss / prefill / decode for every assigned arch.
+
+Batch formats (all jnp arrays):
+  LM (dense/moe/ssm/hybrid):  {"tokens" (B,S) i32, "targets" (B,S) i32,
+                               "mask" (B,S) f32}
+  audio (whisper):            {"frames" (B,S_enc,D) f32 — STUB embeddings,
+                               "tokens"/"targets"/"mask" (B,S_dec)}
+  vlm (llava):                {"patches" (B,P,D) f32 — STUB embeddings,
+                               "tokens"/"targets"/"mask" (B,S_text)}
+                              (early fusion: sequence = patches ++ text)
+
+The LM loss is computed with a sequence-chunked cross-entropy so the full
+(B, S, vocab) logits tensor is never materialized (vocabs up to 256k).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, transformer
+from repro.models.layers import (_dense_init, embed_init, embed_tokens,
+                                 unembed)
+
+LOSS_CHUNK = 512
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def init_params(cfg, key, dtype=jnp.float32):
+    k_embed, k_trunk = jax.random.split(key)
+    max_pos = cfg.max_decoder_len if cfg.encoder_decoder else 8192
+    params = {"embed": embed_init(cfg, k_embed, max_positions=max_pos)}
+    if cfg.encoder_decoder:
+        params["trunk"] = encdec.encdec_init(cfg, k_trunk)
+    else:
+        params["trunk"] = transformer.decoder_init(cfg, k_trunk)
+    return cast_floats(params, dtype)
+
+
+def cast_floats(tree, dtype):
+    return jax.tree.map(
+        lambda a: a.astype(dtype) if jnp.issubdtype(a.dtype, jnp.floating)
+        else a, tree)
+
+
+def classifier_init(cfg, key, n_classes=2):
+    return {"w": _dense_init(key, (cfg.d_model, n_classes)),
+            "b": jnp.zeros((n_classes,))}
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+def _constrain_batch_axis(cfg, x):
+    """Pin the activation batch dim to cfg.activation_batch_axes (§Perf:
+    GSPMD otherwise propagates feature-sharded/batch-replicated layouts
+    from FSDP weights through the embedding gather)."""
+    if not cfg.activation_batch_axes:
+        return x
+    mesh = jax.sharding.get_abstract_mesh()
+    names = getattr(mesh, "axis_names", ()) if mesh is not None else ()
+    axes = tuple(a for a in cfg.activation_batch_axes if a in names)
+    if not axes:
+        return x
+    size = 1
+    for a in axes:
+        size *= dict(zip(mesh.axis_names, mesh.axis_sizes))[a]
+    if x.shape[0] % size or x.shape[0] < size:
+        return x  # e.g. long_500k's batch of 1
+    spec = jax.sharding.PartitionSpec(axes, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _embed_batch(cfg, params, batch):
+    """-> (x (B,S,D), targets', mask') with modality fusion applied."""
+    tokens = batch["tokens"]
+    x = embed_tokens(cfg, params["embed"], tokens)
+    targets = batch.get("targets")
+    mask = batch.get("mask")
+    if cfg.frontend == "vision_stub":
+        patches = batch["patches"].astype(x.dtype)
+        x = jnp.concatenate([patches, x], axis=1)  # early fusion
+        if targets is not None:
+            B, P = patches.shape[:2]
+            pad_t = jnp.zeros((B, P), targets.dtype)
+            pad_m = jnp.zeros((B, P), mask.dtype)
+            targets = jnp.concatenate([pad_t, targets], axis=1)
+            mask = jnp.concatenate([pad_m, mask], axis=1)
+    return x, targets, mask
+
+
+def forward_hidden(cfg, params, batch, *, remat=True, window_override=None):
+    """-> (hidden (B,S,D), targets, mask, moe_aux)."""
+    if cfg.encoder_decoder:
+        enc_out = encdec.encoder_apply(cfg, params["trunk"], batch["frames"],
+                                       remat=remat)
+        x = embed_tokens(cfg, params["embed"], batch["tokens"])
+        h = encdec.decoder_apply(cfg, params["trunk"], x, enc_out, remat=remat)
+        return h, batch.get("targets"), batch.get("mask"), jnp.zeros(())
+    x, targets, mask = _embed_batch(cfg, params, batch)
+    x = _constrain_batch_axis(cfg, x)
+    h, aux = transformer.decoder_apply(cfg, params["trunk"], x, remat=remat,
+                                       window_override=window_override)
+    h = _constrain_batch_axis(cfg, h)
+    return h, targets, mask, aux
+
+
+def chunked_lm_loss(cfg, params, hidden, targets, mask):
+    """Sequence-chunked masked cross entropy. Never materializes (B,S,V)."""
+    B, S, D = hidden.shape
+    chunk = LOSS_CHUNK if S % LOSS_CHUNK == 0 and S > LOSS_CHUNK else S
+    n = S // chunk
+
+    hs = jnp.moveaxis(hidden.reshape(B, n, chunk, D), 1, 0)
+    ts = jnp.moveaxis(targets.reshape(B, n, chunk), 1, 0)
+    ms = jnp.moveaxis(mask.reshape(B, n, chunk), 1, 0)
+
+    def body(acc, inp):
+        h, t, m = inp
+        logits = unembed(cfg, params["embed"], h).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * m
+        return acc + jnp.sum(nll), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ts, ms))
+    return total / jnp.clip(jnp.sum(mask), 1.0)
+
+
+def loss_fn(cfg, params, batch, *, remat=True, aux_weight=0.01):
+    hidden, targets, mask, aux = forward_hidden(cfg, params, batch,
+                                                remat=remat)
+    loss = chunked_lm_loss(cfg, params, hidden, targets.astype(jnp.int32),
+                           mask.astype(jnp.float32))
+    return loss + aux_weight * aux
+
+
+def classify_logits(cfg, params, head, batch):
+    """mean-pool classification (spam task)."""
+    hidden, _, _, _ = forward_hidden(cfg, params, batch, remat=False)
+    mask = batch["mask"].astype(hidden.dtype)[..., None]
+    pooled = jnp.sum(hidden * mask, axis=1) / jnp.clip(
+        jnp.sum(mask, axis=1), 1.0)
+    return pooled @ head["w"] + head["b"]
+
+
+def classify_loss(cfg, params, head, batch):
+    logits = classify_logits(cfg, params, head, batch).astype(jnp.float32)
+    labels = batch["label"]
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+# --------------------------------------------------------------------------
+# inference
+# --------------------------------------------------------------------------
+
+def prefill_logits(cfg, params, batch, *, window_override=None):
+    """Process the full prompt, return last-position logits (B, V)."""
+    hidden, _, _, _ = forward_hidden(cfg, params, batch, remat=False,
+                                     window_override=window_override)
+    return unembed(cfg, params["embed"], hidden[:, -1, :])
+
+
+def init_cache(cfg, batch, max_len, dtype=jnp.float32):
+    if cfg.encoder_decoder:
+        raise NotImplementedError(
+            "whisper decode is out of the assigned grid (DESIGN.md)")
+    return transformer.init_decode_cache(cfg, batch, max_len, dtype)
+
+
+def decode_step(cfg, params, cache, tokens, *, window_override=None):
+    """tokens: (B, 1) next token ids -> (logits (B, V), new cache)."""
+    x = embed_tokens(cfg, params["embed"], tokens,
+                     positions=cache["index"][None])
+    h, cache = transformer.decoder_decode(cfg, params["trunk"], x, cache,
+                                          window_override=window_override)
+    logits = unembed(cfg, params["embed"], h[:, 0, :])
+    return logits, cache

@@ -1,0 +1,105 @@
+"""Mixture-of-experts FFN with capacity-based einsum dispatch.
+
+Mesh-TF / Switch-Transformer lineage: tokens are split into groups of
+``cfg.moe_group_size``; within a group each token is routed to its top-k
+experts subject to a per-expert capacity C = ceil(k * G / E * capacity_factor)
+(overflow tokens are dropped — the standard trade for a static-shape, SPMD-
+friendly dispatch). The dispatched activations (n_groups, E, C, D) carry the
+expert dim, which the launch-layer sharding rules place on the ``model`` mesh
+axis — XLA inserts the expert-parallel all-to-all.
+
+Returns the load-balancing auxiliary loss alongside the output.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _act, _dense_init, mlp_apply, mlp_init
+
+
+def moe_init(cfg, key):
+    ks = jax.random.split(key, 5)
+    E, D, F = cfg.num_experts, cfg.d_model, cfg.d_ff
+    p = {
+        "router": _dense_init(ks[0], (D, E)),
+        "w_in": _dense_init(ks[1], (E, D, F)),
+        "w_out": _dense_init(ks[2], (E, F, D)),
+    }
+    if cfg.glu:
+        p["w_gate"] = _dense_init(ks[3], (E, D, F))
+    if cfg.moe_shared_expert:
+        p["shared"] = mlp_init(cfg, ks[4])
+    return p
+
+
+def _constrain(cfg, x, spec):
+    """Pin expert-parallel sharding when a mesh with a 'model' axis is
+    ambient (no-op in unmeshed smoke tests). §Perf hillclimb change."""
+    if not cfg.moe_dispatch_constraint:
+        return x
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.PartitionSpec(*spec))
+
+
+def expert_capacity(cfg, group_size: int) -> int:
+    c = int(cfg.experts_per_token * group_size / cfg.num_experts
+            * cfg.capacity_factor)
+    return max(4, c)
+
+
+def moe_apply(cfg, params, x):
+    """x: (B, S, D) -> (y, aux_loss)."""
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    N = B * S
+    G = cfg.moe_group_size if N % cfg.moe_group_size == 0 else N
+    G = min(G, N)
+    Ng = N // G
+    C = expert_capacity(cfg, G)
+
+    xt = x.reshape(Ng, G, D)
+    logits = (xt @ params["router"]).astype(jnp.float32)       # (Ng, G, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_ids = jax.lax.top_k(probs, k)              # (Ng, G, k)
+    gate_vals = gate_vals / jnp.clip(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # slot assignment: slot j tokens claim capacity after slots < j
+    counts = jnp.zeros((Ng, 1, E), jnp.int32)
+    dispatch = jnp.zeros((Ng, G, E, C), x.dtype)
+    combine = jnp.zeros((Ng, G, E, C), x.dtype)
+    for j in range(k):
+        oh = jax.nn.one_hot(gate_ids[..., j], E, dtype=jnp.int32)  # (Ng,G,E)
+        pos = jnp.cumsum(oh, axis=1) - 1 + counts                  # (Ng,G,E)
+        keep = (pos < C) & (oh > 0)
+        pos_oh = jax.nn.one_hot(jnp.where(keep, pos, C), C, dtype=x.dtype)
+        d_j = pos_oh * keep.astype(x.dtype)[..., None]             # (Ng,G,E,C)
+        dispatch = dispatch + d_j
+        combine = combine + d_j * gate_vals[..., j, None, None].astype(x.dtype)
+        counts = counts + jnp.sum(oh, axis=1, keepdims=True)
+
+    # expert-parallel compute (E on the 'model' axis; the dispatch einsum
+    # is the all-to-all boundary when the constraint flag is on)
+    xe = jnp.einsum("ngd,ngec->necd", xt, dispatch)            # (Ng,E,C,D)
+    xe = _constrain(cfg, xe, (None, "model", None, None))
+    h = jnp.einsum("necd,edf->necf", xe, params["w_in"])
+    h = _act(cfg, h)
+    if cfg.glu:
+        h = h * jnp.einsum("necd,edf->necf", xe, params["w_gate"])
+    ye = jnp.einsum("necf,efd->necd", h, params["w_out"])
+    ye = _constrain(cfg, ye, (None, "model", None, None))
+    y = jnp.einsum("necd,ngec->ngd", ye, combine).reshape(B, S, D)
+
+    if cfg.moe_shared_expert:
+        y = y + mlp_apply(cfg, params["shared"], x)
+
+    # Switch-style load-balance aux loss
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(gate_ids[..., 0], E, dtype=jnp.float32), axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+    return y, aux

@@ -1,0 +1,222 @@
+"""Decoder trunk: heterogeneous layer patterns + scanned blocks.
+
+All assigned decoder families are expressed as a repeating *block pattern*
+(the smallest repeating unit of layers), stacked ``n_blocks`` times and run
+with ``lax.scan`` — this bounds HLO size (and hence compile time at 512-way
+SPMD) even for 94-layer stacks:
+
+  dense (command-r, deepseek, yi, llava, qwen3-moe, llama4): pattern = 1 layer
+  gemma2:  pattern = [local-attn layer, global-attn layer]
+  jamba:   pattern = 8 layers, attention at position 4, MoE at odd positions
+  rwkv6:   pattern = 1 rwkv block (time-mix + channel-mix)
+
+Train/prefill applies the pattern with a rematerialized scan body; decode
+scans the same stack with per-position caches as scan xs/ys.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models.layers import mlp_apply, mlp_init, norm_apply, norm_init
+
+
+# --------------------------------------------------------------------------
+# pattern
+# --------------------------------------------------------------------------
+
+def block_pattern(cfg):
+    """-> (descriptors, n_blocks); descriptor = dict(kind, window, ffn)."""
+    if cfg.ssm_type == "rwkv6":
+        return [dict(kind="rwkv")], cfg.num_layers
+    size = 1
+    if cfg.ssm_type == "mamba" and cfg.attn_every:
+        size = math.lcm(size, cfg.attn_every)
+    if cfg.num_experts and cfg.moe_every > 1:
+        size = math.lcm(size, cfg.moe_every)
+    if cfg.local_global_alternate:
+        size = math.lcm(size, 2)
+    assert cfg.num_layers % size == 0, (cfg.name, cfg.num_layers, size)
+    pattern = []
+    for i in range(size):
+        if cfg.ssm_type == "mamba" and not cfg.is_attn_layer(i):
+            kind = "mamba"
+            window = 0
+        else:
+            kind = "attn"
+            if cfg.local_global_alternate:
+                window = cfg.local_window if i % 2 == 0 else 0
+            else:
+                window = cfg.sliding_window
+        ffn = "moe" if cfg.is_moe_layer(i) else "mlp"
+        pattern.append(dict(kind=kind, window=window, ffn=ffn))
+    return pattern, cfg.num_layers // size
+
+
+def _sublayer_init(cfg, desc, key):
+    ks = jax.random.split(key, 4)
+    if desc["kind"] == "rwkv":
+        return {
+            "norms": [norm_init(cfg, ks[0]), norm_init(cfg, ks[1])],
+            "rwkv": rwkv_mod.rwkv_block_init(cfg, ks[2]),
+        }
+    p = {"norm1": norm_init(cfg, ks[0]), "norm2": norm_init(cfg, ks[1])}
+    if desc["kind"] == "attn":
+        p["attn"] = attn.attn_init(cfg, ks[2])
+    else:
+        p["mamba"] = mamba_mod.mamba_init(cfg, ks[2])
+    if desc["ffn"] == "moe":
+        p["ffn"] = moe_mod.moe_init(cfg, ks[3])
+    else:
+        p["ffn"] = mlp_init(cfg, ks[3])
+    return p
+
+
+def decoder_init(cfg, key):
+    pattern, n_blocks = block_pattern(cfg)
+    blocks = []
+    for pos, desc in enumerate(pattern):
+        keys = jax.random.split(jax.random.fold_in(key, pos), n_blocks)
+        blocks.append(jax.vmap(partial(_sublayer_init, cfg, desc))(keys))
+    return {"blocks": tuple(blocks),
+            "final_norm": norm_init(cfg, jax.random.fold_in(key, 999))}
+
+
+# --------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# --------------------------------------------------------------------------
+
+def _apply_sublayer(cfg, desc, p, x, window_override=None):
+    """One sub-layer, full sequence. Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if desc["kind"] == "rwkv":
+        B = x.shape[0]
+        state = rwkv_mod.rwkv_state_init(cfg, B, x.dtype)
+        x, _ = rwkv_mod.rwkv_block_apply(
+            cfg, p["rwkv"], p["norms"], partial(norm_apply, cfg), x, state)
+        return x, aux
+    window = desc["window"] if window_override is None else window_override
+    if desc["kind"] == "attn":
+        h = attn.multihead_attention(cfg, p["attn"],
+                                     norm_apply(cfg, p["norm1"], x),
+                                     causal=True, window=window)
+    else:
+        h, _ = mamba_mod.mamba_apply(cfg, p["mamba"],
+                                     norm_apply(cfg, p["norm1"], x))
+    x = x + h
+    if desc["ffn"] == "moe":
+        h, aux = moe_mod.moe_apply(cfg, p["ffn"],
+                                   norm_apply(cfg, p["norm2"], x))
+    else:
+        h = mlp_apply(cfg, p["ffn"], norm_apply(cfg, p["norm2"], x))
+    return x + h, aux
+
+
+def decoder_apply(cfg, params, x, *, remat=True, window_override=None):
+    """x: (B, S, D) embeddings -> (hidden (B,S,D), moe_aux scalar)."""
+    pattern, _ = block_pattern(cfg)
+
+    def block_body(carry, block_params):
+        x, aux = carry
+        for pos, desc in enumerate(pattern):
+            x, a = _apply_sublayer(cfg, desc, block_params[pos], x,
+                                   window_override)
+            aux = aux + a
+        return (x, aux), None
+
+    body = jax.checkpoint(block_body) if remat else block_body
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params["blocks"])
+    return norm_apply(cfg, params["final_norm"], x), aux
+
+
+# --------------------------------------------------------------------------
+# decode (one token, cached)
+# --------------------------------------------------------------------------
+
+def init_decode_cache(cfg, batch, max_len, dtype):
+    pattern, n_blocks = block_pattern(cfg)
+
+    def per_block(desc):
+        if desc["kind"] == "rwkv":
+            return rwkv_mod.rwkv_state_init(cfg, batch, dtype)
+        if desc["kind"] == "mamba":
+            return mamba_mod.mamba_state_init(cfg, batch, dtype)
+        return attn.init_kv_cache(cfg, batch, max_len, dtype)
+
+    caches = tuple(
+        jax.tree.map(lambda a: jnp.broadcast_to(a, (n_blocks,) + a.shape),
+                     per_block(desc))
+        for desc in pattern)
+    return {"blocks": caches, "index": jnp.zeros((), jnp.int32)}
+
+
+def decoder_decode(cfg, params, x, cache, *, window_override=None):
+    """x: (B, 1, D); cache from init_decode_cache. -> (hidden, new cache)."""
+    pattern, _ = block_pattern(cfg)
+    index = cache["index"]
+
+    def block_body(x, inp):
+        block_params, block_cache = inp
+        new_caches = []
+        for pos, desc in enumerate(pattern):
+            p, c = block_params[pos], block_cache[pos]
+            if desc["kind"] == "rwkv":
+                # single-token recurrence: exact sequential semantics
+                xn = norm_apply(cfg, p["norms"][0], x)
+                shifted = c["last_tm"][:, None, :].astype(xn.dtype)
+                r, k, v, g, logw, H = rwkv_mod._project_rkvwg(
+                    cfg, p["rwkv"]["tm"], xn, shifted)
+                o, S = rwkv_mod.rwkv_scan_reference(
+                    r, k, v, logw, p["rwkv"]["tm"]["u"], c["S"])
+                B = x.shape[0]
+                o = rwkv_mod._group_norm(o.reshape(B, 1, cfg.d_model),
+                                         p["rwkv"]["tm"]["ln_x_scale"], H)
+                h = (o * jax.nn.silu(g)) @ p["rwkv"]["tm"]["wo"]
+                x = x + h
+                new_last_tm = xn[:, 0, :]
+                xn2 = norm_apply(cfg, p["norms"][1], x)
+                cm = p["rwkv"]["cm"]
+                xk = xn2 + (c["last_cm"][:, None, :] - xn2) * cm["mix_k"]
+                xr = xn2 + (c["last_cm"][:, None, :] - xn2) * cm["mix_r"]
+                kk = jnp.square(jax.nn.relu(xk @ cm["wk"]))
+                x = x + jax.nn.sigmoid(xr @ cm["wr"]) * (kk @ cm["wv"])
+                new_caches.append({"S": S, "last_tm": new_last_tm,
+                                   "last_cm": xn2[:, 0, :]})
+                continue
+            if desc["kind"] == "attn":
+                window = (desc["window"] if window_override is None
+                          else window_override)
+                h, new_kv = attn.decode_attention(
+                    cfg, p["attn"], norm_apply(cfg, p["norm1"], x), c, index,
+                    window=window)
+                x = x + h
+                new_caches.append(new_kv)
+            else:  # mamba
+                xn = norm_apply(cfg, p["norm1"], x)
+                d_in = cfg.ssm_expand * cfg.d_model
+                xz = xn @ p["mamba"]["w_in"]
+                xi, z = xz[..., :d_in], xz[..., d_in:]
+                y, new_state = mamba_mod.mamba_decode_inner(
+                    cfg, p["mamba"], xi, z, c)
+                x = x + (y * jax.nn.silu(z)) @ p["mamba"]["w_out"]
+                new_caches.append(new_state)
+            if desc["ffn"] == "moe":
+                h, _ = moe_mod.moe_apply(cfg, p["ffn"],
+                                         norm_apply(cfg, p["norm2"], x))
+            else:
+                h = mlp_apply(cfg, p["ffn"], norm_apply(cfg, p["norm2"], x))
+            x = x + h
+        return x, tuple(new_caches)
+
+    x, new_blocks = jax.lax.scan(block_body, x,
+                                 (params["blocks"], cache["blocks"]))
+    x = norm_apply(cfg, params["final_norm"], x)
+    return x, {"blocks": new_blocks, "index": index + 1}

@@ -1,0 +1,7 @@
+from repro.optim.adamw import adamw
+from repro.optim.fedprox import proximal_sgd
+from repro.optim.schedules import constant, cosine_decay, warmup_cosine
+from repro.optim.sgd import sgd
+
+__all__ = ["adamw", "proximal_sgd", "constant", "cosine_decay",
+           "warmup_cosine", "sgd"]

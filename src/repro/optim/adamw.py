@@ -1,0 +1,61 @@
+"""AdamW (the paper's client optimizer in §5.1: transformers' default).
+
+Functional optax-like interface:
+    opt = adamw(lr=5e-4)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def adamw(lr=1e-3, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0,
+          schedule=None, moment_dtype=None):
+    """moment_dtype: jnp.bfloat16 halves optimizer-state memory (§Perf);
+    update math still runs in f32."""
+    def init(params):
+        mdt = moment_dtype or jnp.float32
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros_like(p, dtype=mdt), params)
+        return {"m": zeros, "v": jax.tree.map(jnp.copy, zeros),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = lr if schedule is None else lr * schedule(step)
+        mdt = moment_dtype or jnp.float32
+        m = jax.tree.map(lambda m_, g: (b1 * m_.astype(jnp.float32)
+                         + (1 - b1) * g.astype(jnp.float32)).astype(mdt),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: (b2 * v_.astype(jnp.float32)
+                         + (1 - b2) * jnp.square(g.astype(jnp.float32)))
+                         .astype(mdt), state["v"], grads)
+        mh = jax.tree.map(lambda m_: m_.astype(jnp.float32)
+                          / (1 - b1 ** step), m)
+        vh = jax.tree.map(lambda v_: v_.astype(jnp.float32)
+                          / (1 - b2 ** step), v)
+        updates = jax.tree.map(
+            lambda mh_, vh_: -lr_t * mh_ / (jnp.sqrt(vh_) + eps), mh, vh)
+        if weight_decay and params is not None:
+            updates = jax.tree.map(
+                lambda u, p: u - lr_t * weight_decay * p.astype(jnp.float32),
+                updates, params)
+        return updates, {"m": m, "v": v, "step": step}
+
+    return Optimizer(init, update)

@@ -1,0 +1,29 @@
+"""FedProx client optimizer (Li et al. 2018; paper lists FedProx among the
+supported aggregation schemes): local SGD with the proximal term
+mu/2 ||w - w_global||^2 added to the objective, i.e. gradient += mu (w - w0).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import Optimizer
+
+
+def proximal_sgd(lr=0.1, mu=0.01):
+    def init(params):
+        # anchor = the round's global model
+        return {"anchor": jax.tree.map(jnp.copy, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        prox = jax.tree.map(
+            lambda p, a: mu * (p.astype(jnp.float32)
+                               - a.astype(jnp.float32)),
+            params, state["anchor"])
+        g = jax.tree.map(lambda g_, x: g_.astype(jnp.float32) + x,
+                         grads, prox)
+        return (jax.tree.map(lambda g_: -lr * g_, g),
+                {"anchor": state["anchor"], "step": state["step"] + 1})
+
+    return Optimizer(init, update)

@@ -1,0 +1,23 @@
+"""LR schedules (multiplicative factors on the base lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant():
+    return lambda step: 1.0
+
+
+def cosine_decay(total_steps, final_frac=0.1):
+    def f(step):
+        t = jnp.minimum(step / total_steps, 1.0)
+        return final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return f
+
+
+def warmup_cosine(warmup_steps, total_steps, final_frac=0.1):
+    cos = cosine_decay(max(1, total_steps - warmup_steps), final_frac)
+    def f(step):
+        w = jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+        return w * cos(jnp.maximum(step - warmup_steps, 0))
+    return f

@@ -1,0 +1,29 @@
+"""SGD with optional momentum (client-side local steps / server FedAvgM)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import Optimizer
+
+
+def sgd(lr=0.1, momentum=0.0, schedule=None):
+    def init(params):
+        if momentum:
+            return {"m": jax.tree.map(
+                lambda p: jnp.zeros_like(p, jnp.float32), params),
+                "step": jnp.zeros((), jnp.int32)}
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = lr if schedule is None else lr * schedule(step)
+        if momentum:
+            m = jax.tree.map(lambda m_, g: momentum * m_
+                             + g.astype(jnp.float32), state["m"], grads)
+            return (jax.tree.map(lambda m_: -lr_t * m_, m),
+                    {"m": m, "step": step})
+        return (jax.tree.map(lambda g: -lr_t * g.astype(jnp.float32), grads),
+                {"step": step})
+
+    return Optimizer(init, update)

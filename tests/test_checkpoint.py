@@ -1,0 +1,34 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (deserialize_pytree, load_checkpoint,
+                              save_checkpoint, serialize_pytree)
+
+
+def test_round_trip_nested(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.asarray([1, 2], jnp.int32),
+                  "d": (jnp.ones(3), jnp.zeros(1, jnp.uint32))}}
+    blob = serialize_pytree(tree)
+    restored = deserialize_pytree(blob, like=tree)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        assert x.dtype == y.dtype
+
+
+def test_structure_mismatch_raises():
+    blob = serialize_pytree({"a": jnp.ones(2)})
+    with pytest.raises(ValueError):
+        deserialize_pytree(blob, like={"b": jnp.ones(2)})
+
+
+def test_save_load_with_step(tmp_path):
+    tree = {"w": jnp.ones((4, 4))}
+    p = str(tmp_path / "ck.npz")
+    save_checkpoint(p, tree, step=17)
+    restored, step = load_checkpoint(p, like=tree, with_step=True)
+    assert step == 17
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.ones((4, 4)))

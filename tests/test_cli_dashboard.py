@@ -1,0 +1,53 @@
+"""CLI + dashboard rendering (paper §3.3)."""
+import jax.numpy as jnp
+
+from repro.fl import ManagementService, TaskConfig
+from repro.fl.dashboard import (render_metrics, render_task_list,
+                                render_task_view, sparkline)
+
+
+def _svc_with_task(**kw):
+    svc = ManagementService()
+    tid = svc.create_task(
+        TaskConfig("spam-demo", "app", "wf", clients_per_round=2,
+                   n_rounds=3, vg_size=2, **kw),
+        {"w": jnp.zeros(4)})
+    return svc, tid
+
+
+def test_sparkline():
+    assert sparkline([]) == "(no data)"
+    s = sparkline([0, 1, 2, 3])
+    assert len(s) == 4 and s[0] != s[-1]
+
+
+def test_task_list_and_view():
+    svc, tid = _svc_with_task()
+    out = render_task_list(svc)
+    assert "spam-demo" in out and "running" in out
+    view = render_task_view(svc, tid)
+    assert "rounds: 0/3" in view and "fedavg" in view
+
+
+def test_metrics_render():
+    svc, tid = _svc_with_task()
+    svc.metrics.log(tid, 1, accuracy=0.5)
+    svc.metrics.log(tid, 2, accuracy=0.8)
+    out = render_metrics(svc, tid)
+    assert "accuracy" in out and "last=0.8" in out
+
+
+def test_cli_session_round_trip(tmp_path):
+    from repro.fl import cli
+    session = str(tmp_path / "s.pkl")
+    cli.main(["--session", session, "create", "--task-name", "t1",
+              "--app-name", "a", "--workflow", "w",
+              "--clients-per-round", "2", "--rounds", "2"])
+    svc = cli.load_service(session)
+    tasks = svc.list_tasks()
+    assert len(tasks) == 1 and tasks[0].config.task_name == "t1"
+    cli.main(["--session", session, "pause", str(tasks[0].task_id)])
+    svc = cli.load_service(session)
+    assert svc.list_tasks()[0].status.value == "paused"
+    cli.main(["--session", session, "list"])
+    cli.main(["--session", session, "show", str(tasks[0].task_id)])

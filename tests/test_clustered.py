@@ -1,0 +1,58 @@
+"""Clustered FL (beyond-paper, paper §7 future work): similarity math,
+bipartition, and split-on-divergence behaviour."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.clustered import (ClusteredFL, bipartition,
+                                  cosine_similarity_matrix)
+
+
+def _u(v):
+    return {"w": jnp.asarray(v, jnp.float32)}
+
+
+def test_cosine_similarity():
+    sim = cosine_similarity_matrix([_u([1, 0]), _u([0, 1]), _u([2, 0])])
+    np.testing.assert_allclose(sim[0, 2], 1.0, atol=1e-6)
+    np.testing.assert_allclose(sim[0, 1], 0.0, atol=1e-6)
+
+
+def test_bipartition_separates_opposites():
+    sim = cosine_similarity_matrix(
+        [_u([1, 0]), _u([0.9, 0.1]), _u([-1, 0]), _u([-0.9, -0.1])])
+    a, b = bipartition(sim)
+    assert sorted(a + b) == [0, 1, 2, 3]
+    assert {tuple(a), tuple(b)} == {(0, 1), (2, 3)}
+
+
+def test_split_triggers_on_divergent_clients():
+    cfl = ClusteredFL(split_threshold=0.0, min_rounds_before_split=1,
+                      max_clusters=2)
+    params = _u([0.0, 0.0])
+    state = cfl.init(params)
+    # two VGs pulling in opposite directions -> mean similarity < 0 -> split
+    ups = [_u([1.0, 0.0]), _u([-1.0, 0.0])]
+    state, split = cfl.round(state, 0, ups, [1.0, 1.0],
+                             [["c0", "c1"], ["c2", "c3"]])
+    assert split is not None
+    assert len(state["clusters"]) == 2
+    ma, mb = split
+    assert set(ma) == {"c0", "c1"} and set(mb) == {"c2", "c3"}
+    # routing respects membership
+    assert cfl.cluster_of(state, "c0") == 0
+    assert cfl.cluster_of(state, "c2") == 1
+
+
+def test_no_split_when_aligned():
+    cfl = ClusteredFL(split_threshold=0.0, min_rounds_before_split=1)
+    state = cfl.init(_u([0.0, 0.0]))
+    ups = [_u([1.0, 0.1]), _u([0.9, 0.0])]
+    state, split = cfl.round(state, 0, ups, [1.0, 1.0],
+                             [["c0"], ["c1"]])
+    assert split is None
+    assert len(state["clusters"]) == 1
+    # model moved by the mean update with server_lr=1
+    np.testing.assert_allclose(
+        np.asarray(state["clusters"][0]["model"]["w"]),
+        np.asarray((jnp.asarray([1.0, 0.1]) + jnp.asarray([0.9, 0.0])) / 2),
+        atol=1e-6)

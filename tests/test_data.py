@@ -1,0 +1,47 @@
+import numpy as np
+
+from repro.data import (ClientDataAccess, batches, dirichlet_splits,
+                        equal_splits, lm_batches, lm_dataset, spam_dataset)
+
+
+def test_spam_dataset_learnable_signal():
+    d = spam_dataset(n_samples=1000, vocab_size=1024, seq_len=16)
+    spam_frac = (d["tokens"][d["label"] == 1] < 64).mean()
+    ham_frac = (d["tokens"][d["label"] == 0] < 64).mean()
+    assert spam_frac > ham_frac + 0.2
+
+
+def test_equal_splits_partition():
+    d = spam_dataset(n_samples=100, seq_len=8)
+    splits = equal_splits(d, 10)
+    all_idx = np.concatenate(splits)
+    assert len(all_idx) == 100 and len(set(all_idx.tolist())) == 100
+
+
+def test_dirichlet_skew():
+    labels = np.asarray([0] * 500 + [1] * 500)
+    splits = dirichlet_splits(labels, n_clients=10, alpha=0.1, seed=0)
+    assert sum(len(s) for s in splits) == 1000
+    fracs = [labels[s].mean() for s in splits if len(s) > 10]
+    assert np.std(fracs) > 0.2  # strongly non-IID at alpha=0.1
+
+
+def test_client_data_access_fraction():
+    d = spam_dataset(n_samples=1000, seq_len=8)
+    acc = ClientDataAccess(d, n_splits=100, frac=0.2)
+    sample = acc.sample(client_seed=3)
+    assert len(sample["label"]) == 2  # 20% of a 10-element split
+
+
+def test_lm_batches_shapes():
+    stream = lm_dataset(n_tokens=5000, vocab_size=64)
+    it = lm_batches(stream, batch_size=4, seq_len=16)
+    b = next(it)
+    assert b["tokens"].shape == (4, 16)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["targets"][:, :-1])
+
+
+def test_batches_iterator():
+    d = spam_dataset(n_samples=25, seq_len=8)
+    bs = list(batches(d, 10))
+    assert [len(b["label"]) for b in bs] == [10, 10, 5]

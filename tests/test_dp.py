@@ -1,0 +1,72 @@
+"""Differential privacy: clipping, mechanism, and the RDP accountant."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import DPConfig, RdpAccountant, compute_rdp, get_privacy_spent
+from repro.core.dp import (add_gaussian_noise, clip_by_global_norm, global_dp,
+                           local_dp)
+
+
+def test_clip_by_global_norm():
+    u = {"a": jnp.ones((10,)) * 3.0, "b": jnp.ones((5,)) * 4.0}
+    clipped, norm = clip_by_global_norm(u, 1.0)
+    flat = jnp.concatenate([clipped["a"], clipped["b"]])
+    np.testing.assert_allclose(float(jnp.linalg.norm(flat)), 1.0, rtol=1e-5)
+    # below-threshold updates unchanged
+    small = {"a": jnp.ones((4,)) * 0.01}
+    c2, _ = clip_by_global_norm(small, 1.0)
+    np.testing.assert_allclose(np.asarray(c2["a"]), 0.01)
+
+
+def test_local_dp_noise_scale():
+    cfg = DPConfig(mechanism="local", clip_norm=0.5, noise_multiplier=2.0)
+    u = {"w": jnp.zeros((100_000,))}
+    out = local_dp(u, cfg, jax.random.PRNGKey(0))
+    assert abs(float(jnp.std(out["w"])) - 1.0) < 0.02  # z * clip = 1.0
+
+
+def test_global_dp_sensitivity_scaling():
+    cfg = DPConfig(mechanism="global", clip_norm=1.0, noise_multiplier=1.0)
+    u = {"w": jnp.zeros((100_000,))}
+    out = global_dp(u, cfg, n_clients=10, key=jax.random.PRNGKey(0))
+    assert abs(float(jnp.std(out["w"])) - 0.1) < 0.01
+
+
+def test_rdp_full_batch_matches_closed_form():
+    """q=1: RDP(alpha) = alpha / (2 z^2) exactly."""
+    z = 1.3
+    orders = (2, 4, 8)
+    rdp = compute_rdp(1.0, z, steps=1, orders=orders)
+    for a, r in zip(orders, rdp):
+        np.testing.assert_allclose(r, a / (2 * z * z), rtol=1e-9)
+
+
+def test_accountant_monotone_and_subsampling_helps():
+    eps_full, _ = get_privacy_spent(compute_rdp(1.0, 1.0, 10), 1e-5)
+    eps_sub, _ = get_privacy_spent(compute_rdp(0.1, 1.0, 10), 1e-5)
+    assert eps_sub < eps_full
+    eps_5, _ = get_privacy_spent(compute_rdp(0.1, 1.0, 5), 1e-5)
+    assert eps_5 < eps_sub
+
+
+@settings(deadline=None, max_examples=20)
+@given(q=st.floats(0.01, 1.0), z=st.floats(0.3, 5.0),
+       steps=st.integers(1, 50))
+def test_epsilon_positive_finite(q, z, steps):
+    eps, order = get_privacy_spent(compute_rdp(q, z, steps), 1e-5)
+    assert eps > 0 and math.isfinite(eps) and order is not None
+
+
+def test_accountant_tracks_rounds():
+    acc = RdpAccountant(DPConfig(mechanism="local", noise_multiplier=1.0),
+                        sample_rate=0.32)
+    acc.step(5)
+    e5 = acc.epsilon()
+    acc.step(5)
+    assert acc.epsilon() > e5

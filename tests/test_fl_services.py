@@ -1,0 +1,142 @@
+"""Service layer: attestation, selection criteria, task lifecycle,
+permissions, async FedBuff server behaviour."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.orchestrator import ClientResult
+from repro.fl import (AttestationAuthority, AuthenticationService,
+                      ManagementService, SelectionCriteria, TaskConfig,
+                      TaskStatus)
+from repro.fl.server import PermissionError_
+
+
+def _mk_service_task(mode="sync", n_rounds=3, cpr=4, **task_kw):
+    svc = ManagementService()
+    model = {"w": jnp.zeros(8, jnp.float32)}
+    cfg = TaskConfig("t", "app", "wf", clients_per_round=cpr,
+                     n_rounds=n_rounds, mode=mode, vg_size=2, **task_kw)
+    tid = svc.create_task(cfg, model)
+    return svc, tid, model
+
+
+def _register(svc, tid, n=6, os="linux"):
+    auth = AttestationAuthority()
+    for i in range(n):
+        cert = auth.issue(f"c{i}", os=os)
+        assert svc.register_client(tid, f"c{i}",
+                                   {"os": os, "n_samples": 10,
+                                    "battery": 0.9}, cert)
+
+
+class TestAuth:
+    def test_valid_and_tampered(self):
+        auth = AttestationAuthority()
+        svc = AuthenticationService()
+        cert = auth.issue("dev1")
+        assert svc.verify(cert)
+        bad = {"body": dict(cert["body"], verdict="MEETS_STRONG_INTEGRITY"),
+               "signature": cert["signature"]}
+        assert not svc.verify(bad)          # signature no longer matches
+        assert svc.rejections == 1
+
+    def test_low_integrity_rejected(self):
+        auth = AttestationAuthority()
+        svc = AuthenticationService()
+        cert = auth.issue("dev1", verdict="NO_INTEGRITY")
+        assert not svc.verify(cert)
+
+    def test_wrong_authority_key(self):
+        rogue = AttestationAuthority(key=b"rogue")
+        svc = AuthenticationService()
+        assert not svc.verify(rogue.issue("dev1"))
+
+
+class TestSelection:
+    def test_criteria_gate(self):
+        svc, tid, _ = _mk_service_task()
+        task = svc.get_task(tid)
+        task.config.selection = SelectionCriteria(allowed_os=("android",),
+                                                  min_samples=5)
+        auth = AttestationAuthority()
+        ok = svc.register_client(tid, "a", {"os": "android", "n_samples": 9,
+                                            "battery": 1.0},
+                                 auth.issue("a", os="android"))
+        assert ok
+        assert not svc.register_client(
+            tid, "b", {"os": "linux", "n_samples": 9, "battery": 1.0},
+            auth.issue("b"))
+        assert not svc.register_client(
+            tid, "c", {"os": "android", "n_samples": 1, "battery": 1.0},
+            auth.issue("c", os="android"))
+
+    def test_attestation_required(self):
+        svc, tid, _ = _mk_service_task()
+        assert not svc.register_client(tid, "x", {"os": "linux",
+                                                  "n_samples": 10})
+
+    def test_cohort_selection_size(self):
+        svc, tid, _ = _mk_service_task(cpr=4)
+        _register(svc, tid, n=10)
+        _, cohort = svc.begin_round(tid)
+        assert len(cohort) == 4
+        assert len(set(cohort)) == 4
+
+
+class TestLifecycle:
+    def test_sync_rounds_to_completion(self):
+        svc, tid, model = _mk_service_task(n_rounds=2, cpr=3)
+        _register(svc, tid, n=5)
+        for _ in range(2):
+            _, cohort = svc.begin_round(tid)
+            for cid in cohort:
+                svc.submit_update(tid, cid, {"w": jnp.ones(8) * 0.1}, 10,
+                                  {"loss": 1.0})
+        task = svc.get_task(tid)
+        assert task.status is TaskStatus.COMPLETED
+        assert task.round_idx == 2
+        np.testing.assert_allclose(np.asarray(task.model["w"]), 0.2,
+                                   atol=1e-4)
+
+    def test_pause_cancel_permissions(self):
+        svc, tid, _ = _mk_service_task()
+        with pytest.raises(PermissionError_):
+            svc.pause_task(tid, user="intruder")
+        svc.pause_task(tid)  # owner
+        assert svc.get_task(tid).status is TaskStatus.PAUSED
+        svc.resume_task(tid)
+        svc.cancel_task(tid)
+        assert svc.get_task(tid).status is TaskStatus.CANCELLED
+
+    def test_shared_permissions(self):
+        svc, tid, _ = _mk_service_task(permissions=("alice",))
+        svc.pause_task(tid, user="alice")  # granted via task permissions
+
+
+class TestAsync:
+    def test_fedbuff_steps_on_buffer_fill(self):
+        svc, tid, _ = _mk_service_task(mode="async", n_rounds=2,
+                                       buffer_size=3)
+        _register(svc, tid, n=4)
+        stepped = []
+        for i in range(6):
+            stepped.append(svc.submit_update(
+                tid, f"c{i % 4}", {"w": jnp.ones(8)}, 1))
+        assert stepped == [False, False, True, False, False, True]
+        assert svc.get_task(tid).status is TaskStatus.COMPLETED
+
+    def test_metrics_and_accountant(self):
+        from repro.core.dp import DPConfig
+        svc, tid, _ = _mk_service_task(
+            n_rounds=1, cpr=2,
+            dp=DPConfig(mechanism="local", clip_norm=0.5,
+                        noise_multiplier=1.0))
+        _register(svc, tid, n=4)
+        _, cohort = svc.begin_round(tid)
+        for cid in cohort:
+            svc.submit_update(tid, cid, {"w": jnp.ones(8) * 0.1}, 5,
+                              {"loss": 2.0})
+        eps = svc.epsilon(tid)
+        assert eps is not None and eps > 0
+        rounds, vals = svc.metrics.series(tid, "loss")
+        assert vals == [2.0]

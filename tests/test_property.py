@@ -1,0 +1,74 @@
+"""Hypothesis property tests on system invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.kdf import kdf_u32, mask_stream, pair_seed
+from repro.core.masking import modular_sum
+from repro.core.quantize import dequantize, quantize
+from repro.core.virtual_groups import (make_virtual_groups, pairwise_cost,
+                                       recommended_vg_size)
+
+
+@settings(deadline=None, max_examples=30)
+@given(k0=st.integers(0, 2**32 - 1), k1=st.integers(0, 2**32 - 1),
+       c=st.integers(0, 2**32 - 1))
+def test_kdf_deterministic_and_sensitive(k0, k1, c):
+    a = int(kdf_u32(jnp.uint32(k0), jnp.uint32(k1), jnp.uint32(c)))
+    b = int(kdf_u32(jnp.uint32(k0), jnp.uint32(k1), jnp.uint32(c)))
+    assert a == b
+    flipped = int(kdf_u32(jnp.uint32(k0 ^ 1), jnp.uint32(k1),
+                          jnp.uint32(c)))
+    assert a != flipped  # 2^-32 failure probability; fine for a hash test
+
+
+@settings(deadline=None, max_examples=20)
+@given(seed=st.integers(0, 2**31 - 1), off=st.integers(0, 2**20))
+def test_mask_stream_position_addressable(seed, off):
+    """stream(offset)[k] == stream(0)[offset+k] — the property the sharded
+    per-pod masking relies on."""
+    s = pair_seed(jnp.asarray([seed, seed ^ 77], jnp.uint32), 0, 1)
+    a = mask_stream(s, off, 8)
+    b = mask_stream(s, 0, off + 8)[off:]
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(deadline=None, max_examples=30)
+@given(x=st.floats(-10, 10), bits=st.integers(4, 24),
+       clip=st.floats(0.1, 4.0))
+def test_quantize_round_trip_bound(x, bits, clip):
+    q = quantize(jnp.asarray([x], jnp.float32), clip, bits)
+    back = float(dequantize(q, clip, bits)[0])
+    expect = float(np.clip(x, -clip, clip))
+    assert abs(back - expect) <= 2 * clip / (2**bits - 1) + 1e-6
+    assert 0 <= int(q[0]) < 2**bits
+
+
+@settings(deadline=None, max_examples=20)
+@given(perm_seed=st.integers(0, 100))
+def test_modular_sum_permutation_invariant(perm_seed):
+    rng = np.random.RandomState(perm_seed)
+    p = rng.randint(0, 2**32, (6, 50), dtype=np.uint32)
+    a = modular_sum(jnp.asarray(p))
+    b = modular_sum(jnp.asarray(p[rng.permutation(6)]))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(deadline=None, max_examples=30)
+@given(n=st.integers(1, 500), g=st.integers(2, 64))
+def test_vg_partition_covers_all_clients(n, g):
+    plan = make_virtual_groups(range(n), g, seed=0)
+    members = [c for grp in plan.groups for c in grp.members]
+    assert sorted(members) == list(range(n))
+    if n > max(g, 2):
+        assert all(len(grp.members) >= 2 for grp in plan.groups)
+
+
+@settings(deadline=None, max_examples=30)
+@given(n=st.integers(8, 100_000))
+def test_vg_cost_reduction(n):
+    g = recommended_vg_size(n)
+    assert pairwise_cost(n, g) <= pairwise_cost(n)
+    if n > 200:
+        assert pairwise_cost(n, g) < 0.2 * pairwise_cost(n)

@@ -1,0 +1,71 @@
+"""Robustness behaviours: client dropouts (VGs formed from the surviving
+cohort, so masks still cancel), and DGA down-weighting corrupted clients."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ClientResult, FedAvg, make_strategy, run_sync_round
+from repro.core.strategies import DGA
+from repro.fl import ManagementService, TaskConfig, TaskStatus
+
+
+def _results(updates, losses=None):
+    return {i: ClientResult(update={"w": jnp.asarray(u, jnp.float32)},
+                            n_samples=10,
+                            metrics={"loss": (losses or {}).get(i, 1.0)})
+            for i, u in updates.items()}
+
+
+def test_round_completes_with_dropouts():
+    """VGs are formed from the clients that actually submitted — a dropout
+    never leaves an unmatched mask in the aggregate."""
+    params = {"w": jnp.zeros(4)}
+    strat = FedAvg()
+    state = strat.init_state(params)
+    # 5 of an intended 8 clients submitted
+    res = _results({i: [0.1 * (i + 1)] * 4 for i in range(5)})
+    params, state, info = run_sync_round(params, strat, state, res,
+                                         round_idx=0, vg_size=4)
+    assert info.n_participants == 5
+    expected = np.mean([[0.1 * (i + 1)] * 4 for i in range(5)], axis=0)
+    np.testing.assert_allclose(np.asarray(params["w"]), expected, atol=1e-4)
+
+
+def test_server_ignores_unselected_submission():
+    svc = ManagementService()
+    tid = svc.create_task(TaskConfig("t", "a", "w", clients_per_round=2,
+                                     n_rounds=1, vg_size=2),
+                          {"w": jnp.zeros(2)})
+    from repro.fl import AttestationAuthority
+    auth = AttestationAuthority()
+    for i in range(4):
+        svc.register_client(tid, f"c{i}", {"os": "linux", "n_samples": 5,
+                                           "battery": 1.0},
+                            auth.issue(f"c{i}"))
+    _, cohort = svc.begin_round(tid)
+    outsider = next(f"c{i}" for i in range(4) if f"c{i}" not in cohort)
+    assert not svc.submit_update(tid, outsider, {"w": jnp.ones(2)}, 5)
+    for cid in cohort:
+        svc.submit_update(tid, cid, {"w": jnp.ones(2)}, 5)
+    assert svc.get_task(tid).status is TaskStatus.COMPLETED
+
+
+def test_dga_resists_corrupted_clients_better_than_fedavg():
+    """a corrupted (high-loss, garbage-update) client: DGA's loss-softmax
+    weighting suppresses it, FedAvg averages it in."""
+    good = {"w": jnp.asarray([1.0, 1.0])}
+    bad = {"w": jnp.asarray([-50.0, 50.0])}
+    ups = [good, good, good, bad]
+    weights = [1.0, 1.0, 1.0, 1.0]
+    metrics = [{"loss": 0.2}, {"loss": 0.25}, {"loss": 0.22},
+               {"loss": 8.0}]
+    avg = FedAvg().combine(ups, weights, metrics)
+    dga = DGA(beta=2.0).combine(ups, weights, metrics)
+    err_avg = float(jnp.linalg.norm(avg["w"] - jnp.asarray([1.0, 1.0])))
+    err_dga = float(jnp.linalg.norm(dga["w"] - jnp.asarray([1.0, 1.0])))
+    assert err_dga < err_avg / 10, (err_avg, err_dga)
+
+
+def test_strategy_registry_fedavgm():
+    s = make_strategy("fedavgm")
+    assert s.momentum == 0.9

@@ -1,0 +1,67 @@
+"""Roofline HLO analyzer: shape parsing, dot flops, while-trip recursion."""
+import textwrap
+
+from repro.launch.roofline import (analyze_hlo, parse_module, shape_bytes)
+
+TOY = textwrap.dedent("""\
+    HloModule jit_f, entry_computation_layout={(f32[8,16])->f32[8,16]}
+
+    %body.1 (param.0: (s32[], f32[8,16], f32[4,16,16])) -> (s32[], f32[8,16], f32[4,16,16]) {
+      %param.0 = (s32[], f32[8,16], f32[4,16,16]) parameter(0)
+      %gte.0 = s32[] get-tuple-element(%param.0), index=0
+      %gte.1 = f32[8,16]{1,0} get-tuple-element(%param.0), index=1
+      %gte.2 = f32[4,16,16]{2,1,0} get-tuple-element(%param.0), index=2
+      %ds = f32[1,16,16]{2,1,0} dynamic-slice(%gte.2, %gte.0), dynamic_slice_sizes={1,16,16}
+      %w = f32[16,16]{1,0} bitcast(%ds)
+      %dot.1 = f32[8,16]{1,0} dot(%gte.1, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[8,16]{1,0} all-reduce(%dot.1), replica_groups={}
+      ROOT %tup = (s32[], f32[8,16], f32[4,16,16]) tuple(%gte.0, %ar, %gte.2)
+    }
+
+    %cond.1 (param.1: (s32[], f32[8,16], f32[4,16,16])) -> pred[] {
+      %param.1 = (s32[], f32[8,16], f32[4,16,16]) parameter(0)
+      %gte.3 = s32[] get-tuple-element(%param.1), index=0
+      %c4 = s32[] constant(4)
+      ROOT %lt = pred[] compare(%gte.3, %c4), direction=LT
+    }
+
+    ENTRY %main (p0: f32[8,16], p1: f32[4,16,16]) -> f32[8,16] {
+      %p0 = f32[8,16]{1,0} parameter(0)
+      %p1 = f32[4,16,16]{2,1,0} parameter(1)
+      %c0 = s32[] constant(0)
+      %t = (s32[], f32[8,16], f32[4,16,16]) tuple(%c0, %p0, %p1)
+      %w.1 = (s32[], f32[8,16], f32[4,16,16]) while(%t), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"4"}}
+      ROOT %out = f32[8,16]{1,0} get-tuple-element(%w.1), index=1
+    }
+    """)
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[8,16]{1,0}") == 8 * 16 * 4
+    assert shape_bytes("bf16[2,3]") == 12
+    assert shape_bytes("(f32[4], u32[2,2])") == 16 + 16
+    assert shape_bytes("pred[]") == 1
+
+
+def test_parse_module_structure():
+    mod = parse_module(TOY)
+    assert mod["entry"] == "main"
+    assert set(mod["computations"]) == {"body.1", "cond.1", "main"}
+    body = mod["computations"]["body.1"]
+    assert any(op.opcode == "dot" for op in body.ops)
+
+
+def test_while_trip_multiplication():
+    stats = analyze_hlo(TOY)
+    # dot flops = 2*8*16*16 = 4096, x4 trips
+    assert stats["flops"] == 4 * 4096
+    # all-reduce operand f32[8,16] = 512B, x4 trips
+    assert stats["collective_bytes"] == 4 * 512
+    assert stats["n_collectives"] == 4
+    # dynamic-slice counted slice-sized (2 x 1KiB), not operand-sized (4KiB)
+    assert stats["memory_bytes"] < 4 * (10 * 4096)
+
+
+def test_collective_kinds():
+    stats = analyze_hlo(TOY)
+    assert stats["collective_by_kind"] == {"all-reduce": 4 * 512}

@@ -1,0 +1,97 @@
+"""Secure aggregation invariants (paper §4.1): exact mask cancellation,
+two-stage correctness, headroom enforcement — property-tested."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (SecureAggConfig, check_headroom, dequantize_sum,
+                        make_virtual_groups, quantize,
+                        secure_aggregate_round)
+from repro.core.masking import apply_mask, modular_sum, net_mask
+from repro.core.masking import net_mask_traced
+
+
+@settings(deadline=None, max_examples=25)
+@given(n=st.integers(2, 9), size=st.integers(1, 300),
+       seed=st.integers(0, 2**31 - 1))
+def test_mask_cancellation_exact(n, size, seed):
+    """sum of masked payloads == sum of plain payloads, bit-exact."""
+    rng = np.random.RandomState(seed % 10_000)
+    round_seed = jnp.asarray(rng.randint(0, 2**31, 2), jnp.uint32)
+    qs = jnp.asarray(rng.randint(0, 2**32, (n, size), dtype=np.uint32))
+    payloads = jnp.stack([apply_mask(qs[i], i, n, round_seed)
+                          for i in range(n)])
+    assert jnp.array_equal(modular_sum(payloads), modular_sum(qs))
+
+
+@settings(deadline=None, max_examples=10)
+@given(n=st.integers(2, 8), seed=st.integers(0, 1000))
+def test_single_payload_is_masked(n, seed):
+    """an individual masked payload must differ from the plain update
+    (privacy: the server cannot read a single client's update)."""
+    rng = np.random.RandomState(seed)
+    round_seed = jnp.asarray(rng.randint(0, 2**31, 2), jnp.uint32)
+    q = jnp.asarray(rng.randint(0, 2**20, 256, dtype=np.uint32))
+    y = apply_mask(q, 0, n, round_seed)
+    assert not jnp.array_equal(y, q)
+    # and the mask looks high-entropy: most words differ
+    assert float(jnp.mean((y != q).astype(jnp.float32))) > 0.99
+
+
+def test_net_mask_traced_matches_untraced():
+    seed = jnp.asarray([5, 6], jnp.uint32)
+    n, size = 6, 128
+    for i in range(n):
+        a = net_mask(i, n, seed, size)
+        b = net_mask_traced(jnp.uint32(i), jnp.uint32(0), n, seed, size)
+        assert jnp.array_equal(a, b), i
+
+
+def test_two_stage_recovers_cohort_mean(rng):
+    updates = {i: {"w": jnp.asarray(rng.uniform(-0.4, 0.4, (8, 3)),
+                                    jnp.float32)}
+               for i in range(12)}
+    plan = make_virtual_groups(list(updates), vg_size=4, seed=0)
+    assert len(plan.groups) == 3
+    agg = secure_aggregate_round(updates, plan,
+                                 jnp.asarray([1, 2], jnp.uint32))
+    true = np.mean([np.asarray(u["w"]) for u in updates.values()], axis=0)
+    np.testing.assert_allclose(np.asarray(agg["w"]), true, atol=1e-5)
+
+
+def test_kernel_path_matches_reference_path(rng):
+    updates = {i: {"w": jnp.asarray(rng.uniform(-0.4, 0.4, 300), jnp.float32)}
+               for i in range(6)}
+    plan = make_virtual_groups(list(updates), vg_size=3, seed=0)
+    seed = jnp.asarray([9, 9], jnp.uint32)
+    a = secure_aggregate_round(updates, plan, seed,
+                               SecureAggConfig(use_kernels=False))
+    b = secure_aggregate_round(updates, plan, seed,
+                               SecureAggConfig(use_kernels=True))
+    np.testing.assert_array_equal(np.asarray(a["w"]), np.asarray(b["w"]))
+
+
+def test_headroom_guard():
+    check_headroom(20, 4096)
+    with pytest.raises(ValueError):
+        check_headroom(20, 8192)
+    with pytest.raises(ValueError):
+        check_headroom(31, 3)
+
+
+@settings(deadline=None, max_examples=20)
+@given(bits=st.integers(8, 24), n=st.integers(1, 64),
+       seed=st.integers(0, 10_000))
+def test_quantized_aggregate_error_bound(bits, n, seed):
+    """|dequantized cohort mean - true mean| <= quantization resolution."""
+    rng = np.random.RandomState(seed)
+    clip = 1.0
+    xs = rng.uniform(-clip, clip, (n, 64)).astype(np.float32)
+    qs = jnp.stack([quantize(jnp.asarray(x), clip, bits) for x in xs])
+    s = modular_sum(qs)
+    mean = dequantize_sum(s, n, clip, bits)
+    res = 2 * clip / (2**bits - 1)
+    assert np.max(np.abs(np.asarray(mean) - xs.mean(0))) <= res

@@ -1,0 +1,110 @@
+"""End-to-end behaviour tests: federated spam training through the full
+service stack (SDK -> selection -> secure agg -> master agg) must learn;
+sync-vs-async duration; DP variant runs and reports epsilon."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import deserialize_pytree
+from repro.configs import get_config
+from repro.core.dp import DPConfig
+from repro.data import ClientDataAccess, batches, spam_dataset
+from repro.fl import (ManagementService, SimClient, TaskConfig,
+                      run_async_simulation, run_sync_simulation)
+from repro.models import (classifier_init, classify_logits, classify_loss,
+                          init_params)
+from repro.optim import sgd
+from repro.optim.adamw import apply_updates
+
+CFG = get_config("bert-tiny-spam").replace(vocab_size=1024, d_model=64,
+                                           d_ff=128)
+
+
+@pytest.fixture(scope="module")
+def spam_world():
+    key = jax.random.PRNGKey(0)
+    model0 = {"trunk": init_params(CFG, key),
+              "head": classifier_init(CFG, jax.random.fold_in(key, 1))}
+    data = spam_dataset(n_samples=3000, vocab_size=1024, seq_len=16)
+    test = spam_dataset(n_samples=400, vocab_size=1024, seq_len=16, seed=99)
+    access = ClientDataAccess(data, n_splits=20, frac=1.0)
+    opt = sgd(lr=0.5)
+
+    @jax.jit
+    def local_train(model, batch):
+        loss, grads = jax.value_and_grad(
+            lambda m: classify_loss(CFG, m["trunk"], m["head"], batch))(model)
+        upd, _ = opt.update(grads, opt.init(model), model)
+        return apply_updates(model, upd), loss
+
+    def make_trainer(i):
+        def trainer(blob, round_idx):
+            model = deserialize_pytree(blob, like=model0)
+            d = access.sample(client_seed=round_idx * 1000 + i)
+            new, n = model, 0
+            for b in batches(d, 16, seed=round_idx):
+                b = {k: jnp.asarray(v) for k, v in b.items()}
+                new, loss = local_train(new, b)
+                n += len(b["label"])
+            update = jax.tree.map(lambda a, b_: np.asarray(a) - np.asarray(b_),
+                                  new, model)
+            return update, n, {"loss": float(loss)}
+        return trainer
+
+    @jax.jit
+    def test_acc(model):
+        logits = classify_logits(CFG, model["trunk"], model["head"],
+                                 {k: jnp.asarray(v) for k, v in test.items()})
+        return jnp.mean(jnp.argmax(logits, -1) == test["label"])
+
+    return dict(model0=model0, make_trainer=make_trainer, test_acc=test_acc)
+
+
+def _clients(world, n=8, **kw):
+    from repro.fl.simulator import make_heterogeneous_clients
+    return make_heterogeneous_clients(n, world["make_trainer"], **kw)
+
+
+def test_sync_federated_training_learns(spam_world):
+    svc = ManagementService()
+    tid = svc.create_task(
+        TaskConfig("spam", "app", "wf", clients_per_round=6, n_rounds=6,
+                   vg_size=3), spam_world["model0"])
+    res = run_sync_simulation(svc, tid, _clients(spam_world, 8),
+                              eval_fn=spam_world["test_acc"])
+    accs = [h["eval_accuracy"] for h in res.metrics_history]
+    assert accs[-1] > 0.8, accs
+    assert len(res.round_durations) == 6
+
+
+def test_async_steps_faster_than_sync(spam_world):
+    """Fig. 11 center: async per-iteration duration < sync (no straggler
+    barrier)."""
+    svc = ManagementService()
+    t_sync = svc.create_task(
+        TaskConfig("s", "app", "wf", clients_per_round=8, n_rounds=4,
+                   vg_size=4), spam_world["model0"])
+    r_sync = run_sync_simulation(svc, t_sync, _clients(spam_world, 8,
+                                                       straggler_frac=0.3))
+    svc2 = ManagementService()
+    t_async = svc2.create_task(
+        TaskConfig("a", "app", "wf", clients_per_round=8, n_rounds=4,
+                   mode="async", buffer_size=8), spam_world["model0"])
+    r_async = run_async_simulation(svc2, t_async,
+                                   _clients(spam_world, 8,
+                                            straggler_frac=0.3))
+    assert np.mean(r_async.round_durations) < np.mean(r_sync.round_durations)
+
+
+def test_dp_task_reports_epsilon(spam_world):
+    svc = ManagementService()
+    tid = svc.create_task(
+        TaskConfig("dp", "app", "wf", clients_per_round=4, n_rounds=2,
+                   vg_size=2,
+                   dp=DPConfig(mechanism="local", clip_norm=0.5,
+                               noise_multiplier=1.0)),
+        spam_world["model0"])
+    run_sync_simulation(svc, tid, _clients(spam_world, 8))
+    eps = svc.epsilon(tid)
+    assert eps is not None and 0 < eps < 100
