@@ -1,0 +1,16 @@
+# Tier-1 verification (ROADMAP.md): full test suite, dev deps included so
+# the hypothesis property tests actually run (they importorskip otherwise).
+PY ?= python
+
+.PHONY: verify test deps bench-cohort
+
+deps:
+	$(PY) -m pip install -r requirements-dev.txt
+
+verify: deps test
+
+test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+bench-cohort:
+	PYTHONPATH=src $(PY) -m benchmarks.bench_cohort

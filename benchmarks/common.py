@@ -4,6 +4,7 @@ AdamW 5e-4), reusable across Fig. 11 benchmarks."""
 from __future__ import annotations
 
 import time
+import zlib
 
 import jax
 import jax.numpy as jnp
@@ -31,15 +32,19 @@ class SpamWorld:
     """Paper §5.1 setup on synthetic enron-like data."""
 
     def __init__(self, vocab=4096, d_model=128, seq_len=32, n_train=10_000,
-                 lr=5e-4, batch_size=8, n_splits=50, frac=0.2, seed=0):
+                 lr=5e-4, batch_size=8, n_splits=50, frac=0.2, seed=0,
+                 **cfg_overrides):
         # paper: 100 splits of enron (~330/split), 20% => ~67 samples/round.
         # synthetic: 50 splits of 10k => 200/split, 20% => 40 samples/round
         # (same order of local work per client per round).
+        # cfg_overrides: extra ArchConfig.replace fields (d_ff, head_dim, …)
+        # for reduced "sim-scale" worlds in scale studies.
         self.cfg = get_config("bert-tiny-spam").replace(vocab_size=vocab,
-                                                        d_model=d_model)
+                                                        d_model=d_model,
+                                                        **cfg_overrides)
         key = jax.random.PRNGKey(seed)
         self.model0 = {
-            "trunk": init_params(self.cfg, key),
+            "trunk": init_params(self.cfg, key, max_positions=seq_len),
             "head": classifier_init(self.cfg, jax.random.fold_in(key, 1)),
         }
         self.train = spam_dataset(n_samples=n_train, vocab_size=vocab,
@@ -49,6 +54,7 @@ class SpamWorld:
         self.access = ClientDataAccess(self.train, n_splits=n_splits,
                                        frac=frac, seed=seed)
         self.batch_size = batch_size
+        self.lr = lr
         opt = adamw(lr=lr)
         cfg = self.cfg
 
@@ -74,6 +80,48 @@ class SpamWorld:
 
     def test_accuracy(self, model) -> float:
         return float(self._acc(model, self._test_batch))
+
+    def engine_batch_fn(self, local_steps: int, batch_size: int):
+        """Uniform-shape per-client data: sample the client's §5.1 split,
+        then draw exactly local_steps x batch_size items (with replacement)
+        so every client's round is the same stacked shape — the contract
+        the vectorized cohort paths need. Deterministic in (cid, round)."""
+        splits = self.access.splits
+        frac = self.access.frac
+
+        def batch_fn(cid, round_idx):
+            # §5.1 protocol, flattened to one cheap RNG draw: pick the
+            # client's split, restrict to its 20% window, then draw the
+            # (steps, B) round batch with replacement. Deterministic in
+            # (cid, round); called once per client per round by BOTH the
+            # serial and vectorized paths, so it must stay off the
+            # per-client critical path (~50us, no choice(replace=False)).
+            tail = str(cid).rsplit("-", 1)[-1]
+            i = int(tail) if tail.isdigit() else zlib.crc32(
+                str(cid).encode()) % 100_003
+            rng = np.random.RandomState((round_idx * 131071 + i * 131 + 7)
+                                        % (2 ** 31 - 1))
+            split = splits[rng.randint(len(splits))]
+            k = max(1, int(len(split) * frac))
+            pool = split[rng.randint(0, len(split), size=k)]
+            idx = pool[rng.randint(0, k, size=(local_steps, batch_size))]
+            return {k_: v[idx] for k_, v in self.train.items()}
+        return batch_fn
+
+    def make_engine(self, local_steps: int = 5, batch_size: int | None = None,
+                    mesh=None, axis: str = "data"):
+        """CohortEngine running the paper-§5.1 local protocol (AdamW at
+        self.lr) with uniform local work, ready for the simulator fast
+        paths and the cohort benchmark."""
+        from repro.core.cohort_engine import CohortEngine, LocalTrainSpec
+        cfg = self.cfg
+        bs = batch_size or self.batch_size
+        spec = LocalTrainSpec(
+            loss_fn=lambda m, b: classify_loss(cfg, m["trunk"], m["head"], b),
+            optimizer=adamw(lr=self.lr), local_steps=local_steps)
+        return CohortEngine(spec, self.engine_batch_fn(local_steps, bs),
+                            template_params=self.model0, mesh=mesh,
+                            axis=axis)
 
     def make_trainer(self, i: int):
         """Paper-protocol client trainer for the SDK/simulator."""

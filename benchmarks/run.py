@@ -16,8 +16,8 @@ import argparse
 import sys
 import time
 
-from benchmarks import (bench_async, bench_kernels, bench_scaling,
-                        bench_secureagg, bench_spam)
+from benchmarks import (bench_async, bench_cohort, bench_kernels,
+                        bench_scaling, bench_secureagg, bench_spam)
 
 SUITES = [
     ("fig11_left", bench_spam),
@@ -25,6 +25,7 @@ SUITES = [
     ("fig11_right", bench_scaling),
     ("secureagg_vg", bench_secureagg),
     ("kernels", bench_kernels),
+    ("cohort_engine", bench_cohort),
 ]
 
 

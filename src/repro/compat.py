@@ -1,0 +1,78 @@
+"""JAX version compatibility shims.
+
+Supported range: JAX 0.4.x – 0.5.x. The repo pins 0.4.37 in the container,
+but the mesh-introspection helpers below are written against the 0.5 API so
+an upgrade is a no-op.
+
+``get_abstract_mesh`` is the load-bearing shim: the §Perf
+with-sharding-constraint helpers (models/model.py, models/attention.py,
+models/moe.py, launch/fl_step.py) ask "is a mesh ambient, and which axes
+does it have?" before pinning activation layouts. On JAX >= 0.5 that is
+``jax.sharding.get_abstract_mesh()``; on 0.4.x the equivalent ambient-mesh
+state for a ``with mesh:`` context lives at
+``jax.interpreters.pxla.thread_resources.env.physical_mesh``. Both are
+normalized to *None when unmeshed* so call sites stay a plain
+``if mesh is None: return x`` no-op on CPU smoke tests.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def get_abstract_mesh():
+    """Return the ambient (abstract or physical) mesh, or None if unmeshed.
+
+    The returned object — when not None — has ``axis_names`` and
+    ``axis_sizes`` attributes on every supported JAX version; use
+    :func:`mesh_axis_sizes` for a name->size dict.
+    """
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is not None:
+        try:
+            mesh = get()
+        except Exception:
+            mesh = None
+        if mesh is not None and getattr(mesh, "axis_names", ()):
+            return mesh
+        # fall through: 0.5's AbstractMesh() sentinel for "no mesh" has no
+        # axes; a ``with mesh:`` context may still be visible below.
+    try:
+        from jax.interpreters import pxla
+        mesh = pxla.thread_resources.env.physical_mesh
+    except Exception:
+        return None
+    if mesh is None or getattr(mesh, "empty", True):
+        return None
+    return mesh
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    """{axis_name: size} for any mesh object returned above."""
+    if mesh is None:
+        return {}
+    return dict(zip(mesh.axis_names, mesh.axis_sizes))
+
+
+def set_mesh(mesh):
+    """Context manager making ``mesh`` ambient: ``jax.set_mesh`` on >= 0.5,
+    the mesh's own ``with mesh:`` context (physical_mesh) on 0.4.x. Either
+    way :func:`get_abstract_mesh` sees it inside the block."""
+    setter = getattr(jax, "set_mesh", None)
+    if setter is not None:
+        return setter(mesh)
+    return mesh
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """``jax.make_mesh`` with Auto axis types where the API supports them
+    (>= 0.5); 0.4.x meshes are implicitly Auto, so omitting is equivalent."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    kw = {} if devices is None else {"devices": devices}
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(
+                axis_shapes, axis_names,
+                axis_types=(axis_type.Auto,) * len(axis_names), **kw)
+        except TypeError:
+            pass
+    return jax.make_mesh(axis_shapes, axis_names, **kw)

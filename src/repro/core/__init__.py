@@ -1,10 +1,13 @@
 """Project Florida's primary contribution: two-stage secure aggregation over
 Virtual Groups, pairwise-mask protocol, DP, and aggregation strategies."""
+from repro.core.cohort_engine import (CohortEngine, LocalTrainSpec,
+                                      make_local_update, serial_cohort,
+                                      shard_cohort, vmap_cohort)
 from repro.core.dp import DPConfig, RdpAccountant, compute_rdp, get_privacy_spent
 from repro.core.kdf import kdf_u32, mask_stream, pair_seed
 from repro.core.masking import apply_mask, modular_sum, net_mask
 from repro.core.orchestrator import (AsyncServer, ClientResult, RoundInfo,
-                                     run_sync_round)
+                                     execute_cohort, run_sync_round)
 from repro.core.quantize import (DEFAULT_BITS, DEFAULT_CLIP, check_headroom,
                                  dequantize, dequantize_sum, quantize)
 from repro.core.secure_agg import (SecureAggConfig, client_protect,

@@ -1,0 +1,256 @@
+"""Vectorized cohort execution engine: run a whole cohort's local training
+as ONE compiled computation.
+
+The AzureML-style simulator (paper §5, Fig. 10) and every scale study on top
+of it previously executed each client's local update in a serial Python
+loop — one jit dispatch, one tiny-matmul trace per client per round. This
+module stacks the cohort along a leading *client axis* (batches always;
+params too, for personalized / clustered / mixed-version-async schemes) and
+runs all clients' local steps with a single ``jax.vmap``-over-clients call,
+optionally ``shard_map``-ed so the client axis shards over the mesh's
+``data`` devices for pod-scale cohorts.
+
+Layout conventions (leading axes):
+
+    shared params   : leaves  (...,)                 replicated over clients
+    stacked params  : leaves  (n_clients, ...)       personalized path
+    stacked batches : leaves  (n_clients, local_steps, B, ...)
+
+Three execution paths over the same ``local_update`` body (so parity is a
+testable property, not an aspiration):
+
+    serial_cohort  — python loop over per-client jitted calls (reference)
+    vmap_cohort    — jit(vmap(local_update))            [default fast path]
+    shard_cohort   — jit(shard_map(vmap(local_update))) [client axis over
+                     the mesh's data axis; degenerates to vmap on 1 device]
+
+``CohortEngine`` packages a ``LocalTrainSpec`` + per-client batch sampling
+into the object the simulator / orchestrator consume; its ``make_trainer``
+emits a paper-Fig.-3-compatible serial trainer from the SAME local_update,
+which is both the migration path for existing SimClient code and the
+reference the parity tests check the vectorized paths against.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.optim.adamw import Optimizer, apply_updates
+
+
+@dataclass(frozen=True)
+class LocalTrainSpec:
+    """What one client's local round looks like.
+
+    loss_fn(params, batch) -> scalar; optimizer is the functional
+    init/update pair from ``repro.optim``; every client runs exactly
+    ``local_steps`` steps on batches of identical shape (vectorization
+    requires uniform local work — ragged cohorts pad or fall back to the
+    serial path).
+    """
+    loss_fn: Callable
+    optimizer: Optimizer
+    local_steps: int = 1
+
+
+def make_local_update(spec: LocalTrainSpec) -> Callable:
+    """-> local_update(params, client_batches) -> (delta, mean_loss).
+
+    client_batches: pytree with leaves (local_steps, B, ...). The returned
+    delta (new - start params, f32) is the client's pseudo-gradient payload
+    in the paper's convention (strategies add it; ``launch/fl_step.py``
+    negates it where a server *gradient* is expected).
+    """
+    opt = spec.optimizer
+
+    def local_update(params, client_batches):
+        def body(carry, batch):
+            p, s = carry
+            loss, g = jax.value_and_grad(spec.loss_fn)(p, batch)
+            upd, s = opt.update(g, s, p)
+            return (apply_updates(p, upd), s), loss
+
+        (new_params, _), losses = jax.lax.scan(
+            body, (params, opt.init(params)), client_batches)
+        delta = jax.tree.map(
+            lambda a, b: (a.astype(jnp.float32) - b.astype(jnp.float32)),
+            new_params, params)
+        return delta, jnp.mean(losses)
+
+    return local_update
+
+
+def serial_cohort(spec: LocalTrainSpec) -> Callable:
+    """Reference path: one jitted per-client call, python loop over clients.
+
+    -> f(params, stacked_batches) -> (stacked_deltas, losses (n,)).
+    ``params`` leaves may carry a leading client axis (personalized) —
+    detected against the batch stacking, mirroring vmap_cohort's in_axes.
+    """
+    one = jax.jit(make_local_update(spec))
+
+    def run(params, stacked_batches, *, personalized=False):
+        n = jax.tree.leaves(stacked_batches)[0].shape[0]
+        deltas, losses = [], []
+        for j in range(n):
+            p_j = jax.tree.map(lambda a: a[j], params) if personalized \
+                else params
+            b_j = jax.tree.map(lambda a: a[j], stacked_batches)
+            d, l = one(p_j, b_j)
+            deltas.append(d)
+            losses.append(l)
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *deltas)
+        return stacked, jnp.stack(losses)
+
+    return run
+
+
+def vmap_cohort(spec: LocalTrainSpec, *, personalized: bool = False
+                ) -> Callable:
+    """One compiled vmap-over-clients call.
+
+    -> f(params, stacked_batches) -> (stacked_deltas, losses (n,)).
+    personalized=True: params leaves carry a leading (n_clients,) axis.
+    """
+    f = make_local_update(spec)
+    return jax.jit(jax.vmap(f, in_axes=(0 if personalized else None, 0)))
+
+
+def shard_cohort(spec: LocalTrainSpec, mesh, *, axis: str = "data",
+                 personalized: bool = False) -> Callable:
+    """vmap_cohort with the client axis sharded over ``mesh``'s ``axis``.
+
+    Each device traces a vmap over its n/axis_size local clients; params
+    are replicated (or client-sharded when personalized). n_clients must
+    divide the axis size. On a 1-device mesh this is exactly vmap_cohort.
+    """
+    f = jax.vmap(make_local_update(spec),
+                 in_axes=(0 if personalized else None, 0))
+    in_specs = (P(axis) if personalized else P(), P(axis))
+    sharded = shard_map(f, mesh=mesh, in_specs=in_specs,
+                        out_specs=(P(axis), P(axis)),
+                        check_rep=False)
+    return jax.jit(sharded)
+
+
+def stack_trees(trees: list):
+    """[pytree, ...] -> pytree with leading len(trees) axis (np.stack)."""
+    return jax.tree.map(lambda *xs: np.stack([np.asarray(x) for x in xs]),
+                        *trees)
+
+
+def unstack_tree(tree, n: int):
+    """pytree with leading n axis -> [pytree, ...] of length n.
+
+    Pulls each leaf to host ONCE before slicing — per-client slicing of
+    device arrays would issue n_clients * n_leaves separate transfers,
+    which dominates the whole round at simulator scale."""
+    host = jax.tree.map(np.asarray, tree)
+    return [jax.tree.map(lambda a: a[j], host) for j in range(n)]
+
+
+class CohortEngine:
+    """Batched cohort executor the simulator / orchestrator plug into.
+
+    batch_fn(client_id, round_idx) -> pytree with leaves
+    (local_steps, B, ...) — the client's local data for that round
+    (deterministic in (client_id, round_idx) so serial and vectorized
+    paths see identical data).
+
+    mesh/axis select the shard_map path; mesh=None (default) uses plain
+    vmap — right for CPU and single-host runs.
+    """
+
+    def __init__(self, spec: LocalTrainSpec, batch_fn: Callable,
+                 template_params=None, *, mesh=None, axis: str = "data"):
+        self.spec = spec
+        self.batch_fn = batch_fn
+        self.template = template_params
+        self.mesh = mesh
+        self.axis = axis
+        self._local = jax.jit(make_local_update(spec))
+        self._fns: dict = {}
+
+    def _cohort_fn(self, personalized: bool):
+        key = bool(personalized)
+        if key not in self._fns:
+            if self.mesh is not None:
+                self._fns[key] = shard_cohort(self.spec, self.mesh,
+                                              axis=self.axis,
+                                              personalized=personalized)
+            else:
+                self._fns[key] = vmap_cohort(self.spec,
+                                             personalized=personalized)
+        return self._fns[key]
+
+    # -- core entry points -------------------------------------------------
+
+    def run_cohort(self, params, client_ids, round_idx: int):
+        """Shared-params cohort -> {cid: (delta, n_samples, metrics)}.
+        client_ids must be unique (one submission per client per round)."""
+        batches = stack_trees([self.batch_fn(cid, round_idx)
+                               for cid in client_ids])
+        if self.mesh is not None:
+            self._check_divisible(len(client_ids))
+        deltas, losses = self._cohort_fn(False)(params, batches)
+        return dict(zip(client_ids,
+                        self._unpack(batches, deltas, losses)))
+
+    def run_cohort_personalized(self, params_list, client_ids, round_idxs):
+        """Per-client params (clustered FL branches, async mixed-version
+        cohorts) -> [(delta, n_samples, metrics), ...] in input order.
+        Positional because async event groups may contain the same client
+        twice (a fast client re-submitting before the next server step)."""
+        stacked_params = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                      *params_list)
+        batches = stack_trees([self.batch_fn(cid, r)
+                               for cid, r in zip(client_ids, round_idxs)])
+        if self.mesh is not None:
+            self._check_divisible(len(client_ids))
+        deltas, losses = self._cohort_fn(True)(stacked_params, batches)
+        return self._unpack(batches, deltas, losses)
+
+    # -- adapters ----------------------------------------------------------
+
+    def make_trainer(self, client_id):
+        """Paper-Fig.-3 serial trainer from the same local_update — the
+        migration path for legacy SimClient code and the parity reference."""
+        from repro.checkpoint import deserialize_pytree
+
+        def trainer(blob, round_idx):
+            params = deserialize_pytree(blob, like=self.template)
+            b = jax.tree.map(jnp.asarray, self.batch_fn(client_id, round_idx))
+            delta, loss = self._local(params, b)
+            n = self._n_samples(b, stacked=False)
+            return (jax.tree.map(lambda a: np.asarray(a, np.float32), delta),
+                    n, {"loss": float(loss)})
+
+        return trainer
+
+    # -- internals ---------------------------------------------------------
+
+    def _check_divisible(self, n: int):
+        size = self.mesh.shape[self.axis]
+        if n % size:
+            raise ValueError(
+                f"cohort of {n} does not divide mesh axis "
+                f"{self.axis!r} of size {size}")
+
+    @staticmethod
+    def _n_samples(batches, *, stacked: bool) -> int:
+        leaf = jax.tree.leaves(batches)[0]
+        steps, b = leaf.shape[(1 if stacked else 0):][:2]
+        return int(steps) * int(b)
+
+    def _unpack(self, batches, deltas, losses):
+        n = self._n_samples(batches, stacked=True)
+        losses = np.asarray(losses)
+        return [(delta, n, {"loss": float(losses[j])})
+                for j, delta in enumerate(unstack_tree(deltas,
+                                                       len(losses)))]

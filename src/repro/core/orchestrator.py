@@ -82,6 +82,25 @@ def run_sync_round(params, strategy, strategy_state,
     return params, strategy_state, info
 
 
+def execute_cohort(engine, params, client_ids, round_idx: int,
+                   *, params_per_client=None) -> dict:
+    """Run a whole cohort's local training through a CohortEngine and
+    return ``{cid: ClientResult}`` ready for :func:`run_sync_round`.
+
+    ``params_per_client``: optional list of per-client param pytrees
+    (clustered-FL branches / mixed-version async) — selects the engine's
+    stacked-params path; otherwise ``params`` is shared by every client.
+    """
+    if params_per_client is not None:
+        raw = engine.run_cohort_personalized(
+            params_per_client, client_ids, [round_idx] * len(client_ids))
+        raw = dict(zip(client_ids, raw))
+    else:
+        raw = engine.run_cohort(params, client_ids, round_idx)
+    return {cid: ClientResult(update=u, n_samples=n, metrics=m)
+            for cid, (u, n, m) in raw.items()}
+
+
 def avg_metrics(client_results: dict) -> dict:
     keys = set()
     for r in client_results.values():

@@ -119,8 +119,16 @@ class ManagementService:
         return serialize_pytree(self._tasks[task_id].model)
 
     def submit_update(self, task_id: int, client_id: str, update,
-                      n_samples: int, metrics=None) -> bool:
-        """Returns True if this submission completed a server step."""
+                      n_samples: int, metrics=None,
+                      update_version: int | None = None) -> bool:
+        """Returns True if this submission completed a server step.
+
+        ``update_version``: the model version the client's update was
+        trained FROM (async mode) — FedBuff discounts by the staleness
+        ``round_idx - update_version``. Omitted => assumed current (no
+        discount), which is only right for clients that fetched the
+        snapshot just before training.
+        """
         rec = self._tasks[task_id]
         if rec.status is not TaskStatus.RUNNING:
             return False
@@ -128,7 +136,10 @@ class ManagementService:
                               metrics=metrics or {})
         if rec.config.mode == "async":
             server = self._async[task_id]
-            stepped = server.submit(result, update_version=rec.round_idx)
+            stepped = server.submit(
+                result,
+                update_version=rec.round_idx if update_version is None
+                else update_version)
             if stepped:
                 rec.model = server.params
                 rec.round_idx += 1
@@ -142,6 +153,15 @@ class ManagementService:
             self._run_sync_aggregation(rec, coll)
             return True
         return False
+
+    def async_buffer_room(self, task_id: int) -> int:
+        """Submissions until the next async server step (>= 1). Sync tasks
+        report 1 (every cohort submission may complete the round)."""
+        server = self._async.get(task_id)
+        if server is None:
+            return 1
+        return max(1, server.strategy.buffer_size
+                   - len(server.strategy._buffer))
 
     # ------------------------------------------------------------------
     # orchestration

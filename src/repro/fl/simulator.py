@@ -6,6 +6,15 @@ per-iteration duration measurements of Fig. 11 (center/right).
 Sync mode: round duration = slowest selected client (barrier) + server agg.
 Async mode: an event queue; the server steps whenever the FedBuff buffer
 fills, so stragglers never block a round — the paper's measured speedup.
+
+Both modes take an optional ``engine`` (``repro.core.cohort_engine
+.CohortEngine``): when given, local training for a whole cohort (sync) or
+for every client whose finish event lands before the next server step
+(async) runs as ONE compiled vmap-over-clients computation instead of a
+serial python loop — same protocol traffic through the service, orders of
+magnitude fewer dispatches. The async fast path stacks each client's
+*served-version* params along the client axis (the engine's personalized
+path), so mixed-staleness groups batch too.
 """
 from __future__ import annotations
 
@@ -44,22 +53,29 @@ class SimResult:
     n_server_steps: int
 
 
-def run_sync_simulation(service: ManagementService, task_id: int,
-                        clients: dict[str, SimClient],
-                        server_agg_s: float = 0.05, seed: int = 0,
-                        eval_fn: Callable | None = None) -> SimResult:
-    """Drive a sync task to completion under the virtual clock."""
-    rng = np.random.RandomState(seed)
-    task = service.get_task(task_id)
-    wf_by_cid = {}
+def _register_all(service, task_id, clients):
     for cid, sc in clients.items():
         sdk = FederatedLearningClient.get_instance(cid,
                                                    device_info=sc.device_info)
         cert = sdk._authority.issue(cid, os=sc.device_info.get("os", "linux"))
         assert service.register_client(task_id, cid, sc.device_info, cert), cid
-        wf_by_cid[cid] = (sdk, WorkflowDetails(task.config.app_name,
-                                               task.config.workflow_name,
-                                               sc.trainer))
+
+
+def run_sync_simulation(service: ManagementService, task_id: int,
+                        clients: dict[str, SimClient],
+                        server_agg_s: float = 0.05, seed: int = 0,
+                        eval_fn: Callable | None = None,
+                        engine=None) -> SimResult:
+    """Drive a sync task to completion under the virtual clock.
+
+    ``engine``: optional CohortEngine — executes each round's whole cohort
+    in one vmapped call (engine.batch_fn supplies client data; SimClient
+    trainers are bypassed). Virtual-clock timing is unchanged: wall time
+    still models per-client device speed, not host compute.
+    """
+    rng = np.random.RandomState(seed)
+    task = service.get_task(task_id)
+    _register_all(service, task_id, clients)
 
     durations, history, clock = [], [], 0.0
     while task.status.value == "running":
@@ -68,12 +84,27 @@ def run_sync_simulation(service: ManagementService, task_id: int,
             break
         blob = service.model_snapshot(task_id)
         round_wall = 0.0
-        for cid in cohort:
-            sc = clients[cid]
-            out = sc.trainer(blob, round_idx)
-            update, n_samples, metrics = _normalize_trainer_output(out)
-            service.submit_update(task_id, cid, update, n_samples, metrics)
-            round_wall = max(round_wall, sc.duration(rng))  # barrier
+        if engine is not None:
+            from repro.checkpoint import deserialize_pytree
+            if engine.template is None:
+                raise ValueError(
+                    "CohortEngine.template must be the model pytree "
+                    "structure to use the simulator fast path")
+            params = deserialize_pytree(blob, like=engine.template)
+            results = engine.run_cohort(params, list(cohort), round_idx)
+            for cid in cohort:
+                update, n_samples, metrics = results[cid]
+                service.submit_update(task_id, cid, update, n_samples,
+                                      metrics)
+                round_wall = max(round_wall, clients[cid].duration(rng))
+        else:
+            for cid in cohort:
+                sc = clients[cid]
+                out = sc.trainer(blob, round_idx)
+                update, n_samples, metrics = _normalize_trainer_output(out)
+                service.submit_update(task_id, cid, update, n_samples,
+                                      metrics)
+                round_wall = max(round_wall, sc.duration(rng))  # barrier
         round_wall += server_agg_s
         clock += round_wall
         durations.append(round_wall)
@@ -87,44 +118,96 @@ def run_sync_simulation(service: ManagementService, task_id: int,
     return SimResult(durations, history, clock, len(durations))
 
 
+class _SnapshotStore:
+    """Versioned snapshots with in-flight refcounts.
+
+    The pre-fix simulator kept only the latest snapshot; a straggler whose
+    start version had been evicted silently retrained on the *current*
+    snapshot while the server still discounted it as stale — corrupting
+    FedBuff's staleness weights. Retaining every version that an in-flight
+    event references makes staleness real; ``serve`` also returns the
+    version actually served so the submit path records truth even if a
+    version is somehow missing.
+    """
+
+    def __init__(self):
+        self._blobs: dict[int, bytes] = {}
+        self._refs: dict[int, int] = {}
+
+    def put(self, version: int, blob: bytes):
+        self._blobs.setdefault(version, blob)
+
+    def ref(self, version: int):
+        self._refs[version] = self._refs.get(version, 0) + 1
+
+    def serve(self, version: int, current_version: int,
+              fetch_current: Callable):
+        """-> (blob, version_actually_served)."""
+        self._refs[version] = self._refs.get(version, 1) - 1
+        blob = self._blobs.get(version)
+        if blob is not None:
+            self._gc(current_version)
+            return blob, version
+        blob = self._blobs.get(current_version)
+        if blob is None:
+            blob = fetch_current()
+            self._blobs[current_version] = blob
+        self._gc(current_version)
+        return blob, current_version
+
+    def _gc(self, current_version: int):
+        for v in [v for v, r in self._refs.items() if r <= 0]:
+            del self._refs[v]
+        # evict every unreferenced non-current blob — including versions
+        # whose last ref dropped while they were still current (keeping
+        # the refs entry and the blob coupled leaked those forever)
+        for v in [v for v in self._blobs
+                  if v != current_version and self._refs.get(v, 0) <= 0]:
+            del self._blobs[v]
+
+
 def run_async_simulation(service: ManagementService, task_id: int,
                          clients: dict[str, SimClient],
                          server_agg_s: float = 0.05, seed: int = 0,
-                         eval_fn: Callable | None = None) -> SimResult:
+                         eval_fn: Callable | None = None,
+                         engine=None) -> SimResult:
     """Event-driven async run: each client trains continuously; the server
     steps whenever the buffer fills (no barrier — stragglers contribute
-    stale updates, discounted by FedBuff)."""
+    stale updates, discounted by FedBuff).
+
+    ``engine``: optional CohortEngine. All events landing before the next
+    server step (the buffer's remaining room, in virtual-time order) batch
+    into one vmapped call with per-client served-version params stacked
+    along the client axis.
+    """
     rng = np.random.RandomState(seed)
     task = service.get_task(task_id)
-    for cid, sc in clients.items():
-        sdk = FederatedLearningClient.get_instance(cid,
-                                                   device_info=sc.device_info)
-        cert = sdk._authority.issue(cid, os=sc.device_info.get("os", "linux"))
-        assert service.register_client(task_id, cid, sc.device_info, cert)
+    _register_all(service, task_id, clients)
 
     # event queue: (finish_time, seq, cid, model_version_at_start)
     q: list = []
     seq = 0
+    store = _SnapshotStore()
+    store.put(0, service.model_snapshot(task_id))
     for cid, sc in clients.items():
         heapq.heappush(q, (sc.duration(rng), seq, cid, 0))
+        store.ref(0)
         seq += 1
-    snapshots = {0: service.model_snapshot(task_id)}
     durations, history = [], []
     last_step_t = 0.0
     clock = 0.0
-    while q and task.status.value == "running":
-        clock, _, cid, version = heapq.heappop(q)
-        sc = clients[cid]
-        blob = snapshots.get(version) or service.model_snapshot(task_id)
-        out = sc.trainer(blob, version)
-        update, n_samples, metrics = _normalize_trainer_output(out)
+
+    def handle_submission(clock, cid, served_version, update, n_samples,
+                          metrics, reenqueue=True):
+        nonlocal last_step_t, seq
         stepped = service.submit_update(task_id, cid, update, n_samples,
-                                        metrics)
+                                        metrics,
+                                        update_version=served_version)
         if stepped:
             clock += server_agg_s
             durations.append(clock - last_step_t)
             last_step_t = clock
-            snapshots = {task.round_idx: service.model_snapshot(task_id)}
+            store.put(task.round_idx, service.model_snapshot(task_id))
             row = {}
             if eval_fn is not None:
                 row["eval_accuracy"] = float(eval_fn(task.model))
@@ -132,10 +215,65 @@ def run_async_simulation(service: ManagementService, task_id: int,
                                     eval_accuracy=row["eval_accuracy"],
                                     round_duration_s=durations[-1])
             history.append(row)
-        if task.status.value == "running":
+        if reenqueue and task.status.value == "running":
+            sc = clients[cid]
             heapq.heappush(q, (clock + sc.duration(rng), seq, cid,
                                task.round_idx))
+            store.ref(task.round_idx)
             seq += 1
+        return clock
+
+    if engine is None:
+        while q and task.status.value == "running":
+            clock, _, cid, version = heapq.heappop(q)
+            blob, served = store.serve(
+                version, task.round_idx,
+                lambda: service.model_snapshot(task_id))
+            out = clients[cid].trainer(blob, served)
+            update, n_samples, metrics = _normalize_trainer_output(out)
+            clock = handle_submission(clock, cid, served, update, n_samples,
+                                      metrics)
+        return SimResult(durations, history, clock, len(durations))
+
+    from repro.checkpoint import deserialize_pytree
+    if engine.template is None:
+        raise ValueError("CohortEngine.template must be the model pytree "
+                         "structure to use the simulator fast path")
+    while q and task.status.value == "running":
+        # Timing pre-pass: the server only steps on the submission that
+        # fills the buffer, so the next `room` submissions IN VIRTUAL-TIME
+        # ORDER all train against pre-step snapshots and batch together.
+        # Non-final group members re-enqueue their next event immediately
+        # (their submission cannot trigger a step), so a fast client's
+        # re-submissions compete in time order exactly as in the serial
+        # reference — the same client may appear in a group twice.
+        room = service.async_buffer_room(task_id)
+        group = []
+        while q and len(group) < room:
+            t, _, cid, version = heapq.heappop(q)
+            blob, served = store.serve(
+                version, task.round_idx,
+                lambda: service.model_snapshot(task_id))
+            is_final = len(group) == room - 1 or not q
+            group.append((t, cid, served, blob, is_final))
+            if not is_final:
+                heapq.heappush(q, (t + clients[cid].duration(rng), seq, cid,
+                                   task.round_idx))
+                store.ref(task.round_idx)
+                seq += 1
+        params_cache = {}
+        for _, _, served, blob, _ in group:
+            if served not in params_cache:
+                params_cache[served] = deserialize_pytree(
+                    blob, like=engine.template)
+        results = engine.run_cohort_personalized(
+            [params_cache[served] for _, _, served, _, _ in group],
+            [cid for _, cid, _, _, _ in group],
+            [served for _, _, served, _, _ in group])
+        for (t, cid, served, _, is_final), (update, n_samples, metrics) in \
+                zip(group, results):
+            clock = handle_submission(t, cid, served, update, n_samples,
+                                      metrics, reenqueue=is_final)
     return SimResult(durations, history, clock, len(durations))
 
 

@@ -24,6 +24,7 @@ import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
+from repro import compat  # noqa: E402
 from repro.configs import ASSIGNED, get_config, get_shape, is_skipped  # noqa: E402
 from repro.launch import input_specs as ispec  # noqa: E402
 from repro.launch import sharding as shd  # noqa: E402
@@ -168,7 +169,7 @@ def run_pair(arch: str, shape_name: str, mesh_kind: str, outdir: str,
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     t0 = time.time()
     try:
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             lowered, meta = lower_pair(cfg, shape, mesh, secure=secure,
                                        microbatches=microbatches,
                                        vg_size=vg_size, packed=packed,

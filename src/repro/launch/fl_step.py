@@ -29,6 +29,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.core.kdf import U32, mask_stream, pair_seed
 from repro.core.quantize import check_headroom, dequantize_sum, quantize
 from repro.models import loss_fn
@@ -129,7 +130,7 @@ def _mb_constraint(cfg):
     Only the per_pod scheme shards the inner batch dim."""
     if cfg.fl_scheme != "per_pod":
         return lambda x: x
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or "data" not in getattr(mesh, "axis_names", ()):
         return lambda x: x
 
@@ -178,7 +179,9 @@ def make_fl_train_step(cfg, mesh, *, vg_size: int | None = None,
                        microbatches: int | None = None,
                        server_lr: float = 1e-3,
                        secure: bool = True,
-                       packed: bool = False):
+                       packed: bool = False,
+                       local_steps: int = 1,
+                       client_lr: float = 1e-2):
     """Build fl_round(params, opt_state, batch, round_seed) for this mesh.
 
     Batch arrays are silo-blocked: (n_silos, per_silo_B, ...).
@@ -188,6 +191,11 @@ def make_fl_train_step(cfg, mesh, *, vg_size: int | None = None,
     codes per uint32 carrier; masks apply to packed words; HALVES
     secure-agg traffic, exact for vg_size <= 8 (paper §7 names compression
     under secure aggregation as an open problem).
+    ``local_steps > 1``: FedAvg-style multi-step local training per silo —
+    the silo batch splits into ``local_steps`` SGD steps at ``client_lr``
+    (via ``repro.core.cohort_engine.make_local_update``) and the uploaded
+    pseudo-gradient is the negated param delta; supersedes ``microbatches``
+    (the local-step scan already bounds live activations the same way).
     """
     from repro.core.quantize import (PACK_FIELD_BITS, check_pack_headroom)
     n_silos = n_silos_for(cfg, mesh)
@@ -213,8 +221,32 @@ def make_fl_train_step(cfg, mesh, *, vg_size: int | None = None,
         if pack_axes is None:
             pack_axes = jax.tree.map(lambda _: -1, offsets)
 
-        def one_silo(silo_batch):
-            return _silo_grad(cfg, params, silo_batch, microbatches)
+        if local_steps > 1:
+            from repro.core.cohort_engine import (LocalTrainSpec,
+                                                  make_local_update)
+            from repro.optim import sgd
+            local_up = make_local_update(LocalTrainSpec(
+                loss_fn=lambda p, b: loss_fn(cfg, p, b),
+                optimizer=sgd(client_lr), local_steps=local_steps))
+            constrain = _mb_constraint(cfg)
+
+            def one_silo(silo_batch):
+                def split(x):
+                    b = x.shape[0]
+                    if b % local_steps:
+                        raise ValueError(
+                            f"per-silo batch {b} not divisible by "
+                            f"local_steps={local_steps}")
+                    return constrain(x.reshape(local_steps, b // local_steps,
+                                               *x.shape[1:]))
+
+                delta, mloss = local_up(params,
+                                        jax.tree.map(split, silo_batch))
+                return mloss, jax.tree.map(
+                    lambda d: (-d).astype(jnp.bfloat16), delta)
+        else:
+            def one_silo(silo_batch):
+                return _silo_grad(cfg, params, silo_batch, microbatches)
 
         losses, grads = jax.vmap(one_silo)(batch)  # leaves: (n_silos, ...)
 
@@ -267,4 +299,5 @@ def make_fl_train_step(cfg, mesh, *, vg_size: int | None = None,
         return new_params, opt_state_new, jnp.mean(losses)
 
     return fl_round, dict(n_silos=n_silos, vg_size=vg_size, n_vgs=n_vgs,
-                          bits=bits, clip=clip, microbatches=microbatches)
+                          bits=bits, clip=clip, microbatches=microbatches,
+                          local_steps=local_steps)

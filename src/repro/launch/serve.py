@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.configs import get_config, get_reduced_config
 from repro.launch import sharding as shd
 from repro.launch.mesh import make_host_mesh, make_production_mesh
@@ -41,7 +42,7 @@ def main(argv=None):
     B = args.batch
     max_len = args.prompt_len + args.new_tokens
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         params = init_params(cfg, jax.random.PRNGKey(0))
         rng = np.random.RandomState(0)
         prompts = rng.randint(1, cfg.vocab_size, (B, args.prompt_len))

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.checkpoint import save_checkpoint
 from repro.configs import get_config, get_reduced_config
 from repro.configs.shapes import InputShape
@@ -65,7 +66,7 @@ def main(argv=None):
     assert args.global_batch % n_silos == 0
     per_silo = args.global_batch // n_silos
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         params = init_params(cfg, jax.random.PRNGKey(0))
         opt_state = adamw().init(params)
         fl_round, meta = make_fl_train_step(

@@ -18,6 +18,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.models.layers import _dense_init, rms_head_norm, rope
 
 Q_CHUNK = 2048
@@ -49,11 +50,11 @@ def _shard_heads(cfg, t):
     attention heads when params are replicated over data — per_silo)."""
     if not cfg.shard_attn_heads:
         return t
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     names = getattr(mesh, "axis_names", ()) if mesh is not None else ()
     if "model" not in names:
         return t
-    size = dict(zip(mesh.axis_names, mesh.axis_sizes))["model"]
+    size = compat.mesh_axis_sizes(mesh)["model"]
     if t.shape[2] % size or t.shape[2] < size:
         return t
     return jax.lax.with_sharding_constraint(

@@ -101,14 +101,29 @@ def embed_init(cfg, key, max_positions=8192):
     return p
 
 
+_ONE_HOT_EMBED_MAX_VOCAB = 1024
+
+
+def _lookup(table, idx):
+    """Row lookup. On CPU with a small table, lower as one-hot matmul:
+    bit-exact (one nonzero term per row-sum), and its BACKWARD is a dense
+    matmul instead of a scatter-add — XLA CPU scatter is a scalar loop that
+    dominates vmapped per-client gradients in the cohort engine."""
+    if (table.shape[0] <= _ONE_HOT_EMBED_MAX_VOCAB
+            and jax.default_backend() == "cpu"):
+        oh = jax.nn.one_hot(idx, table.shape[0], dtype=table.dtype)
+        return oh @ table
+    return jnp.take(table, idx, axis=0)
+
+
 def embed_tokens(cfg, params, tokens, positions=None):
-    x = jnp.take(params["tok"], tokens, axis=0)
+    x = _lookup(params["tok"], tokens)
     if cfg.name.startswith("gemma2"):
         x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
     if cfg.pos_embed == "learned":
         if positions is None:
             positions = jnp.arange(tokens.shape[-1])
-        x = x + jnp.take(params["pos"], positions, axis=0)
+        x = x + _lookup(params["pos"], positions)
     return x
 
 

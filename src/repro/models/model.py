@@ -17,6 +17,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.models import encdec, transformer
 from repro.models.layers import (_dense_init, embed_init, embed_tokens,
                                  unembed)
@@ -28,9 +29,15 @@ LOSS_CHUNK = 512
 # init
 # --------------------------------------------------------------------------
 
-def init_params(cfg, key, dtype=jnp.float32):
+def init_params(cfg, key, dtype=jnp.float32, max_positions=None):
+    """``max_positions`` bounds the learned positional table (default 8192).
+    Size it to the actual sequence length for small-sequence workloads —
+    an oversized table is pure waste, and its gradient (a scatter into
+    mostly-untouched rows) dominates per-client update cost in the
+    vectorized FL paths."""
     k_embed, k_trunk = jax.random.split(key)
-    max_pos = cfg.max_decoder_len if cfg.encoder_decoder else 8192
+    max_pos = max_positions or (
+        cfg.max_decoder_len if cfg.encoder_decoder else 8192)
     params = {"embed": embed_init(cfg, k_embed, max_positions=max_pos)}
     if cfg.encoder_decoder:
         params["trunk"] = encdec.encdec_init(cfg, k_trunk)
@@ -60,14 +67,14 @@ def _constrain_batch_axis(cfg, x):
     from FSDP weights through the embedding gather)."""
     if not cfg.activation_batch_axes:
         return x
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     names = getattr(mesh, "axis_names", ()) if mesh is not None else ()
     axes = tuple(a for a in cfg.activation_batch_axes if a in names)
     if not axes:
         return x
     size = 1
     for a in axes:
-        size *= dict(zip(mesh.axis_names, mesh.axis_sizes))[a]
+        size *= compat.mesh_axis_sizes(mesh)[a]
     if x.shape[0] % size or x.shape[0] < size:
         return x  # e.g. long_500k's batch of 1
     spec = jax.sharding.PartitionSpec(axes, *([None] * (x.ndim - 1)))

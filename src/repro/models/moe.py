@@ -15,6 +15,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.models.layers import _act, _dense_init, mlp_apply, mlp_init
 
 
@@ -38,7 +39,7 @@ def _constrain(cfg, x, spec):
     ambient (no-op in unmeshed smoke tests). §Perf hillclimb change."""
     if not cfg.moe_dispatch_constraint:
         return x
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
         return x
     return jax.lax.with_sharding_constraint(

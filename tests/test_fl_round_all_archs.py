@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import compat
 from repro.configs import ASSIGNED, get_reduced_config
 from repro.launch.fl_step import make_fl_train_step
 from repro.launch.mesh import make_host_mesh
@@ -42,7 +43,7 @@ def _silo_batch(cfg, n_silos=1, b=2, s=32, seed=0):
 def test_secure_fl_round(arch):
     cfg = get_reduced_config(arch)
     mesh = make_host_mesh()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         params = init_params(cfg, jax.random.PRNGKey(0))
         opt_state = adamw().init(params)
         step, meta = make_fl_train_step(cfg, mesh, secure=True,

@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import compat
 from repro.configs import get_reduced_config
 from repro.configs.shapes import InputShape
 from repro.launch.fl_step import (leaf_net_mask, leaf_offsets,
@@ -36,7 +37,7 @@ def _batch(cfg, n_silos, b, s, seed=0):
 
 def test_secure_matches_insecure_within_quantization():
     cfg, mesh, params, opt_state = _setup()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         seed = jnp.asarray([3, 4], jnp.uint32)
         batch = _batch(cfg, 1, 4, 16)
         sec, _ = make_fl_train_step(cfg, mesh, secure=True, bits=24,
@@ -55,7 +56,7 @@ def test_secure_matches_insecure_within_quantization():
 
 def test_fl_round_reduces_loss():
     cfg, mesh, params, opt_state = _setup()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         step, meta = make_fl_train_step(cfg, mesh, secure=True,
                                         microbatches=1, server_lr=5e-3)
         step = jax.jit(step)
@@ -70,7 +71,7 @@ def test_fl_round_reduces_loss():
 
 def test_microbatched_grad_matches_single():
     cfg, mesh, params, opt_state = _setup()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         batch = _batch(cfg, 1, 4, 16)
         seed = jnp.asarray([1, 2], jnp.uint32)
         one, _ = make_fl_train_step(cfg, mesh, secure=False, microbatches=1)
@@ -107,7 +108,7 @@ def test_packed_aggregation_matches_unpacked():
     """Beyond-paper packed modular aggregation (2x13-bit per uint32) must be
     bit-identical to the unpacked path at the same bits."""
     cfg, mesh, params, opt_state = _setup()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         batch = _batch(cfg, 1, 4, 16)
         seed = jnp.asarray([3, 4], jnp.uint32)
         plain, _ = make_fl_train_step(cfg, mesh, secure=True, bits=13,
