@@ -1,16 +1,21 @@
 # Tier-1 verification (ROADMAP.md): full test suite, dev deps included so
-# the hypothesis property tests actually run (they importorskip otherwise).
+# the hypothesis property tests actually run (they importorskip otherwise),
+# plus a tiny-scale secure-agg bench smoke so the vectorized privacy
+# pipeline (serial/vectorized/kernels) is exercised end to end.
 PY ?= python
 
-.PHONY: verify test deps bench-cohort
+.PHONY: verify test deps bench-cohort bench-secureagg-smoke
 
 deps:
 	$(PY) -m pip install -r requirements-dev.txt
 
-verify: deps test
+verify: deps test bench-secureagg-smoke
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
 bench-cohort:
 	PYTHONPATH=src $(PY) -m benchmarks.bench_cohort
+
+bench-secureagg-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.bench_secureagg --quick

@@ -7,12 +7,17 @@ from repro.core.dp import DPConfig, RdpAccountant, compute_rdp, get_privacy_spen
 from repro.core.kdf import kdf_u32, mask_stream, pair_seed
 from repro.core.masking import apply_mask, modular_sum, net_mask
 from repro.core.orchestrator import (AsyncServer, ClientResult, RoundInfo,
-                                     execute_cohort, run_sync_round)
+                                     execute_cohort, run_sync_round,
+                                     run_sync_round_stacked)
+from repro.core.privacy_engine import (BucketSpec, PrivacyEngine,
+                                       plan_buckets, stack_flat_updates)
 from repro.core.quantize import (DEFAULT_BITS, DEFAULT_CLIP, check_headroom,
-                                 dequantize, dequantize_sum, quantize)
+                                 check_master_headroom, dequantize,
+                                 dequantize_interim_sum, dequantize_sum,
+                                 quantize)
 from repro.core.secure_agg import (SecureAggConfig, client_protect,
-                                   master_aggregate, secure_aggregate_round,
-                                   vg_aggregate)
+                                   group_seed, master_aggregate,
+                                   secure_aggregate_round, vg_aggregate)
 from repro.core.strategies import (DGA, STRATEGIES, FedAvg, FedBuff, FedProx,
                                    make_strategy)
 from repro.core.virtual_groups import (VGPlan, VirtualGroup,

@@ -202,6 +202,20 @@ class CohortEngine:
         return dict(zip(client_ids,
                         self._unpack(batches, deltas, losses)))
 
+    def run_cohort_stacked(self, params, client_ids, round_idx: int):
+        """Fused-path variant of :meth:`run_cohort`: returns
+        ``(stacked_deltas, losses (n,), n_samples_per_client)`` with the
+        client axis still stacked on device — feed straight into the
+        vectorized privacy pipeline (``privacy_engine.aggregate_stacked`` /
+        ``ManagementService.submit_cohort``) without the unstack-to-host
+        round trip that ``run_cohort`` pays."""
+        batches = stack_trees([self.batch_fn(cid, round_idx)
+                               for cid in client_ids])
+        if self.mesh is not None:
+            self._check_divisible(len(client_ids))
+        deltas, losses = self._cohort_fn(False)(params, batches)
+        return deltas, losses, self._n_samples(batches, stacked=True)
+
     def run_cohort_personalized(self, params_list, client_ids, round_idxs):
         """Per-client params (clustered FL branches, async mixed-version
         cohorts) -> [(delta, n_samples, metrics), ...] in input order.

@@ -31,6 +31,49 @@ class DPConfig:
 # mechanism
 # --------------------------------------------------------------------------
 
+def flat_local_dp(flat, key, *, clip_norm: float, sigma: float):
+    """Canonical per-client DP row: L2-clip a FLAT f32 update to
+    ``clip_norm``, then add N(0, sigma^2) noise (sigma == 0 skips it).
+
+    This single function is the bit-exactness anchor of the privacy
+    pipeline: the serial reference jits it per client and the vectorized
+    engine runs ``vmap`` of the SAME function inside its cohort jit, so
+    both sides see identical XLA op patterns (eager execution differs from
+    jit by FMA contraction in the clip-scale/noise chain — measured, not
+    hypothetical)."""
+    flat = flat.astype(jnp.float32)
+    norm = jnp.linalg.norm(flat)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(norm, 1e-12))
+    clipped = flat * scale
+    if sigma > 0:
+        clipped = clipped + sigma * jax.random.normal(key, flat.shape,
+                                                      jnp.float32)
+    return clipped
+
+
+_flat_local_dp_jit = jax.jit(flat_local_dp,
+                             static_argnames=("clip_norm", "sigma"))
+
+
+def flat_clip(flat, *, clip_norm: float):
+    """Clip-only row (the per-client half of the "global" mechanism)."""
+    flat = flat.astype(jnp.float32)
+    norm = jnp.linalg.norm(flat)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(norm, 1e-12))
+    return flat * scale
+
+
+_flat_clip_jit = jax.jit(flat_clip, static_argnames=("clip_norm",))
+
+
+def clip_update(update_pytree, clip_norm: float):
+    """Jitted pytree clip — the serial-reference twin of the engine's
+    vmapped :func:`flat_clip` (see :func:`flat_local_dp` on why both sides
+    must go through jit)."""
+    flat, unflatten = ravel_pytree(update_pytree)
+    return unflatten(_flat_clip_jit(flat, clip_norm=float(clip_norm)))
+
+
 def clip_by_global_norm(update_pytree, clip_norm: float):
     """L2-clip a pytree update to ``clip_norm``. Returns (clipped, norm)."""
     flat, unflatten = ravel_pytree(update_pytree)
@@ -46,12 +89,17 @@ def add_gaussian_noise(update_pytree, sigma: float, key):
 
 
 def local_dp(update_pytree, cfg: DPConfig, key):
-    """Client-side: clip then noise (before quantization/masking)."""
-    clipped, _ = clip_by_global_norm(update_pytree, cfg.clip_norm)
-    if cfg.noise_multiplier > 0:
-        clipped = add_gaussian_noise(
-            clipped, cfg.noise_multiplier * cfg.clip_norm, key)
-    return clipped
+    """Client-side: clip then noise (before quantization/masking).
+
+    Routes through the jitted :func:`flat_local_dp` so the serial
+    reference and the vectorized privacy engine produce bit-identical
+    floats for the same (update, key)."""
+    flat, unflatten = ravel_pytree(update_pytree)
+    sigma = float(cfg.noise_multiplier * cfg.clip_norm) \
+        if cfg.noise_multiplier > 0 else 0.0
+    return unflatten(_flat_local_dp_jit(flat, key,
+                                        clip_norm=float(cfg.clip_norm),
+                                        sigma=sigma))
 
 
 def global_dp(agg_update_pytree, cfg: DPConfig, n_clients: int, key):

@@ -95,6 +95,32 @@ def protect_cohort(qs, vg_size: int, round_seed):
     return jax.vmap(protect)(ids, vgs, qs)
 
 
+def protect_cohort_grouped(qs, idxs, group_seeds, vg_size: int,
+                           offset: int = 0):
+    """Vectorized masking with the serial protocol's PER-GROUP seeds.
+
+    ``protect_cohort`` above addresses pairs by global silo id under one
+    shared round seed (the launch/fl_step convention); the cross-device
+    reference protocol (``secure_agg.secure_aggregate_round``) instead
+    domain-separates groups by seed and addresses pairs by index WITHIN the
+    group. This is that scheme, vmapped: client k has within-group index
+    ``idxs[k]`` and its group's seed ``group_seeds[k]`` — bit-identical to
+    ``apply_mask(q, idx, vg_size, seed)`` per client (net_mask_traced with
+    vg_id=0 reduces to exactly those pair seeds).
+
+    qs: (n, size) uint32; idxs: (n,) uint32; group_seeds: (n, 2) uint32.
+    All groups must share ``vg_size`` (the privacy engine buckets ragged
+    plans by group size first). Traceable — runs inside the engine's jit.
+    """
+    size = qs.shape[1]
+
+    def protect(q, i, seed):
+        return q + net_mask_traced(i, jnp.zeros((), U32), vg_size, seed,
+                                   size, offset)
+
+    return jax.vmap(protect)(qs, idxs, group_seeds)
+
+
 def vg_sums(payloads, vg_size: int):
     """(n, size) -> (n/vg_size, size) wrapping per-VG sums (stage 1)."""
     n, size = payloads.shape

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import dp as dp_mod
+from repro.core import privacy_engine as pe
 from repro.core import secure_agg as sa
 from repro.core.strategies import FedBuff
 from repro.core.virtual_groups import make_virtual_groups
@@ -39,31 +40,57 @@ class ClientResult:
     metrics: dict = field(default_factory=dict)
 
 
+def _round_randomness(key, round_seed, round_idx: int):
+    key = key if key is not None else jax.random.PRNGKey(round_idx)
+    if round_seed is None:
+        round_seed = jax.random.key_data(
+            jax.random.fold_in(jax.random.PRNGKey(17), round_idx)
+        ).astype(jnp.uint32)[:2]
+    return key, round_seed
+
+
+def _secure_mean_serial(updates_sorted: dict, plan, round_seed, key,
+                        secure_cfg, dp_cfg):
+    """Bit-exact reference: per-client python loop (DP -> protect), then
+    the two-stage combine. Kept verbatim as the parity oracle for the
+    vectorized engine."""
+    updates = {}
+    for j, (cid, u) in enumerate(updates_sorted.items()):
+        if dp_cfg.mechanism == "local":
+            u = dp_mod.local_dp(u, dp_cfg, jax.random.fold_in(key, j))
+        elif dp_cfg.mechanism == "global":
+            u = dp_mod.clip_update(u, dp_cfg.clip_norm)
+        updates[cid] = u
+    return sa.secure_aggregate_round(updates, plan, round_seed, secure_cfg)
+
+
 def run_sync_round(params, strategy, strategy_state,
                    client_results: dict,
                    *, round_idx: int, vg_size: int,
                    secure_cfg: sa.SecureAggConfig = sa.SecureAggConfig(),
                    dp_cfg: dp_mod.DPConfig = dp_mod.DPConfig(),
                    key=None, round_seed=None):
-    """One synchronous FL round over a cohort of client results."""
-    key = key if key is not None else jax.random.PRNGKey(round_idx)
-    if round_seed is None:
-        round_seed = jax.random.key_data(
-            jax.random.fold_in(jax.random.PRNGKey(17), round_idx)
-        ).astype(jnp.uint32)[:2]
+    """One synchronous FL round over a cohort of client results.
+
+    ``secure_cfg.vectorized`` (default) runs the whole privacy pipeline —
+    DP, quantize, mask, VG sums, master combine — as one compiled call via
+    ``repro.core.privacy_engine``; ``vectorized=False`` keeps the serial
+    per-client reference loop (bit-identical output, O(n) dispatches)."""
+    key, round_seed = _round_randomness(key, round_seed, round_idx)
 
     cids = sorted(client_results)
-    updates = {}
-    for j, cid in enumerate(cids):
-        u = client_results[cid].update
-        if dp_cfg.mechanism == "local":
-            u = dp_mod.local_dp(u, dp_cfg, jax.random.fold_in(key, j))
-        elif dp_cfg.mechanism == "global":
-            u, _ = dp_mod.clip_by_global_norm(u, dp_cfg.clip_norm)
-        updates[cid] = u
-
     plan = make_virtual_groups(cids, vg_size, seed=round_idx)
-    delta = sa.secure_aggregate_round(updates, plan, round_seed, secure_cfg)
+
+    if secure_cfg.vectorized:
+        flat, unflatten = pe.stack_flat_updates(
+            [client_results[c].update for c in cids])
+        delta = unflatten(pe.aggregate_flat(
+            flat, plan, cids, round_seed,
+            secure_cfg=secure_cfg, dp_cfg=dp_cfg, key=key))
+    else:
+        delta = _secure_mean_serial(
+            {cid: client_results[cid].update for cid in cids}, plan,
+            round_seed, key, secure_cfg, dp_cfg)
 
     if dp_cfg.mechanism == "global":
         delta = dp_mod.global_dp(delta, dp_cfg, len(cids),
@@ -79,6 +106,45 @@ def run_sync_round(params, strategy, strategy_state,
 
     info = RoundInfo(round_idx, len(cids), len(plan.groups),
                      metrics=avg_metrics(client_results))
+    return params, strategy_state, info
+
+
+def run_sync_round_stacked(params, strategy, strategy_state,
+                           client_ids, stacked_updates, metrics_list=None,
+                           *, round_idx: int, vg_size: int,
+                           secure_cfg: sa.SecureAggConfig
+                           = sa.SecureAggConfig(),
+                           dp_cfg: dp_mod.DPConfig = dp_mod.DPConfig(),
+                           key=None, round_seed=None):
+    """Fused sync round: cohort updates arrive ALREADY STACKED (pytree
+    leaves (n_clients, ...)) straight from ``CohortEngine.run_cohort_
+    stacked`` — no unstack-to-host, no per-client dict round-trip. Produces
+    the same round as :func:`run_sync_round` given the same cohort.
+
+    ``metrics_list``: optional per-client metric dicts (input order) for
+    the round's RoundInfo."""
+    key, round_seed = _round_randomness(key, round_seed, round_idx)
+    cids = list(client_ids)
+    order = sorted(range(len(cids)), key=cids.__getitem__)
+    if order != list(range(len(cids))):
+        # protocol (and DP key-fold) order is sorted-cid — reorder rows
+        # with one gather per leaf rather than per client
+        idx = jnp.asarray(order)
+        stacked_updates = jax.tree.map(lambda a: a[idx], stacked_updates)
+    cids_sorted = [cids[j] for j in order]
+    plan = make_virtual_groups(cids_sorted, vg_size, seed=round_idx)
+
+    delta = pe.aggregate_stacked(stacked_updates, plan, cids_sorted,
+                                 round_seed, secure_cfg=secure_cfg,
+                                 dp_cfg=dp_cfg, key=key)
+    if dp_cfg.mechanism == "global":
+        delta = dp_mod.global_dp(delta, dp_cfg, len(cids),
+                                 jax.random.fold_in(key, 10_000))
+
+    metrics = _avg_metric_dicts(metrics_list or [])
+    delta = strategy.combine([delta], [1.0], [metrics])
+    params, strategy_state = strategy.apply(params, strategy_state, delta)
+    info = RoundInfo(round_idx, len(cids), len(plan.groups), metrics=metrics)
     return params, strategy_state, info
 
 
@@ -101,17 +167,20 @@ def execute_cohort(engine, params, client_ids, round_idx: int,
             for cid, (u, n, m) in raw.items()}
 
 
-def avg_metrics(client_results: dict) -> dict:
+def _avg_metric_dicts(metric_dicts) -> dict:
     keys = set()
-    for r in client_results.values():
-        keys |= set(r.metrics)
+    for m in metric_dicts:
+        keys |= set(m)
     out = {}
     for k in keys:
-        vals = [float(r.metrics[k]) for r in client_results.values()
-                if k in r.metrics]
+        vals = [float(m[k]) for m in metric_dicts if k in m]
         if vals:
             out[k] = sum(vals) / len(vals)
     return out
+
+
+def avg_metrics(client_results: dict) -> dict:
+    return _avg_metric_dicts([r.metrics for r in client_results.values()])
 
 
 class AsyncServer:

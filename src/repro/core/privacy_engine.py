@@ -1,0 +1,234 @@
+"""Vectorized sync-round privacy pipeline: the paper's whole §4 chain —
+per-client DP clip/noise -> quantize -> pairwise mask -> stage-1 VG modular
+sums — as ONE jitted computation over the cohort's stacked flat updates.
+
+The serial reference (``secure_agg.secure_aggregate_round`` plus the
+per-client DP loop in ``orchestrator.run_sync_round``) dispatches O(n_clients)
+python-level jnp calls per round; production FL treats exactly this path as
+the server's throughput-critical hot loop. Here the cohort is an
+``(n_clients, size)`` array and every stage is vmapped, so the full pipeline
+is one XLA program (two at most — see bucketing) regardless of cohort size.
+
+Ragged Virtual-Group plans are handled by SIZE-BUCKETING: ``make_virtual_
+groups`` merges a trailing remainder < min_vg_size into the previous group,
+so a plan contains at most TWO distinct group sizes — i.e. at most two
+compiled shapes. Only the bucket GEOMETRY (group size, group count) is a
+static jit argument; the per-round client permutation and group ids are
+traced arrays, so successive rounds (which reshuffle clients) reuse the
+same compiled program. Within a bucket,
+masking reuses ``masking.net_mask_traced`` via ``protect_cohort_grouped``
+(pure-jnp path) or the batched Pallas kernel ``kernels.ops.mask_apply_cohort``
+(``use_kernels=True``).
+
+Bit-exactness contract (hypothesis-tested in tests/test_privacy_engine.py):
+the engine's output is bit-identical to the serial reference. The integer
+stages (quantize codes, masks, wrapping sums) are exact by construction; the
+float stages (DP rows, stage-2 combine) are shared JITTED functions on both
+paths, because XLA FMA-contracts the clip/noise and dequantize chains — an
+eager reference would differ from any jitted pipeline by ulps. The big jit
+therefore returns exact integer interims and the final combine runs in the
+same standalone ``_combine_jit`` executable the serial master uses.
+
+Stage 2 uses the overflow-safe split-limb combine
+(``quantize.dequantize_interim_sum``): the pre-fix master summed interims in
+uint32 and silently wrapped once bits + ceil(log2(total_cohort)) > 32.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+from repro.core import dp as dp_mod
+from repro.core import masking
+from repro.core.kdf import U32
+from repro.core.quantize import (check_headroom, check_master_headroom,
+                                 quantize)
+from repro.core.secure_agg import SecureAggConfig, _combine_jit, group_seed
+
+
+@dataclass(frozen=True)
+class BucketSpec:
+    """Host-side layout of all virtual groups sharing one size. Only
+    (g, n_groups) reaches jit as a static; rows/vg_ids are shipped as
+    traced arrays so per-round reshuffles don't recompile.
+
+    ``rows[m * g + i]`` is the stack-row of member ``i`` of the bucket's
+    ``m``-th group (protocol order within the group)."""
+    g: int          # group size
+    vg_ids: tuple   # plan vg_ids of the bucket's groups, plan order
+    rows: tuple     # flat row indices into the (n_clients, size) stack
+
+    @property
+    def n_groups(self) -> int:
+        return len(self.vg_ids)
+
+
+def plan_buckets(plan, client_order) -> tuple:
+    """Bucket a VGPlan's groups by size against a stack ordering.
+
+    ``client_order``: the client ids of the stacked update rows, row order.
+    The merge rule in ``make_virtual_groups`` yields at most two distinct
+    sizes, so this returns at most two buckets (sorted by size)."""
+    row_of = {cid: j for j, cid in enumerate(client_order)}
+    if len(row_of) != len(client_order):
+        raise ValueError("duplicate client ids in stacked cohort")
+    by_size: dict = {}
+    for grp in plan.groups:
+        by_size.setdefault(len(grp.members), []).append(grp)
+    buckets = []
+    for g in sorted(by_size):
+        groups = by_size[g]
+        buckets.append(BucketSpec(
+            g=g,
+            vg_ids=tuple(grp.vg_id for grp in groups),
+            rows=tuple(row_of[cid] for grp in groups
+                       for cid in grp.members)))
+    return tuple(buckets)
+
+
+@partial(jax.jit,
+         static_argnames=("bucket_shapes", "secure_cfg", "dp_cfg"))
+def _cohort_interims(flat, round_seed, key, rows_t, vgs_t, *,
+                     bucket_shapes, secure_cfg, dp_cfg):
+    """The one compiled call: (n, size) f32 stacked updates -> exact
+    (n_groups_total, size) uint32 per-VG interim sums, bucket order.
+
+    ``bucket_shapes``: tuple of (g, n_groups) per bucket — the ONLY
+    plan-dependent static; the per-round permutation (``rows_t`` row
+    indices, ``vgs_t`` group ids) is traced, so rounds with the same
+    cohort/bucket geometry hit the jit cache even though
+    ``make_virtual_groups`` reshuffles clients every round."""
+    n = flat.shape[0]
+    flat = flat.astype(jnp.float32)
+
+    # per-client DP, vmapped over the client axis; key folding follows the
+    # row order (== sorted-cid order in the orchestrator), matching the
+    # serial reference's fold_in(key, j) exactly.
+    if dp_cfg.mechanism == "local":
+        sigma = float(dp_cfg.noise_multiplier * dp_cfg.clip_norm) \
+            if dp_cfg.noise_multiplier > 0 else 0.0
+        keys = jax.vmap(lambda j: jax.random.fold_in(key, j))(
+            jnp.arange(n, dtype=jnp.uint32))
+        flat = jax.vmap(partial(dp_mod.flat_local_dp,
+                                clip_norm=float(dp_cfg.clip_norm),
+                                sigma=sigma))(flat, keys)
+    elif dp_cfg.mechanism == "global":
+        # clip here; the server-side noise is added to the combined mean by
+        # the orchestrator (it is one draw, not a per-client stage)
+        flat = jax.vmap(partial(dp_mod.flat_clip,
+                                clip_norm=float(dp_cfg.clip_norm)))(flat)
+
+    qs = quantize(flat, secure_cfg.clip, secure_cfg.bits)   # (n, size) u32
+
+    interims = []
+    for (g, m), rows, vgs in zip(bucket_shapes, rows_t, vgs_t):
+        qb = qs[rows]                                       # (m*g, size)
+        gseeds = jnp.repeat(
+            jax.vmap(lambda v: group_seed(round_seed, v))(vgs),
+            g, axis=0)                                      # (m*g, 2)
+        idxs = jnp.tile(jnp.arange(g, dtype=U32), m)
+        if secure_cfg.use_kernels:
+            from repro.kernels import ops
+            masked = ops.mask_apply_cohort(qb, idxs, gseeds, g)
+        else:
+            masked = masking.protect_cohort_grouped(qb, idxs, gseeds, g)
+        interims.append(masking.vg_sums(masked, g))         # (m, size)
+    return jnp.concatenate(interims, axis=0)
+
+
+@jax.jit
+def _ravel_rows(stacked_updates):
+    """Stacked pytree (leaves (n, ...)) -> (n, size) f32, in-jit (the fused
+    entry never unstacks to host)."""
+    return jax.vmap(
+        lambda t: ravel_pytree(t)[0].astype(jnp.float32))(stacked_updates)
+
+
+def stack_flat_updates(updates):
+    """[update pytree, ...] -> ((n, size) device array, unflatten fn).
+
+    Host-side np staging (one transfer, not n_leaves * n transfers) for the
+    orchestrator path whose inputs are per-client host pytrees."""
+    rows = []
+    for u in updates:
+        rows.append(np.concatenate(
+            [np.asarray(leaf, np.float32).ravel()
+             for leaf in jax.tree.leaves(u)]))
+    _, unflatten = ravel_pytree(updates[0])
+    return jnp.asarray(np.stack(rows)), unflatten
+
+
+def _check_plan(buckets, secure_cfg):
+    for b in buckets:
+        check_headroom(secure_cfg.bits, b.g)
+    check_master_headroom(sum(b.n_groups for b in buckets))
+
+
+def aggregate_flat(flat, plan, client_order, round_seed, *,
+                   secure_cfg: SecureAggConfig = SecureAggConfig(),
+                   dp_cfg: dp_mod.DPConfig = dp_mod.DPConfig(),
+                   key=None):
+    """Full pipeline over pre-flattened rows -> (size,) f32 cohort mean."""
+    buckets = plan_buckets(plan, client_order)
+    _check_plan(buckets, secure_cfg)
+    n = flat.shape[0]
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    interims = _cohort_interims(
+        jnp.asarray(flat), jnp.asarray(round_seed, U32), key,
+        tuple(jnp.asarray(b.rows, jnp.int32) for b in buckets),
+        tuple(jnp.asarray(b.vg_ids, U32) for b in buckets),
+        bucket_shapes=tuple((b.g, b.n_groups) for b in buckets),
+        secure_cfg=secure_cfg, dp_cfg=dp_cfg)
+    return _combine_jit(interims, n, float(secure_cfg.clip),
+                        int(secure_cfg.bits))
+
+
+def aggregate_stacked(stacked_updates, plan, client_order, round_seed, *,
+                      secure_cfg: SecureAggConfig = SecureAggConfig(),
+                      dp_cfg: dp_mod.DPConfig = dp_mod.DPConfig(),
+                      key=None):
+    """Fused entry: consume a CohortEngine's already-stacked cohort output
+    (leaves (n, ...)) directly — no unstack-to-host, no per-client dicts.
+    Returns the cohort-mean update pytree."""
+    flat = _ravel_rows(stacked_updates)
+    template = jax.tree.map(lambda a: a[0], stacked_updates)
+    _, unflatten = ravel_pytree(template)
+    mean_flat = aggregate_flat(flat, plan, client_order, round_seed,
+                               secure_cfg=secure_cfg, dp_cfg=dp_cfg, key=key)
+    return unflatten(mean_flat)
+
+
+class PrivacyEngine:
+    """Config-bound facade over the pipeline (the object the service layer
+    and simulator thread through; jit caches are module-global, so engines
+    are free to construct per round)."""
+
+    def __init__(self, secure_cfg: SecureAggConfig = SecureAggConfig(),
+                 dp_cfg: dp_mod.DPConfig = dp_mod.DPConfig()):
+        self.secure_cfg = secure_cfg
+        self.dp_cfg = dp_cfg
+
+    def aggregate_flat(self, flat, plan, client_order, round_seed, key=None):
+        return aggregate_flat(flat, plan, client_order, round_seed,
+                              secure_cfg=self.secure_cfg,
+                              dp_cfg=self.dp_cfg, key=key)
+
+    def aggregate_stacked(self, stacked_updates, plan, client_order,
+                          round_seed, key=None):
+        return aggregate_stacked(stacked_updates, plan, client_order,
+                                 round_seed, secure_cfg=self.secure_cfg,
+                                 dp_cfg=self.dp_cfg, key=key)
+
+    def aggregate_updates(self, updates, plan, round_seed, key=None):
+        """Dict path convenience: {cid: update pytree} (sorted-cid row
+        order, like the serial reference)."""
+        cids = sorted(updates)
+        flat, unflatten = stack_flat_updates([updates[c] for c in cids])
+        return unflatten(self.aggregate_flat(flat, plan, cids, round_seed,
+                                             key=key))

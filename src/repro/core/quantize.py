@@ -54,6 +54,43 @@ def dequantize_sum(q_sum, n, clip=DEFAULT_CLIP, bits=DEFAULT_BITS):
     return (mean_code / levels(bits)) * (2.0 * clip) - clip
 
 
+MAX_MASTER_GROUPS = 1 << 16
+
+
+def check_master_headroom(n_groups: int):
+    """Stage-2 guard: the split-limb accumulator of
+    :func:`dequantize_interim_sum` is exact for up to 2^16 virtual groups
+    (each 16-bit half-sum stays below 2^32). Beyond that the master must
+    shard its combine — raise rather than wrap."""
+    if n_groups >= MAX_MASTER_GROUPS:
+        raise ValueError(
+            f"master combine over {n_groups} virtual groups exceeds the "
+            f"{MAX_MASTER_GROUPS - 1}-group exact-accumulation limit")
+
+
+def dequantize_interim_sum(interims, n, clip=DEFAULT_CLIP,
+                           bits=DEFAULT_BITS):
+    """Overflow-safe stage-2 combine: per-VG interim sums -> cohort MEAN.
+
+    ``interims``: (n_groups, size) uint32 exact per-group sums (stage 1
+    guarantees each fits uint32 via the per-group ``check_headroom``);
+    ``n``: total cohort size. The naive uint32 total wraps whenever
+    bits + ceil(log2(n)) > 32 (e.g. 4097+ clients at the default 20 bits).
+    Instead each interim is split into 16-bit halves and the halves are
+    summed in uint32 — exact for < 2^16 groups — then recombined in f32,
+    so the master combine never wraps regardless of cohort size.
+    Wrapping-add is associative, so the result is independent of group
+    order (the vectorized engine relies on this for bit-exact parity with
+    the serial reference)."""
+    interims = interims.astype(U32)
+    lo = jnp.sum(interims & U32(0xFFFF), axis=0, dtype=U32)
+    hi = jnp.sum(interims >> U32(16), axis=0, dtype=U32)
+    total = hi.astype(jnp.float32) * jnp.float32(65536.0) \
+        + lo.astype(jnp.float32)
+    mean_code = total / jnp.float32(n)
+    return (mean_code / levels(bits)) * (2.0 * clip) - clip
+
+
 def quantization_resolution(clip=DEFAULT_CLIP, bits=DEFAULT_BITS) -> float:
     return float(2.0 * clip / ((1 << bits) - 1))
 

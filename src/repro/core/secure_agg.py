@@ -24,8 +24,9 @@ from jax.flatten_util import ravel_pytree
 
 from repro.core import masking
 from repro.core.kdf import U32
-from repro.core.quantize import (DEFAULT_BITS, DEFAULT_CLIP, check_headroom,
-                                 dequantize_sum, quantize)
+from repro.core.quantize import (DEFAULT_BITS, DEFAULT_CLIP,
+                                 check_headroom, check_master_headroom,
+                                 dequantize_interim_sum, quantize)
 
 
 @dataclass(frozen=True)
@@ -33,6 +34,8 @@ class SecureAggConfig:
     bits: int = DEFAULT_BITS
     clip: float = DEFAULT_CLIP
     use_kernels: bool = False   # route mask expansion through Pallas kernels
+    vectorized: bool = True     # whole-cohort pipeline as one compiled call
+                                # (False: serial per-client reference loop)
 
 
 def flatten_update(update_pytree):
@@ -60,18 +63,32 @@ def vg_aggregate(payloads):
     return masking.modular_sum(jnp.stack(list(payloads)))
 
 
+# The combine is jitted ONCE and shared by the serial reference and the
+# vectorized engine: jit FMA-contracts the dequantize mul/sub chain, so an
+# eager master and a jitted engine would differ by ulps. Interims are exact
+# integers on both sides, so sharing this executable makes the final floats
+# bit-identical.
+_combine_jit = jax.jit(dequantize_interim_sum, static_argnums=(1, 2, 3))
+
+
 def master_aggregate(interims, group_sizes, unflatten,
                      cfg: SecureAggConfig = SecureAggConfig()):
     """Stage 2: combine interim VG sums into the cohort-mean update pytree.
 
     interims: list of (size,) uint32; group_sizes: list of int.
-    """
-    total = jnp.zeros_like(interims[0])
-    n = 0
-    for interim, g in zip(interims, group_sizes):
-        total = (total + interim.astype(U32)).astype(U32)
-        n += g
-    mean_flat = dequantize_sum(total, n, cfg.clip, cfg.bits)
+
+    Each interim is exact per the per-group headroom check, but their naive
+    uint32 TOTAL wraps once bits + ceil(log2(total_cohort)) > 32 (4097+
+    clients at the default 20 bits) — the pre-fix code silently corrupted
+    the global mean there. The combine now goes through the split-limb
+    accumulator :func:`repro.core.quantize.dequantize_interim_sum`, exact
+    for any cohort the master can hold (< 2^16 groups, enforced)."""
+    n = int(sum(group_sizes))
+    for g in group_sizes:
+        check_headroom(cfg.bits, int(g))
+    check_master_headroom(len(group_sizes))
+    stacked = jnp.stack([i.astype(U32) for i in interims])
+    mean_flat = _combine_jit(stacked, n, float(cfg.clip), int(cfg.bits))
     return unflatten(mean_flat)
 
 
@@ -95,8 +112,14 @@ def secure_aggregate_round(client_updates, vg_plan, round_seed,
     return master_aggregate(interims, sizes, unflatten, cfg)
 
 
-def _group_seed(round_seed, vg_id: int):
+def group_seed(round_seed, vg_id):
+    """Domain-separated per-VG round seed. ``vg_id`` may be a python int or
+    a traced uint32 (the vectorized engine vmaps this over group ids)."""
     from repro.core.kdf import kdf_u32
     rs = jnp.asarray(round_seed, U32)
-    return jnp.stack([kdf_u32(rs[0], rs[1], jnp.uint32(vg_id)),
-                      kdf_u32(rs[1], rs[0], jnp.uint32(vg_id ^ 0x5BF03635))])
+    vg = jnp.asarray(vg_id, U32)
+    return jnp.stack([kdf_u32(rs[0], rs[1], vg),
+                      kdf_u32(rs[1], rs[0], vg ^ U32(0x5BF03635))])
+
+
+_group_seed = group_seed  # backwards-compat alias

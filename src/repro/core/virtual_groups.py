@@ -65,12 +65,21 @@ def make_virtual_groups(client_ids, vg_size: int, seed: int = 0,
     return VGPlan(groups)
 
 
-def pairwise_cost(n_clients: int, vg_size: int | None = None) -> int:
-    """Number of per-element mask expansions across the cohort."""
+def pairwise_cost(n_clients: int, vg_size: int | None = None,
+                  min_vg_size: int = 2) -> int:
+    """Number of per-element mask expansions across the cohort, for the
+    plan ``make_virtual_groups`` actually builds: a trailing remainder
+    smaller than ``min_vg_size`` MERGES into the previous group (costing
+    (g+rem)(g+rem-1), not g(g-1) + rem(rem-1)); larger remainders form
+    their own group. The pre-fix model priced every remainder as its own
+    group and under-counted merged plans."""
     if not vg_size or vg_size >= n_clients:
         return n_clients * (n_clients - 1)
     n_full = n_clients // vg_size
     rem = n_clients - n_full * vg_size
+    if rem and rem < min_vg_size and n_full:
+        merged = vg_size + rem
+        return (n_full - 1) * vg_size * (vg_size - 1) + merged * (merged - 1)
     cost = n_full * vg_size * (vg_size - 1)
     if rem:
         cost += rem * (rem - 1)

@@ -65,5 +65,17 @@ class SelectionService:
     def mark(self, task: TaskRecord, client_id: str, status: str):
         self._registrations[task.task_id][client_id].status = status
 
+    def reset_round(self, task: TaskRecord):
+        """Start-of-round lifecycle reset: participants still 'selected'
+        or 'done' from the previous round return to the registered pool
+        (without this, cohort members stayed 'selected' forever)."""
+        for reg in self._registrations.get(task.task_id, {}).values():
+            if reg.status in ("selected", "done"):
+                reg.status = "registered"
+
+    def statuses(self, task: TaskRecord) -> dict:
+        return {cid: reg.status for cid, reg in
+                self._registrations.get(task.task_id, {}).items()}
+
     def drop(self, task: TaskRecord, client_id: str):
         self.mark(task, client_id, "dropped")

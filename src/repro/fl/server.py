@@ -14,7 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import dp as dp_mod
-from repro.core.orchestrator import AsyncServer, ClientResult, run_sync_round
+from repro.core.orchestrator import (AsyncServer, ClientResult,
+                                     run_sync_round, run_sync_round_stacked)
 from repro.core.strategies import FedBuff, make_strategy
 from repro.fl.auth import AuthenticationService
 from repro.fl.selection import SelectionService
@@ -149,10 +150,51 @@ class ManagementService:
         if coll is None or client_id not in coll.cohort:
             return False
         coll.results[client_id] = result
+        self.selection.mark(rec, client_id, "done")   # lifecycle: submitted
         if coll.complete():
             self._run_sync_aggregation(rec, coll)
             return True
         return False
+
+    def submit_cohort(self, task_id: int, client_ids, stacked_updates,
+                      n_samples: int, metrics_list=None) -> bool:
+        """Bulk sync submission — the fused fast path: the WHOLE cohort's
+        updates arrive stacked along the client axis (pytree leaves
+        (n_clients, ...)), straight from ``CohortEngine.run_cohort_
+        stacked``, and flow into the vectorized privacy pipeline without
+        ever being unstacked to per-client host copies. Completes the
+        round; returns True iff the round ran.
+
+        ``n_samples`` (per client) is telemetry only: the secure aggregate
+        is the privacy-preserving UNIFORM mean on both the bulk and
+        per-client paths (sample-weighting would leak per-client counts
+        through the aggregate)."""
+        rec = self._tasks[task_id]
+        if rec.status is not TaskStatus.RUNNING or rec.config.mode == "async":
+            return False
+        coll = self._collectors.get(task_id)
+        cids = list(client_ids)
+        if coll is None or len(set(cids)) != len(cids) \
+                or set(cids) != set(coll.cohort):
+            return False
+        strategy = self._strategies[task_id]
+        state = self._strategy_state[task_id]
+        metrics_list = metrics_list or [{} for _ in cids]
+        rec.model, state, info = run_sync_round_stacked(
+            rec.model, strategy, state, cids, stacked_updates, metrics_list,
+            round_idx=coll.round_idx, vg_size=rec.config.vg_size,
+            secure_cfg=rec.config.secure_agg, dp_cfg=rec.config.dp)
+        self._strategy_state[task_id] = state
+        for cid in cids:
+            self.selection.mark(rec, cid, "done")
+        # the round is closed — drop the collector so a straggling
+        # per-client submit_update cannot re-trigger aggregation
+        self._collectors.pop(task_id, None)
+        rec.round_idx += 1
+        self._finish_round(rec, dict(info.metrics, n=info.n_participants,
+                                     n_groups=info.n_groups,
+                                     n_samples_per_client=n_samples))
+        return True
 
     def async_buffer_room(self, task_id: int) -> int:
         """Submissions until the next async server step (>= 1). Sync tasks
@@ -172,6 +214,7 @@ class ManagementService:
         rec = self._tasks[task_id]
         if rec.status is not TaskStatus.RUNNING:
             return rec.round_idx, []
+        self.selection.reset_round(rec)   # last round's selected/done
         cohort = self.selection.select_cohort(rec)
         self._collectors[task_id] = _RoundCollector(rec.round_idx, cohort)
         return rec.round_idx, cohort
@@ -194,7 +237,13 @@ class ManagementService:
         acc = self._accountants.get(rec.task_id)
         if acc is not None:
             pool = max(1, len(self.selection.registered(rec)))
-            acc.q = min(1.0, rec.config.clients_per_round / pool)
+            # mode-correct sample rate: an async server step composes over
+            # the buffer_size clients that filled the FedBuff buffer, not
+            # the sync path's clients_per_round (which async never selects)
+            per_step = (rec.config.buffer_size
+                        if rec.config.mode == "async"
+                        else rec.config.clients_per_round)
+            acc.q = min(1.0, per_step / pool)
             acc.step()
         if rec.round_idx >= rec.config.n_rounds:
             rec.status = TaskStatus.COMPLETED

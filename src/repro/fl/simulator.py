@@ -15,6 +15,13 @@ serial python loop — same protocol traffic through the service, orders of
 magnitude fewer dispatches. The async fast path stacks each client's
 *served-version* params along the client axis (the engine's personalized
 path), so mixed-staleness groups batch too.
+
+The sync fast path is FUSED end to end: ``run_cohort_stacked`` keeps the
+cohort's updates stacked on device and ``ManagementService.submit_cohort``
+feeds them straight into the vectorized privacy pipeline
+(``repro.core.privacy_engine``) — local training AND the §4 privacy chain
+(DP -> quantize -> mask -> VG sums -> master combine) each run as one
+compiled call per round, with no unstack-to-host in between.
 """
 from __future__ import annotations
 
@@ -91,11 +98,19 @@ def run_sync_simulation(service: ManagementService, task_id: int,
                     "CohortEngine.template must be the model pytree "
                     "structure to use the simulator fast path")
             params = deserialize_pytree(blob, like=engine.template)
-            results = engine.run_cohort(params, list(cohort), round_idx)
+            # fused path: the stacked cohort output feeds the vectorized
+            # privacy pipeline directly — no unstack-to-host, no
+            # per-client submit round-trips
+            stacked, losses, n_samples = engine.run_cohort_stacked(
+                params, list(cohort), round_idx)
+            losses = np.asarray(losses)
+            if not service.submit_cohort(
+                    task_id, list(cohort), stacked, n_samples,
+                    [{"loss": float(l)} for l in losses]):
+                raise RuntimeError(
+                    f"bulk submission rejected for round {round_idx} "
+                    f"(cohort {cohort})")
             for cid in cohort:
-                update, n_samples, metrics = results[cid]
-                service.submit_update(task_id, cid, update, n_samples,
-                                      metrics)
                 round_wall = max(round_wall, clients[cid].duration(rng))
         else:
             for cid in cohort:

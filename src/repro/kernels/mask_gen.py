@@ -41,6 +41,55 @@ def _mask_apply_kernel(seeds_ref, q_ref, out_ref, *, n_pairs, base_offset):
     out_ref[...] = jax.lax.fori_loop(0, n_pairs, body, q_ref[...])
 
 
+def _mask_apply_batched_kernel(seeds_ref, q_ref, out_ref, *, n_pairs,
+                               base_offset):
+    # grid (clients, row blocks): axis 0 picks the client's seed rows, axis 1
+    # the payload tile. The element counter depends only on the tile — every
+    # client's mask stream is addressed from the same base offset, exactly
+    # as in the serial per-client protocol.
+    pid = pl.program_id(1)
+    ctr = global_index(pid) + jnp.uint32(base_offset)
+
+    def body(j, acc):
+        k0 = seeds_ref[0, j, 0]
+        k1 = seeds_ref[0, j, 1]
+        sign_pos = seeds_ref[0, j, 2]
+        m = kdf_u32(k0, k1, ctr)
+        return acc + jnp.where(sign_pos == jnp.uint32(1), m,
+                               jnp.uint32(0) - m)
+
+    out_ref[0, :, :] = jax.lax.fori_loop(0, n_pairs, body, q_ref[0, :, :])
+
+
+def mask_apply_batched_tiled(q_tiled, seeds_signs, base_offset=0, *,
+                             interpret=None):
+    """Whole-cohort fused mask expansion: one kernel launch for all clients.
+
+    q_tiled: (n_clients, rows, 128) uint32; seeds_signs: (n_clients,
+    n_pairs, 3) uint32 [k0, k1, sign_pos] per client. Returns masked
+    payloads, same shape as ``q_tiled``. Same HBM traffic as n_clients
+    serial launches (read-q + write-y; masks never round-trip) but a single
+    dispatch with a (clients, row-blocks) grid — the batched hot path the
+    vectorized privacy engine routes through when ``use_kernels=True``."""
+    n_clients, rows, lanes = q_tiled.shape
+    assert rows % ROW_BLOCK == 0 and lanes == LANES
+    n_pairs = seeds_signs.shape[1]
+    assert seeds_signs.shape == (n_clients, n_pairs, 3)
+    interpret = interpret_mode() if interpret is None else interpret
+    return pl.pallas_call(
+        partial(_mask_apply_batched_kernel, n_pairs=n_pairs,
+                base_offset=base_offset),
+        grid=(n_clients, rows // ROW_BLOCK),
+        in_specs=[
+            pl.BlockSpec((1, n_pairs, 3), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, ROW_BLOCK, LANES), lambda b, i: (b, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, ROW_BLOCK, LANES), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q_tiled.shape, jnp.uint32),
+        interpret=interpret,
+    )(seeds_signs, q_tiled)
+
+
 def mask_apply_tiled(q_tiled, seeds_signs, base_offset=0, *, interpret=None):
     """q_tiled: (rows, 128) uint32; seeds_signs: (n_pairs, 3) uint32
     [k0, k1, sign_pos]. Returns masked payload, same shape."""

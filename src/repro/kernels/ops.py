@@ -18,7 +18,7 @@ from repro.kernels import dp_noise as _dp
 from repro.kernels import mask_gen as _mg
 from repro.kernels import quantize as _qz
 from repro.kernels import secure_sum as _ss
-from repro.kernels.common import pad_to_tiles, unpad
+from repro.kernels.common import LANES, ROW_BLOCK, pad_to_tiles, unpad
 
 
 def build_pair_seeds(i: int, n: int, round_seed):
@@ -45,6 +45,42 @@ def mask_apply(q_flat, i: int, n: int, round_seed, offset: int = 0):
     tiled, size = pad_to_tiles(q_flat)
     out = _mg.mask_apply_tiled(tiled, seeds, base_offset=offset)
     return unpad(out, size)
+
+
+def build_pair_seeds_traced(i, g: int, group_seed):
+    """Traced-index twin of ``build_pair_seeds`` for whole-cohort batching:
+    (g-1, 3) uint32 rows [k0, k1, sign_pos] for client ``i`` (traced
+    within-group index) of a group of static size ``g``."""
+    j = jnp.arange(g - 1, dtype=U32)
+    peer = jnp.where(j >= jnp.asarray(i, U32), j + U32(1), j)  # skip self
+    i_arr = jnp.full_like(peer, i)
+    lo = jnp.minimum(i_arr, peer)
+    hi = jnp.maximum(i_arr, peer)
+    ks = jax.vmap(lambda u, v: pair_seed(group_seed, u, v))(lo, hi)
+    sign = (i_arr < peer).astype(U32)
+    return jnp.concatenate([ks, sign[:, None]], axis=1)
+
+
+@partial(jax.jit, static_argnums=(3,))
+def mask_apply_cohort(qs, idxs, group_seeds, g: int, offset: int = 0):
+    """Whole-cohort batched masking: ONE kernel launch for every client of a
+    uniform-group-size bucket (the privacy engine's ``use_kernels`` path).
+
+    qs: (n, size) uint32 quantized updates; idxs: (n,) uint32 within-group
+    indices; group_seeds: (n, 2) uint32 per-client group seeds; ``g`` the
+    bucket's group size. Bit-identical to the per-client
+    ``core.masking.apply_mask`` (wrapping-add order-independence)."""
+    if g <= 1:
+        return qs
+    n, size = qs.shape
+    seeds = jax.vmap(lambda i, s: build_pair_seeds_traced(i, g, s))(
+        idxs, group_seeds)
+    per_block = ROW_BLOCK * LANES
+    padded = -(-size // per_block) * per_block
+    tiled = jnp.pad(qs, ((0, 0), (0, padded - size))).reshape(
+        n, -1, LANES)
+    out = _mg.mask_apply_batched_tiled(tiled, seeds, base_offset=offset)
+    return out.reshape(n, -1)[:, :size]
 
 
 @partial(jax.jit, static_argnums=(1, 2))

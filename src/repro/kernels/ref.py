@@ -18,6 +18,10 @@ def mask_apply(q_flat, i: int, n: int, round_seed, offset: int = 0):
     return masking.apply_mask(q_flat, i, n, round_seed, offset)
 
 
+def mask_apply_cohort(qs, idxs, group_seeds, g: int, offset: int = 0):
+    return masking.protect_cohort_grouped(qs, idxs, group_seeds, g, offset)
+
+
 def quantize(x_flat, clip=DEFAULT_CLIP, bits=DEFAULT_BITS):
     return _quantize(x_flat, clip, bits)
 

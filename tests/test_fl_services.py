@@ -140,3 +140,97 @@ class TestAsync:
         assert eps is not None and eps > 0
         rounds, vals = svc.metrics.series(tid, "loss")
         assert vals == [2.0]
+
+    def test_async_accountant_uses_buffer_rate(self):
+        """Async privacy accounting must compose at q = buffer_size / pool
+        (the K clients per FedBuff server step), not the sync path's
+        clients_per_round / pool — the pre-fix code used the latter for
+        every mode. Epsilon must equal a hand-computed composition."""
+        from repro.core.dp import (DPConfig, compute_rdp,
+                                   get_privacy_spent)
+        dp = DPConfig(mechanism="local", clip_norm=0.5,
+                      noise_multiplier=1.0)
+        # clients_per_round (4) deliberately differs from buffer_size (3)
+        svc, tid, _ = _mk_service_task(mode="async", n_rounds=2, cpr=4,
+                                       buffer_size=3, dp=dp)
+        _register(svc, tid, n=6)   # pool = 6
+        for i in range(6):         # two server steps of 3 submissions each
+            svc.submit_update(tid, f"c{i % 6}", {"w": jnp.ones(8)}, 1)
+        expected_q = 3 / 6
+        rdp = compute_rdp(expected_q, 1.0, steps=2)
+        expected_eps, _ = get_privacy_spent(rdp, dp.delta)
+        assert svc.epsilon(tid) == pytest.approx(expected_eps, rel=1e-9)
+        # and it is NOT the (wrong) sync-rate composition
+        wrong_rdp = compute_rdp(4 / 6, 1.0, steps=2)
+        wrong_eps, _ = get_privacy_spent(wrong_rdp, dp.delta)
+        assert abs(svc.epsilon(tid) - wrong_eps) > 1e-6
+
+
+class TestSelectionLifecycle:
+    def test_two_round_status_cycle(self):
+        """Cohort members go selected -> done on submission, and return to
+        'registered' when the next round begins (pre-fix they stayed
+        'selected' forever — mark was never called)."""
+        svc, tid, _ = _mk_service_task(n_rounds=3, cpr=3)
+        _register(svc, tid, n=6)
+        task = svc.get_task(tid)
+
+        _, cohort1 = svc.begin_round(tid)
+        statuses = svc.selection.statuses(task)
+        assert all(statuses[c] == "selected" for c in cohort1)
+        assert all(statuses[c] == "registered" for c in statuses
+                   if c not in cohort1)
+        for cid in cohort1:
+            svc.submit_update(tid, cid, {"w": jnp.ones(8) * 0.1}, 10)
+        statuses = svc.selection.statuses(task)
+        assert all(statuses[c] == "done" for c in cohort1)
+
+        _, cohort2 = svc.begin_round(tid)
+        statuses = svc.selection.statuses(task)
+        # everyone not selected this round is back to 'registered'
+        assert all(statuses[c] == "selected" for c in cohort2)
+        assert all(statuses[c] == "registered" for c in statuses
+                   if c not in cohort2)
+
+    def test_bulk_submission_marks_done(self):
+        svc, tid, _ = _mk_service_task(n_rounds=2, cpr=4)
+        _register(svc, tid, n=6)
+        task = svc.get_task(tid)
+        _, cohort = svc.begin_round(tid)
+        stacked = {"w": jnp.tile(jnp.ones(8) * 0.1, (len(cohort), 1))}
+        assert svc.submit_cohort(tid, cohort, stacked, 10,
+                                 [{"loss": 1.0}] * len(cohort))
+        statuses = svc.selection.statuses(task)
+        assert all(statuses[c] == "done" for c in cohort)
+
+
+class TestBulkSubmission:
+    def test_submit_cohort_matches_per_client_rounds(self):
+        """The fused bulk path produces the same model as per-client
+        submissions for the same cohort and round."""
+        import numpy as np
+        results = {}
+        for path in ("per-client", "bulk"):
+            svc, tid, _ = _mk_service_task(n_rounds=1, cpr=4)
+            _register(svc, tid, n=6)
+            _, cohort = svc.begin_round(tid)
+            rng = np.random.RandomState(0)
+            ups = {c: jnp.asarray(rng.uniform(-0.2, 0.2, 8), jnp.float32)
+                   for c in cohort}
+            if path == "per-client":
+                for cid in cohort:
+                    svc.submit_update(tid, cid, {"w": ups[cid]}, 10,
+                                      {"loss": 1.0})
+            else:
+                stacked = {"w": jnp.stack([ups[c] for c in cohort])}
+                assert svc.submit_cohort(tid, cohort, stacked, 10,
+                                         [{"loss": 1.0}] * len(cohort))
+            results[path] = np.asarray(svc.get_task(tid).model["w"])
+        np.testing.assert_array_equal(results["per-client"], results["bulk"])
+
+    def test_submit_cohort_rejects_wrong_cohort(self):
+        svc, tid, _ = _mk_service_task(n_rounds=1, cpr=3)
+        _register(svc, tid, n=6)
+        _, cohort = svc.begin_round(tid)
+        stacked = {"w": jnp.zeros((2, 8), jnp.float32)}
+        assert not svc.submit_cohort(tid, cohort[:2], stacked, 10)

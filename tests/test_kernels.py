@@ -36,6 +36,30 @@ def test_mask_apply_kernel_bit_exact(rng, n, i, g):
                                   ref.mask_apply(q, i, g, SEED))
 
 
+@pytest.mark.parametrize("n_clients,g", [(4, 2), (8, 4), (5, 5), (3, 1)])
+@pytest.mark.parametrize("size", [100, 33_000])
+def test_mask_apply_cohort_kernel_bit_exact(rng, n_clients, g, size):
+    """Batched whole-cohort kernel == per-client oracle, bit for bit
+    (including g=1 degenerate groups and ragged client counts)."""
+    from repro.core.secure_agg import group_seed
+    qs = jnp.asarray(rng.randint(0, 2**18, (n_clients, size),
+                                 dtype=np.uint32))
+    idxs = jnp.asarray([i % g for i in range(n_clients)], jnp.uint32)
+    vgs = jnp.asarray([i // g for i in range(n_clients)], jnp.uint32)
+    gseeds = jnp.stack([group_seed(SEED, int(v)) for v in vgs])
+    np.testing.assert_array_equal(
+        np.asarray(ops.mask_apply_cohort(qs, idxs, gseeds, g)),
+        np.asarray(ref.mask_apply_cohort(qs, idxs, gseeds, g)))
+
+
+def test_build_pair_seeds_traced_matches_static():
+    g = 5
+    for i in range(g):
+        a = ops.build_pair_seeds(i, g, SEED)
+        b = ops.build_pair_seeds_traced(jnp.uint32(i), g, SEED)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 @pytest.mark.parametrize("clients", [1, 2, 5, 16])
 @pytest.mark.parametrize("n", [100, 33_000])
 def test_secure_sum_kernel_bit_exact(rng, clients, n):

@@ -1,0 +1,228 @@
+"""Vectorized privacy engine (repro.core.privacy_engine): bit-exact parity
+with the serial reference across ragged plans, bits, and DP mechanisms;
+the stage-2 overflow regression; bucket planning; the fused stacked entry;
+and the batched kernel path. (No hypothesis dependency — the wider random
+sweep lives in test_privacy_engine_property.py.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dp as dp_mod
+from repro.core import privacy_engine as pe
+from repro.core import secure_agg as sa
+from repro.core.orchestrator import (ClientResult, _secure_mean_serial,
+                                     run_sync_round, run_sync_round_stacked)
+from repro.core.strategies import FedAvg
+from repro.core.virtual_groups import make_virtual_groups, pairwise_cost
+
+
+def _updates(rng, n, shape=(6, 3)):
+    return {f"c{i:03d}": {"w": jnp.asarray(
+        rng.uniform(-0.6, 0.6, shape).astype(np.float32))}
+        for i in range(n)}
+
+
+def _both(updates, plan, seed, key, scfg, dcfg):
+    serial = _secure_mean_serial(dict(sorted(updates.items())), plan, seed,
+                                 key, sa.SecureAggConfig(bits=scfg.bits,
+                                                         clip=scfg.clip),
+                                 dcfg)
+    vect = pe.PrivacyEngine(scfg, dcfg).aggregate_updates(
+        updates, plan, seed, key=key)
+    return serial, vect
+
+
+# ---------------------------------------------------------------------------
+# stage-2 overflow regression (ISSUE satellite 1)
+# ---------------------------------------------------------------------------
+
+def test_master_aggregate_no_stage2_overflow():
+    """Stage-2 overflow regression: bits=28, vg=8, cohort=32 passes the
+    per-group headroom check (28 + 3 = 31 <= 32) but the cohort TOTAL needs
+    28 + 5 = 33 bits — the pre-fix master summed interims in uint32 and
+    silently wrapped mod 2^32 (this exact case dequantized to 0.0 instead
+    of 1.0). The split-limb combine keeps it exact."""
+    bits, g, n = 28, 8, 32
+    cfg = sa.SecureAggConfig(bits=bits)
+    updates = {i: jnp.full(16, 1.0, jnp.float32) for i in range(n)}  # +clip
+    plan = make_virtual_groups(list(updates), g, seed=0)
+    agg = sa.secure_aggregate_round(updates, plan,
+                                    jnp.asarray([1, 2], jnp.uint32), cfg)
+    np.testing.assert_allclose(np.asarray(agg), 1.0, atol=1e-5)
+
+
+def test_master_aggregate_large_cohort_small_bits():
+    """4096+ clients at the default 20 bits (the ISSUE's wrap case) stays
+    exact through the master combine."""
+    from repro.core.quantize import dequantize_interim_sum
+    bits, g = 20, 8
+    n_groups = 520            # 4160 clients: 20 + ceil(log2(4160)) = 33 > 32
+    n = n_groups * g
+    # every client at the max code: interim = g * (2^bits - 1), exact
+    interims = jnp.full((n_groups, 8), g * ((1 << bits) - 1), jnp.uint32)
+    mean = dequantize_interim_sum(interims, n, 1.0, bits)
+    np.testing.assert_allclose(np.asarray(mean), 1.0, atol=1e-5)
+
+
+def test_master_group_count_guard():
+    from repro.core.quantize import check_master_headroom
+    check_master_headroom(65535)
+    with pytest.raises(ValueError):
+        check_master_headroom(1 << 16)
+
+
+# ---------------------------------------------------------------------------
+# cost model consistency (ISSUE satellite 2) — deterministic sweep
+# ---------------------------------------------------------------------------
+
+def test_pairwise_cost_matches_real_plans_sweep():
+    """pairwise_cost must price the plan make_virtual_groups actually
+    builds, including the remainder-merge rule."""
+    for g in (2, 3, 4, 5, 8, 16, 32):
+        for n in range(1, 121):
+            plan = make_virtual_groups(range(n), g, seed=0)
+            actual = sum(len(grp.members) * (len(grp.members) - 1)
+                         for grp in plan.groups)
+            assert pairwise_cost(n, g) == actual, (n, g)
+
+
+# ---------------------------------------------------------------------------
+# bucket planning
+# ---------------------------------------------------------------------------
+
+def test_plan_buckets_two_shapes_max():
+    """The merge rule yields at most two group sizes -> <= 2 buckets."""
+    for n in range(1, 40):
+        cids = [f"c{i:03d}" for i in range(n)]
+        plan = make_virtual_groups(cids, 4, seed=n)
+        buckets = pe.plan_buckets(plan, cids)
+        assert 1 <= len(buckets) <= 2
+        rows = [r for b in buckets for r in b.rows]
+        assert sorted(rows) == list(range(n))
+        for b in buckets:
+            assert len(b.rows) == b.g * b.n_groups
+
+
+def test_plan_buckets_rejects_duplicates():
+    plan = make_virtual_groups(["a", "b"], 2, seed=0)
+    with pytest.raises(ValueError):
+        pe.plan_buckets(plan, ["a", "a"])
+
+
+# ---------------------------------------------------------------------------
+# parity: deterministic sweep (the hypothesis version adds random coverage)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,vg_size,bits,mech,noise", [
+    (12, 4, 20, "off", 0.0),     # uniform groups
+    (13, 4, 20, "off", 0.0),     # ragged: trailing remainder merges
+    (11, 4, 16, "local", 0.9),   # ragged + local DP noise
+    (11, 4, 16, "local", 0.0),   # clip-only local DP
+    (10, 3, 24, "global", 0.5),  # global mechanism (clip per client)
+    (7, 16, 12, "off", 0.0),     # single group larger than cohort
+    (1, 4, 20, "local", 0.5),    # single-client cohort
+])
+def test_vectorized_bit_identical_to_serial(n, vg_size, bits, mech, noise):
+    rng = np.random.RandomState(n * 100 + bits)
+    updates = {f"c{i:03d}": jnp.asarray(
+        rng.uniform(-1.2, 1.2, 57).astype(np.float32)) for i in range(n)}
+    plan = make_virtual_groups(list(updates), vg_size, seed=n)
+    round_seed = jnp.asarray(rng.randint(0, 2**31, 2), jnp.uint32)
+    key = jax.random.PRNGKey(n)
+    scfg = sa.SecureAggConfig(bits=bits)
+    dcfg = dp_mod.DPConfig(mechanism=mech, clip_norm=0.5,
+                           noise_multiplier=noise)
+    serial, vect = _both(updates, plan, round_seed, key, scfg, dcfg)
+    np.testing.assert_array_equal(np.asarray(serial), np.asarray(vect))
+
+
+def test_kernel_path_bit_identical():
+    """use_kernels routes mask expansion through the batched Pallas kernel;
+    wrapping-add order-independence keeps the result bit-identical."""
+    rng = np.random.RandomState(3)
+    updates = _updates(rng, 13)
+    plan = make_virtual_groups(list(updates), 4, seed=0)  # ragged: merged 5
+    seed = jnp.asarray([9, 9], jnp.uint32)
+    key = jax.random.PRNGKey(0)
+    dcfg = dp_mod.DPConfig(mechanism="local", clip_norm=0.5,
+                           noise_multiplier=0.6)
+    serial, vect = _both(updates, plan, seed, key,
+                         sa.SecureAggConfig(use_kernels=True), dcfg)
+    np.testing.assert_array_equal(np.asarray(serial["w"]),
+                                  np.asarray(vect["w"]))
+
+
+# ---------------------------------------------------------------------------
+# fused stacked entry + round-level wiring
+# ---------------------------------------------------------------------------
+
+def test_run_sync_round_vectorized_matches_serial():
+    """The orchestrator's default fast path reproduces the serial round
+    bit-exactly (same strategy update on a bit-identical delta)."""
+    rng = np.random.RandomState(5)
+    updates = _updates(rng, 10)
+    results = {c: ClientResult(update=u, n_samples=4, metrics={"loss": 1.0})
+               for c, u in updates.items()}
+    params = {"w": jnp.zeros((6, 3), jnp.float32)}
+    strat = FedAvg(server_lr=1.0)
+    for dcfg in [dp_mod.DPConfig(),
+                 dp_mod.DPConfig(mechanism="local", clip_norm=0.5,
+                                 noise_multiplier=0.4),
+                 dp_mod.DPConfig(mechanism="global", clip_norm=0.5,
+                                 noise_multiplier=0.4)]:
+        p_v, _, _ = run_sync_round(
+            params, strat, strat.init_state(params), results,
+            round_idx=2, vg_size=4, dp_cfg=dcfg,
+            secure_cfg=sa.SecureAggConfig(vectorized=True))
+        p_s, _, _ = run_sync_round(
+            params, strat, strat.init_state(params), results,
+            round_idx=2, vg_size=4, dp_cfg=dcfg,
+            secure_cfg=sa.SecureAggConfig(vectorized=False))
+        np.testing.assert_array_equal(np.asarray(p_v["w"]),
+                                      np.asarray(p_s["w"]))
+
+
+def test_stacked_round_matches_dict_round():
+    """The fused entry (stacked leaves, no per-client dicts) is the same
+    round as the dict path — including out-of-order client rows."""
+    rng = np.random.RandomState(6)
+    updates = _updates(rng, 9)
+    cids = list(updates)
+    results = {c: ClientResult(update=updates[c], n_samples=4,
+                               metrics={"loss": 2.0}) for c in cids}
+    params = {"w": jnp.zeros((6, 3), jnp.float32)}
+    strat = FedAvg(server_lr=1.0)
+    p_d, _, info_d = run_sync_round(
+        params, strat, strat.init_state(params), results,
+        round_idx=1, vg_size=4)
+    # reversed order: run_sync_round_stacked must re-sort rows internally
+    rev = list(reversed(cids))
+    stacked = {"w": jnp.stack([updates[c]["w"] for c in rev])}
+    p_s, _, info_s = run_sync_round_stacked(
+        params, strat, strat.init_state(params), rev, stacked,
+        [{"loss": 2.0}] * len(rev), round_idx=1, vg_size=4)
+    np.testing.assert_array_equal(np.asarray(p_d["w"]), np.asarray(p_s["w"]))
+    assert info_d.metrics == info_s.metrics
+    assert info_d.n_groups == info_s.n_groups
+
+
+def test_aggregate_stacked_multi_leaf():
+    rng = np.random.RandomState(7)
+    n = 8
+    updates = {f"c{i}": {"a": jnp.asarray(rng.uniform(-1, 1, (3, 2)),
+                                          jnp.float32),
+                         "b": jnp.asarray(rng.uniform(-1, 1, 5),
+                                          jnp.float32)}
+               for i in range(n)}
+    cids = sorted(updates)
+    plan = make_virtual_groups(cids, 4, seed=0)
+    seed = jnp.asarray([4, 2], jnp.uint32)
+    stacked = {"a": jnp.stack([updates[c]["a"] for c in cids]),
+               "b": jnp.stack([updates[c]["b"] for c in cids])}
+    fused = pe.aggregate_stacked(stacked, plan, cids, seed)
+    ref = pe.PrivacyEngine().aggregate_updates(updates, plan, seed)
+    np.testing.assert_array_equal(np.asarray(fused["a"]),
+                                  np.asarray(ref["a"]))
+    np.testing.assert_array_equal(np.asarray(fused["b"]),
+                                  np.asarray(ref["b"]))

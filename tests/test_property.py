@@ -74,3 +74,15 @@ def test_vg_cost_reduction(n):
     assert pairwise_cost(n, g) <= pairwise_cost(n)
     if n > 200:
         assert pairwise_cost(n, g) < 0.2 * pairwise_cost(n)
+
+
+@settings(deadline=None, max_examples=60)
+@given(n=st.integers(1, 400), g=st.integers(2, 32))
+def test_pairwise_cost_matches_real_plans(n, g):
+    """The cost model must price the plan make_virtual_groups actually
+    builds — including the remainder-merge rule (a trailing remainder
+    < min_vg_size joins the previous group, costing (g+rem)(g+rem-1))."""
+    plan = make_virtual_groups(range(n), g, seed=0)
+    actual = sum(len(grp.members) * (len(grp.members) - 1)
+                 for grp in plan.groups)
+    assert pairwise_cost(n, g) == actual
