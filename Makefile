@@ -1,15 +1,16 @@
 # Tier-1 verification (ROADMAP.md): full test suite, dev deps included so
 # the hypothesis property tests actually run (they importorskip otherwise),
-# plus a tiny-scale secure-agg bench smoke so the vectorized privacy
-# pipeline (serial/vectorized/kernels) is exercised end to end.
+# plus tiny-scale bench smokes so the vectorized privacy pipeline
+# (serial/vectorized/kernels) and the fused async FedBuff path
+# (batched DP + device buffer + one-dispatch drain) are exercised end to end.
 PY ?= python
 
-.PHONY: verify test deps bench-cohort bench-secureagg-smoke
+.PHONY: verify test deps bench-cohort bench-secureagg-smoke bench-async-smoke
 
 deps:
 	$(PY) -m pip install -r requirements-dev.txt
 
-verify: deps test bench-secureagg-smoke
+verify: deps test bench-secureagg-smoke bench-async-smoke
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -19,3 +20,6 @@ bench-cohort:
 
 bench-secureagg-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.bench_secureagg --quick
+
+bench-async-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.bench_async --quick

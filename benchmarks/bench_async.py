@@ -1,15 +1,87 @@
 """Paper Fig. 11 (center): per-iteration duration — sync vs async (buffer
 32) vs async with over-participation (2x client pool), under the
 heterogeneous-client virtual clock. Expected ordering (paper): sync >
-async > async+over-participation, with comparable accuracies."""
+async > async+over-participation, with comparable accuracies.
+
+Plus the ISSUE 3 server-step (host-compute) benchmark: wall time of one
+full buffer fill + drain through the serial ``AsyncServer.submit`` loop vs
+the fused ``submit_batch`` (batched DP rows, one buffer write, one-dispatch
+drain) at buffer sizes {32, 256, 1024} — the tracked number behind the
+async tentpole, independent of virtual-clock time.
+"""
 from __future__ import annotations
 
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import SpamWorld
+from repro.core.dp import DPConfig
+from repro.core.orchestrator import AsyncServer, ClientResult
+from repro.core.strategies import FedBuff
 from repro.fl import ManagementService, TaskConfig
 from repro.fl.simulator import (make_heterogeneous_clients,
                                 run_async_simulation, run_sync_simulation)
+
+
+def _mk_server(buffer_size: int, size: int, dp: str = "local"):
+    params = {"w": jnp.zeros(size, jnp.float32)}
+    cfg = DPConfig(mechanism=dp, clip_norm=0.5,
+                   noise_multiplier=1.0 if dp == "local" else 0.0)
+    return AsyncServer(params, FedBuff(buffer_size=buffer_size), cfg)
+
+
+def _server_step_times(buffer_size: int, size: int = 16_384,
+                       repeats: int = 3) -> dict:
+    """Host-compute seconds for one full fill + server step, serial vs
+    batched (fresh servers per path; first fill warms the jit caches)."""
+    rng = np.random.RandomState(0)
+    host_rows = rng.uniform(-1, 1, (buffer_size, size)).astype(np.float32)
+    dev_rows = jnp.asarray(host_rows)
+    weights = [1.0] * buffer_size
+
+    def serial_fill(server):
+        v = server.model_version
+        for j in range(buffer_size):
+            server.submit(ClientResult(update={"w": dev_rows[j]},
+                                       n_samples=1), v)
+        jax.block_until_ready(server.params["w"])
+
+    def batch_fill(server):
+        v = server.model_version
+        server.submit_batch(dev_rows, weights, [v] * buffer_size)
+        jax.block_until_ready(server.params["w"])
+
+    out = {}
+    for name, fill in (("serial", serial_fill), ("batch", batch_fill)):
+        server = _mk_server(buffer_size, size)
+        fill(server)                      # warmup / compile
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            fill(server)
+        out[name] = (time.perf_counter() - t0) / repeats
+    return out
+
+
+def server_step_bench(quick=False):
+    sizes = (32, 256) if quick else (32, 256, 1024)
+    size = 1 << 12 if quick else 1 << 14
+    rows = []
+    print(f"# async server step (host compute), model={size} elems, "
+          f"local DP: serial submit loop vs submit_batch + fused drain")
+    for b in sizes:
+        t = _server_step_times(b, size=size, repeats=2 if quick else 3)
+        speedup = t["serial"] / t["batch"]
+        print(f"#   buffer {b:5d} | serial {t['serial'] * 1e3:9.2f} ms | "
+              f"batch {t['batch'] * 1e3:7.2f} ms | {speedup:7.1f}x")
+        rows.append((f"async_step_serial_b{b}", t["serial"] * 1e6, ""))
+        rows.append((f"async_step_batch_b{b}", t["batch"] * 1e6, ""))
+        rows.append((f"async_step_speedup_b{b}", speedup,
+                     f"{speedup:.1f}x at buffer {b}"))
+    return rows
 
 
 def main(rounds=8, quick=False):
@@ -59,10 +131,17 @@ def main(rounds=8, quick=False):
         ("fig11_center_async_iter_s", d_async * 1e6, f"acc={a(r_async):.3f}"),
         ("fig11_center_async_over_iter_s", d_over * 1e6,
          f"acc={a(r_over):.3f}"),
-        ("fig11_center_async_speedup", 0.0, f"{d_sync / d_async:.2f}x"),
-    ]
+        # the speedup IS the metric value (was 0.0 with the ratio buried
+        # in the note string)
+        ("fig11_center_async_speedup", d_sync / d_async,
+         "sync/async iter-duration ratio"),
+    ] + server_step_bench(quick=quick)
 
 
 if __name__ == "__main__":
-    for r in main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny shapes — the CI / make-verify smoke run")
+    args = ap.parse_args()
+    for r in main(quick=args.quick):
         print(",".join(str(x) for x in r))

@@ -10,7 +10,9 @@ from repro.core.orchestrator import (AsyncServer, ClientResult, RoundInfo,
                                      execute_cohort, run_sync_round,
                                      run_sync_round_stacked)
 from repro.core.privacy_engine import (BucketSpec, PrivacyEngine,
-                                       plan_buckets, stack_flat_updates)
+                                       plan_buckets, ravel_rows,
+                                       stack_flat_updates)
+from repro.core.raveling import cached_unflatten, tree_signature
 from repro.core.quantize import (DEFAULT_BITS, DEFAULT_CLIP, check_headroom,
                                  check_master_headroom, dequantize,
                                  dequantize_interim_sum, dequantize_sum,

@@ -194,13 +194,8 @@ class CohortEngine:
     def run_cohort(self, params, client_ids, round_idx: int):
         """Shared-params cohort -> {cid: (delta, n_samples, metrics)}.
         client_ids must be unique (one submission per client per round)."""
-        batches = stack_trees([self.batch_fn(cid, round_idx)
-                               for cid in client_ids])
-        if self.mesh is not None:
-            self._check_divisible(len(client_ids))
-        deltas, losses = self._cohort_fn(False)(params, batches)
-        return dict(zip(client_ids,
-                        self._unpack(batches, deltas, losses)))
+        out = self.run_cohort_stacked(params, client_ids, round_idx)
+        return dict(zip(client_ids, self._unpack(*out)))
 
     def run_cohort_stacked(self, params, client_ids, round_idx: int):
         """Fused-path variant of :meth:`run_cohort`: returns
@@ -221,6 +216,18 @@ class CohortEngine:
         cohorts) -> [(delta, n_samples, metrics), ...] in input order.
         Positional because async event groups may contain the same client
         twice (a fast client re-submitting before the next server step)."""
+        return self._unpack(*self.run_cohort_personalized_stacked(
+            params_list, client_ids, round_idxs))
+
+    def run_cohort_personalized_stacked(self, params_list, client_ids,
+                                        round_idxs):
+        """Fused-path variant of :meth:`run_cohort_personalized`: returns
+        ``(stacked_deltas, losses (n,), n_samples_per_client)`` with the
+        client axis still stacked on device — feed straight into the async
+        bulk route (``ManagementService.submit_updates_async`` ->
+        ``AsyncServer.submit_batch``) without the unstack-to-host round
+        trip. Positional like its per-client twin (async event groups may
+        repeat a client)."""
         stacked_params = jax.tree.map(lambda *xs: jnp.stack(xs),
                                       *params_list)
         batches = stack_trees([self.batch_fn(cid, r)
@@ -228,7 +235,7 @@ class CohortEngine:
         if self.mesh is not None:
             self._check_divisible(len(client_ids))
         deltas, losses = self._cohort_fn(True)(stacked_params, batches)
-        return self._unpack(batches, deltas, losses)
+        return deltas, losses, self._n_samples(batches, stacked=True)
 
     # -- adapters ----------------------------------------------------------
 
@@ -262,9 +269,8 @@ class CohortEngine:
         steps, b = leaf.shape[(1 if stacked else 0):][:2]
         return int(steps) * int(b)
 
-    def _unpack(self, batches, deltas, losses):
-        n = self._n_samples(batches, stacked=True)
+    def _unpack(self, deltas, losses, n_samples):
         losses = np.asarray(losses)
-        return [(delta, n, {"loss": float(losses[j])})
+        return [(delta, n_samples, {"loss": float(losses[j])})
                 for j, delta in enumerate(unstack_tree(deltas,
                                                        len(losses)))]

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -53,6 +54,28 @@ def flat_local_dp(flat, key, *, clip_norm: float, sigma: float):
 
 _flat_local_dp_jit = jax.jit(flat_local_dp,
                              static_argnames=("clip_norm", "sigma"))
+
+
+@partial(jax.jit, static_argnames=("clip_norm", "sigma"))
+def _flat_local_dp_rows_jit(rows, key, start, *, clip_norm, sigma):
+    keys = jax.vmap(lambda j: jax.random.fold_in(key, j))(
+        start + jnp.arange(rows.shape[0], dtype=jnp.uint32))
+    return jax.vmap(partial(flat_local_dp, clip_norm=clip_norm,
+                            sigma=sigma))(rows, keys)
+
+
+def flat_local_dp_rows(rows, key, start: int, *, clip_norm: float,
+                       sigma: float):
+    """Batched :func:`flat_local_dp` over (n, size) stacked rows in ONE
+    jitted call; row ``i`` uses ``fold_in(key, start + i)`` — the same
+    deterministic key-fold the async server's serial submit loop applies at
+    submission counter ``start + i``, and the same vmap-of-the-shared-
+    function pattern the sync privacy engine uses, so serial and batched
+    DP rows are bit-identical (the PR-2 parity contract)."""
+    return _flat_local_dp_rows_jit(rows.astype(jnp.float32), key,
+                                   jnp.asarray(start, jnp.uint32),
+                                   clip_norm=float(clip_norm),
+                                   sigma=float(sigma))
 
 
 def flat_clip(flat, *, clip_norm: float):

@@ -9,6 +9,14 @@ pipeline of §4 wired in the paper's order:
 The service personas (selection, auth, task state) live in ``repro.fl``;
 this module is the pure protocol math so it can be tested and reused by both
 the cross-device simulator and the on-pod ``launch/train.py`` path.
+
+The async (Papaya/FedBuff) path lives in :class:`AsyncServer`: a serial
+per-submission reference (``submit``) and a fused batch entry
+(``submit_batch``) over the same device-resident buffer
+(``strategies.FedBuff`` — see its module docstring for the buffer layout).
+Parity contract: batch DP key-folds follow the global submission counter,
+so N serial submits and one batch produce bit-identical buffers, weights,
+and models.
 """
 from __future__ import annotations
 
@@ -20,6 +28,7 @@ import jax.numpy as jnp
 
 from repro.core import dp as dp_mod
 from repro.core import privacy_engine as pe
+from repro.core import raveling
 from repro.core import secure_agg as sa
 from repro.core.strategies import FedBuff
 from repro.core.virtual_groups import make_virtual_groups
@@ -185,7 +194,22 @@ def avg_metrics(client_results: dict) -> dict:
 
 class AsyncServer:
     """Papaya-style async loop (paper §4.3): no VG masking (trusted
-    aggregation boundary), staleness-weighted buffer of size K."""
+    aggregation boundary), staleness-weighted buffer of size K.
+
+    Two entries over the same device-resident FedBuff buffer:
+
+    ``submit``        — the kept serial reference: ravel one update, apply
+                        local DP with key ``fold_in(base, counter)``, offer
+                        one row, drain on fill.
+    ``submit_batch``  — the fused fast path: batched DP over all rows in
+                        one jitted call (counters ``start..start+k``, the
+                        SAME key-fold order the serial loop uses), rows
+                        written per buffer segment with one
+                        ``dynamic_update_slice`` each, draining mid-batch
+                        whenever the buffer fills — bit-identical to k
+                        serial ``submit`` calls in the same order
+                        (tests/test_async_fused.py).
+    """
 
     def __init__(self, params, strategy: FedBuff,
                  dp_cfg: dp_mod.DPConfig = dp_mod.DPConfig(), seed: int = 0):
@@ -193,25 +217,66 @@ class AsyncServer:
         self.strategy = strategy
         self.state = strategy.init_state(params)
         self.dp_cfg = dp_cfg
-        self._key = jax.random.PRNGKey(seed)
+        self._base_key = jax.random.PRNGKey(seed)
+        self._n_submissions = 0    # DP key-fold counter, shared by both paths
         self.n_server_steps = 0
 
     @property
     def model_version(self) -> int:
         return self.state["model_version"]
 
+    def _dp_sigma(self) -> float:
+        return float(self.dp_cfg.noise_multiplier * self.dp_cfg.clip_norm) \
+            if self.dp_cfg.noise_multiplier > 0 else 0.0
+
+    def _step(self):
+        self.params, self.state = self.strategy.drain(self.params,
+                                                      self.state)
+        self.n_server_steps += 1
+
     def submit(self, result: ClientResult, update_version: int):
         """Client pushes one pseudo-gradient. Returns True if the buffer
         drained (server step happened)."""
-        u = result.update
+        flat = raveling.flat_f32(result.update)
         if self.dp_cfg.mechanism == "local":
-            self._key, sub = jax.random.split(self._key)
-            u = dp_mod.local_dp(u, self.dp_cfg, sub)
-        full = self.strategy.offer(u, float(result.n_samples),
-                                   update_version, self.model_version)
+            key = jax.random.fold_in(self._base_key, self._n_submissions)
+            flat = dp_mod._flat_local_dp_jit(
+                flat, key, clip_norm=float(self.dp_cfg.clip_norm),
+                sigma=self._dp_sigma())
+        self._n_submissions += 1
+        full = self.strategy.offer_flat(flat, float(result.n_samples),
+                                        update_version, self.model_version)
         if full:
-            self.params, self.state = self.strategy.drain(self.params,
-                                                          self.state)
-            self.n_server_steps += 1
+            self._step()
             return True
         return False
+
+    def submit_batch(self, stacked_flat, weights, versions) -> list:
+        """Bulk entry: ``stacked_flat`` is (k, size) raveled updates in
+        submission order, ``weights``/``versions`` per-row n_samples and
+        update versions. Steps the server mid-batch whenever the buffer
+        fills (staleness for later rows sees the bumped version, exactly
+        like the serial loop). Returns the batch row indices whose
+        submission completed a server step ([] if none)."""
+        rows = jnp.asarray(stacked_flat, jnp.float32)
+        k = rows.shape[0]
+        if len(weights) != k or len(versions) != k:
+            raise ValueError("weights/versions must match the batch rows")
+        if self.dp_cfg.mechanism == "local":
+            rows = dp_mod.flat_local_dp_rows(
+                rows, self._base_key, self._n_submissions,
+                clip_norm=float(self.dp_cfg.clip_norm),
+                sigma=self._dp_sigma())
+        self._n_submissions += k
+        steps, i = [], 0
+        while i < k:
+            take = min(self.strategy.room(), k - i)
+            full = self.strategy.offer_rows(
+                rows if (i == 0 and take == k) else rows[i:i + take],
+                weights[i:i + take], versions[i:i + take],
+                self.model_version)
+            i += take
+            if full:
+                self._step()
+                steps.append(i - 1)
+        return steps

@@ -45,6 +45,7 @@ from jax.flatten_util import ravel_pytree
 
 from repro.core import dp as dp_mod
 from repro.core import masking
+from repro.core import raveling
 from repro.core.kdf import U32
 from repro.core.quantize import (check_headroom, check_master_headroom,
                                  quantize)
@@ -142,9 +143,9 @@ def _cohort_interims(flat, round_seed, key, rows_t, vgs_t, *,
 
 
 @jax.jit
-def _ravel_rows(stacked_updates):
+def ravel_rows(stacked_updates):
     """Stacked pytree (leaves (n, ...)) -> (n, size) f32, in-jit (the fused
-    entry never unstacks to host)."""
+    entries — sync cohort and async buffer — never unstack to host)."""
     return jax.vmap(
         lambda t: ravel_pytree(t)[0].astype(jnp.float32))(stacked_updates)
 
@@ -153,13 +154,15 @@ def stack_flat_updates(updates):
     """[update pytree, ...] -> ((n, size) device array, unflatten fn).
 
     Host-side np staging (one transfer, not n_leaves * n transfers) for the
-    orchestrator path whose inputs are per-client host pytrees."""
+    orchestrator path whose inputs are per-client host pytrees. The
+    unflatten closure is cached by treedef+shapes (``repro.core.raveling``)
+    instead of being rebuilt — with a throwaway data ravel — every round."""
     rows = []
     for u in updates:
         rows.append(np.concatenate(
             [np.asarray(leaf, np.float32).ravel()
              for leaf in jax.tree.leaves(u)]))
-    _, unflatten = ravel_pytree(updates[0])
+    _, unflatten = raveling.cached_unflatten(updates[0])
     return jnp.asarray(np.stack(rows)), unflatten
 
 
@@ -196,9 +199,9 @@ def aggregate_stacked(stacked_updates, plan, client_order, round_seed, *,
     """Fused entry: consume a CohortEngine's already-stacked cohort output
     (leaves (n, ...)) directly — no unstack-to-host, no per-client dicts.
     Returns the cohort-mean update pytree."""
-    flat = _ravel_rows(stacked_updates)
+    flat = ravel_rows(stacked_updates)
     template = jax.tree.map(lambda a: a[0], stacked_updates)
-    _, unflatten = ravel_pytree(template)
+    _, unflatten = raveling.cached_unflatten(template)
     mean_flat = aggregate_flat(flat, plan, client_order, round_seed,
                                secure_cfg=secure_cfg, dp_cfg=dp_cfg, key=key)
     return unflatten(mean_flat)

@@ -1,0 +1,51 @@
+"""Cached pytree <-> flat-vector raveling helpers.
+
+``jax.flatten_util.ravel_pytree`` rebuilds its unflatten closure (re-walking
+the treedef and recomputing every leaf's shape/offset) on every call. The
+round- and step-level hot paths ravel the SAME structure every time — the
+sync orchestrator once per round (``privacy_engine.stack_flat_updates``),
+the async server once per drain (``strategies.FedBuff``'s raveled-params
+cache) — so the closure is cached here, keyed by everything it can depend
+on: the treedef plus per-leaf shapes and dtypes.
+
+A cache hit also avoids the throwaway data ravel that callers previously
+paid just to obtain the closure (``ravel_pytree(updates[0])[1]``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+_UNFLATTEN_CACHE: dict = {}
+
+
+def tree_signature(tree) -> tuple:
+    """Hashable (treedef, ((shape, dtype), ...)) key — exactly the inputs
+    ``ravel_pytree``'s unflatten closure is a function of."""
+    leaves, treedef = jax.tree.flatten(tree)
+    return (treedef,
+            tuple((jnp.shape(leaf), jnp.result_type(leaf))
+                  for leaf in leaves))
+
+
+def cached_unflatten(tree):
+    """-> (flat_size, unflatten) for ``tree``'s structure.
+
+    On a hit no per-call flatten work happens at all; on a miss the closure
+    is built once via ``ravel_pytree`` and memoized. Sound because the
+    closure depends only on :func:`tree_signature` (leaf VALUES never enter
+    it)."""
+    sig = tree_signature(tree)
+    hit = _UNFLATTEN_CACHE.get(sig)
+    if hit is None:
+        flat, unflatten = ravel_pytree(tree)
+        hit = (int(flat.size), unflatten)
+        _UNFLATTEN_CACHE[sig] = hit
+    return hit
+
+
+def flat_f32(tree):
+    """Ravel ``tree`` to a (size,) f32 row (exact: reshape/concat/cast
+    only — no float arithmetic)."""
+    return ravel_pytree(tree)[0].astype(jnp.float32)

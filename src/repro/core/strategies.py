@@ -4,13 +4,39 @@ FedAvg, FedProx, DGA, plus server momentum, and FedBuff for the async path.
 A Strategy consumes per-client (or per-VG-mean) pseudo-gradients and emits
 the server model update. Client-side parts (FedProx's proximal term) live in
 ``repro.optim.fedprox``.
+
+FedBuff buffer layout (the async fast path's device-resident state):
+
+    _rows    : (buffer_size, size) f32 device array — one raveled update
+               per row, rows [0, _cursor) valid, written in submission
+               order by single-dispatch ``dynamic_update_slice`` (donated,
+               so XLA updates in place)
+    _weights : (buffer_size,) np.float32 HOST vector — n_samples x
+               staleness discount per row (host floats so the serial and
+               batched offer paths compute bit-identical weights)
+    _cursor  : fill pointer; ``room() == buffer_size - _cursor``
+
+``drain`` is ONE jitted call: mask weights past the cursor, normalize,
+weighted-mean the buffer (a single matvec), and axpy the delta onto the
+RAVELED params — which are cached across drains (``donate_argnums`` updates
+them in place), so the server step never tree-maps over leaves.
+
+Parity contract (the async analogue of the privacy engine's): the serial
+per-submission path (``offer``) and the batched path (``offer_rows``) write
+bit-identical buffer contents and weights, and both drain through the SAME
+jitted function — so N serial submits and one batched submit produce
+bit-identical models (tested in tests/test_async_fused.py).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.core import raveling
 
 
 def _tree_scale(t, s):
@@ -85,40 +111,118 @@ class DGA(FedAvg):
         return weighted_mean(updates, list(w))
 
 
+@partial(jax.jit, donate_argnums=(0,))
+def _buffer_write(buf, rows, cursor):
+    """Write ``rows`` (k, size) into ``buf`` at row ``cursor`` — one
+    ``dynamic_update_slice``, buffer donated so XLA writes in place. The
+    cursor is traced, so every fill position shares one executable."""
+    return jax.lax.dynamic_update_slice(buf, rows, (cursor, 0))
+
+
+@partial(jax.jit, static_argnames=("server_lr",), donate_argnums=(0,))
+def _drain_apply(params_flat, rows, weights, n_valid, *, server_lr):
+    """The one-dispatch server step: staleness-weighted mean of the valid
+    buffer rows + axpy onto the raveled params (donated => in-place).
+    ``n_valid`` is traced, so partial drains reuse the same executable."""
+    w = jnp.where(jnp.arange(rows.shape[0]) < n_valid, weights,
+                  jnp.float32(0.0))
+    w = w / jnp.clip(jnp.sum(w), 1e-12)
+    return params_flat + server_lr * (w @ rows)
+
+
 @dataclass
 class FedBuff:
     """Papaya-style async buffered aggregation (paper §2, §4.3): the server
     updates the model after every ``buffer_size`` received pseudo-gradients,
     discounting by staleness (1 + s)^-0.5. No pairwise masking — the trusted
-    aggregation boundary (confidential container / on-pod) replaces it."""
+    aggregation boundary (confidential container / on-pod) replaces it.
+
+    The buffer is a preallocated (buffer_size, size) device array plus a
+    host staleness-weight vector and fill cursor (see module docstring for
+    the layout and the serial/batched parity contract)."""
     buffer_size: int = 32
     server_lr: float = 1.0
     staleness_exponent: float = 0.5
     name: str = "fedbuff"
-    _buffer: list = field(default_factory=list)
+    _rows: object = field(default=None, init=False, repr=False)
+    _weights: object = field(default=None, init=False, repr=False)
+    _cursor: int = field(default=0, init=False, repr=False)
+    _params_flat: object = field(default=None, init=False, repr=False)
+    _params_ref: object = field(default=None, init=False, repr=False)
 
     def init_state(self, params):
         return {"model_version": 0}
+
+    def room(self) -> int:
+        """Free buffer slots before the next server step (the public form
+        of the old ``buffer_size - len(_buffer)`` reach-in)."""
+        return self.buffer_size - self._cursor
 
     def staleness_weight(self, update_version: int, current_version: int):
         s = max(0, current_version - update_version)
         return (1.0 + s) ** (-self.staleness_exponent)
 
+    def _ensure_buffer(self, size: int):
+        if self._rows is None:
+            self._rows = jnp.zeros((self.buffer_size, size), jnp.float32)
+            self._weights = np.zeros(self.buffer_size, np.float32)
+        elif self._rows.shape[1] != size:
+            raise ValueError(f"update size {size} != buffer row size "
+                             f"{self._rows.shape[1]}")
+
     def offer(self, update, weight: float, update_version: int,
               current_version: int):
-        """Add one client update to the buffer. Returns True if full."""
-        w = weight * self.staleness_weight(update_version, current_version)
-        self._buffer.append((update, w))
-        return len(self._buffer) >= self.buffer_size
+        """Add one client update (pytree) to the buffer. Returns True if
+        full (caller must ``drain`` before the next offer)."""
+        return self.offer_flat(raveling.flat_f32(update), weight,
+                               update_version, current_version)
+
+    def offer_flat(self, row, weight: float, update_version: int,
+                   current_version: int):
+        """``offer`` for an already-raveled (size,) f32 row."""
+        row = jnp.asarray(row, jnp.float32)
+        return self.offer_rows(row[None, :], [weight], [update_version],
+                               current_version)
+
+    def offer_rows(self, rows, weights, update_versions, current_version):
+        """Batched offer: write k <= room() raveled rows with ONE
+        ``dynamic_update_slice``. ``weights``/``update_versions`` are
+        per-row; staleness is computed in host floats exactly as the
+        one-row path does, so serial and batched fills are bit-identical.
+        Returns True if the buffer is now full."""
+        rows = jnp.asarray(rows, jnp.float32)
+        k = rows.shape[0]
+        if k > self.room():
+            raise ValueError(f"offer of {k} rows exceeds buffer room "
+                             f"{self.room()} — drain first")
+        self._ensure_buffer(rows.shape[1])
+        for j in range(k):
+            self._weights[self._cursor + j] = np.float32(
+                float(weights[j]) * self.staleness_weight(
+                    int(update_versions[j]), current_version))
+        self._rows = _buffer_write(self._rows, rows,
+                                   jnp.asarray(self._cursor, jnp.int32))
+        self._cursor += k
+        return self._cursor >= self.buffer_size
 
     def drain(self, params, state):
-        """Apply the buffered aggregate; empties the buffer."""
-        if not self._buffer:
+        """Apply the buffered aggregate (one jitted weighted-mean + axpy on
+        the raveled params); resets the cursor. Stale rows past the cursor
+        are masked, so partial drains are exact."""
+        if self._cursor == 0:
             return params, state
-        updates, ws = zip(*self._buffer)
-        delta = weighted_mean(list(updates), list(ws))
-        self._buffer = []
-        params = _tree_add(params, delta, self.server_lr)
+        _, unflatten = raveling.cached_unflatten(params)
+        if params is self._params_ref and self._params_flat is not None:
+            flat = self._params_flat     # cached ravel from the last drain
+        else:
+            from jax.flatten_util import ravel_pytree
+            flat = ravel_pytree(params)[0]
+        flat = _drain_apply(flat, self._rows, jnp.asarray(self._weights),
+                            jnp.asarray(self._cursor, jnp.int32),
+                            server_lr=float(self.server_lr))
+        params = unflatten(flat)
+        self._params_flat, self._params_ref = flat, params
+        self._cursor = 0
         state = dict(state, model_version=state["model_version"] + 1)
         return params, state
 

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import dp as dp_mod
+from repro.core import privacy_engine as pe
 from repro.core.orchestrator import (AsyncServer, ClientResult,
                                      run_sync_round, run_sync_round_stacked)
 from repro.core.strategies import FedBuff, make_strategy
@@ -196,14 +197,67 @@ class ManagementService:
                                      n_samples_per_client=n_samples))
         return True
 
+    def submit_updates_async(self, task_id: int, client_ids,
+                             stacked_updates, n_samples, update_versions,
+                             metrics_list=None) -> list:
+        """Bulk async submission — the fused fast path mirroring
+        ``submit_cohort``: a whole event group's updates arrive stacked
+        along the client axis (pytree leaves (k, ...)) straight from
+        ``CohortEngine.run_cohort_personalized_stacked``, are raveled on
+        device, run through the batched local-DP rows, and land in the
+        FedBuff device buffer with one write per buffer segment — no
+        unstack-to-host, no per-client submit round trips. Bit-identical
+        to k ``submit_update`` calls in the same order.
+
+        ``n_samples``: per-row list (or one int for all rows);
+        ``update_versions``: per-row model versions the updates were
+        trained FROM. ``metrics_list`` is accepted for API symmetry with
+        ``submit_cohort`` — async aggregation is metrics-blind, exactly
+        like the per-client path. Returns the batch row indices that
+        completed a server step ([] if none, or if the task is not an
+        async RUNNING task)."""
+        rec = self._tasks[task_id]
+        if rec.status is not TaskStatus.RUNNING \
+                or rec.config.mode != "async":
+            return []
+        server = self._async[task_id]
+        cids = list(client_ids)
+        rows = pe.ravel_rows(stacked_updates)
+        if rows.shape[0] != len(cids):
+            # a shape/id mismatch is a caller bug, not a rejected
+            # submission — dropping the group silently would corrupt the
+            # run (the sync twin escalates the same way via the
+            # simulator's RuntimeError guard)
+            raise ValueError(
+                f"stacked updates have {rows.shape[0]} rows for "
+                f"{len(cids)} client ids")
+        k = len(cids)
+        weights = [float(n) for n in (n_samples if isinstance(
+            n_samples, (list, tuple)) else [n_samples] * k)]
+        versions = [int(v) for v in update_versions]
+        # serial parity at the completion boundary: the per-client loop
+        # rejects every submission after the task COMPLETES, so cap the
+        # batch at the rows that fit before the final server step
+        steps_left = rec.config.n_rounds - rec.round_idx
+        cap = (server.strategy.room()
+               + (steps_left - 1) * server.strategy.buffer_size)
+        if k > cap:
+            rows, weights, versions = rows[:cap], weights[:cap], \
+                versions[:cap]
+        steps = server.submit_batch(rows, weights, versions)
+        for _ in steps:
+            rec.model = server.params
+            rec.round_idx += 1
+            self._finish_round(rec, {"n": server.strategy.buffer_size})
+        return steps
+
     def async_buffer_room(self, task_id: int) -> int:
         """Submissions until the next async server step (>= 1). Sync tasks
         report 1 (every cohort submission may complete the round)."""
         server = self._async.get(task_id)
         if server is None:
             return 1
-        return max(1, server.strategy.buffer_size
-                   - len(server.strategy._buffer))
+        return max(1, server.strategy.room())
 
     # ------------------------------------------------------------------
     # orchestration

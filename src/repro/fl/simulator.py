@@ -16,12 +16,17 @@ magnitude fewer dispatches. The async fast path stacks each client's
 *served-version* params along the client axis (the engine's personalized
 path), so mixed-staleness groups batch too.
 
-The sync fast path is FUSED end to end: ``run_cohort_stacked`` keeps the
-cohort's updates stacked on device and ``ManagementService.submit_cohort``
-feeds them straight into the vectorized privacy pipeline
+BOTH fast paths are FUSED end to end. Sync: ``run_cohort_stacked`` keeps
+the cohort's updates stacked on device and ``ManagementService
+.submit_cohort`` feeds them straight into the vectorized privacy pipeline
 (``repro.core.privacy_engine``) — local training AND the §4 privacy chain
 (DP -> quantize -> mask -> VG sums -> master combine) each run as one
-compiled call per round, with no unstack-to-host in between.
+compiled call per round, with no unstack-to-host in between. Async:
+``run_cohort_personalized_stacked`` + ``ManagementService
+.submit_updates_async`` feed each event group's stacked mixed-version
+updates through the batched local-DP rows into the device-resident FedBuff
+buffer (one write, one-dispatch drain on fill) — bit-identical to the
+serial per-client submit loop.
 """
 from __future__ import annotations
 
@@ -281,14 +286,38 @@ def run_async_simulation(service: ManagementService, task_id: int,
             if served not in params_cache:
                 params_cache[served] = deserialize_pytree(
                     blob, like=engine.template)
-        results = engine.run_cohort_personalized(
+        # fused path: the stacked mixed-version group output feeds the
+        # batched-DP FedBuff buffer in one bulk route — no unstack-to-host,
+        # no per-client submit round trips. A group is at most the buffer's
+        # remaining room, so at most ONE server step can occur (on the row
+        # that fills the buffer) — the post-batch model/round_idx the
+        # bookkeeping below reads is exactly the post-step state.
+        stacked, _, n_samples = engine.run_cohort_personalized_stacked(
             [params_cache[served] for _, _, served, _, _ in group],
             [cid for _, cid, _, _, _ in group],
             [served for _, _, served, _, _ in group])
-        for (t, cid, served, _, is_final), (update, n_samples, metrics) in \
-                zip(group, results):
-            clock = handle_submission(t, cid, served, update, n_samples,
-                                      metrics, reenqueue=is_final)
+        step_rows = set(service.submit_updates_async(
+            task_id, [cid for _, cid, _, _, _ in group], stacked,
+            n_samples, [served for _, _, served, _, _ in group]))
+        for j, (t, cid, served, _, is_final) in enumerate(group):
+            clock = t
+            if j in step_rows:
+                clock += server_agg_s
+                durations.append(clock - last_step_t)
+                last_step_t = clock
+                store.put(task.round_idx, service.model_snapshot(task_id))
+                row = {}
+                if eval_fn is not None:
+                    row["eval_accuracy"] = float(eval_fn(task.model))
+                    service.metrics.log(task_id, task.round_idx,
+                                        eval_accuracy=row["eval_accuracy"],
+                                        round_duration_s=durations[-1])
+                history.append(row)
+            if is_final and task.status.value == "running":
+                heapq.heappush(q, (clock + clients[cid].duration(rng), seq,
+                                   cid, task.round_idx))
+                store.ref(task.round_idx)
+                seq += 1
     return SimResult(durations, history, clock, len(durations))
 
 

@@ -1,0 +1,267 @@
+"""Fused async FedBuff path (ISSUE 3): device-resident buffer, batched DP,
+one-dispatch drain — bit-exact parity of ``AsyncServer.submit_batch`` with
+the kept serial ``submit`` reference, the ``FedBuff.room()`` API, the bulk
+service route, and the cached-unflatten raveling helper."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.flatten_util import ravel_pytree
+
+from repro.core import raveling
+from repro.core.dp import DPConfig
+from repro.core.orchestrator import AsyncServer, ClientResult
+from repro.core.strategies import FedBuff
+
+SIZE = 24
+
+
+def _params():
+    return {"a": jnp.zeros((3, 4), jnp.float32),
+            "b": jnp.ones(12, jnp.float32) * 0.5}
+
+
+def _mk_server(buffer_size=4, dp="off", seed=0, lr=0.7):
+    cfg = DPConfig(mechanism=dp, clip_norm=0.5,
+                   noise_multiplier=1.0 if dp == "local" else 0.0)
+    return AsyncServer(_params(), FedBuff(buffer_size=buffer_size,
+                                          server_lr=lr), cfg, seed=seed)
+
+
+def _rows(n, seed=0):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.uniform(-1, 1, (n, SIZE)), jnp.float32)
+
+
+def _flat(tree):
+    return np.asarray(ravel_pytree(tree)[0])
+
+
+def _unflatten_row(row):
+    _, unflatten = ravel_pytree(_params())
+    return unflatten(jnp.asarray(row))
+
+
+def _serial_feed(server, rows, weights, versions):
+    stepped = []
+    for j in range(rows.shape[0]):
+        full = server.submit(
+            ClientResult(update=_unflatten_row(rows[j]),
+                         n_samples=weights[j]), versions[j])
+        if full:
+            stepped.append(j)
+    return stepped
+
+
+def _assert_same_server_state(s1, s2):
+    assert s1.n_server_steps == s2.n_server_steps
+    assert s1.model_version == s2.model_version
+    assert s1._n_submissions == s2._n_submissions
+    assert s1.strategy._cursor == s2.strategy._cursor
+    np.testing.assert_array_equal(np.asarray(s1.strategy._weights),
+                                  np.asarray(s2.strategy._weights))
+    c = s1.strategy._cursor
+    if c:
+        np.testing.assert_array_equal(np.asarray(s1.strategy._rows)[:c],
+                                      np.asarray(s2.strategy._rows)[:c])
+    np.testing.assert_array_equal(_flat(s1.params), _flat(s2.params))
+
+
+class TestSubmitBatchParity:
+    @pytest.mark.parametrize("dp", ["off", "local"])
+    def test_batch_matches_serial_with_mid_batch_steps(self, dp):
+        """10 rows into a buffer of 4: the buffer fills mid-batch twice
+        (rows 3 and 7) and the staleness of rows after each fill sees the
+        bumped model version — bit-identical to 10 serial submits."""
+        rows = _rows(10)
+        versions = [0, 0, 1, 0, 2, 1, 0, 3, 1, 2]   # mixed staleness
+        weights = [1, 2, 1, 3, 1, 1, 2, 1, 1, 1]
+        s_serial, s_batch = _mk_server(4, dp), _mk_server(4, dp)
+        steps_serial = _serial_feed(s_serial, rows, weights, versions)
+        steps_batch = s_batch.submit_batch(rows, [float(w) for w in weights],
+                                           versions)
+        assert steps_serial == steps_batch == [3, 7]
+        _assert_same_server_state(s_serial, s_batch)
+
+    @pytest.mark.parametrize("dp", ["off", "local"])
+    def test_fill_at_row_k_with_prefilled_buffer(self, dp):
+        """Mid-batch step boundary: 2 serial submits pre-fill the buffer,
+        then a batch of 5 fills it at row 1 < batch size."""
+        rows = _rows(7, seed=3)
+        versions = [0, 0, 0, 1, 0, 1, 1]
+        weights = [1.0] * 7
+        s_serial, s_batch = _mk_server(4, dp), _mk_server(4, dp)
+        _serial_feed(s_serial, rows[:2], weights[:2], versions[:2])
+        _serial_feed(s_batch, rows[:2], weights[:2], versions[:2])
+        steps_serial = _serial_feed(s_serial, rows[2:], weights[2:],
+                                    versions[2:])
+        steps_batch = s_batch.submit_batch(rows[2:], weights[2:],
+                                           versions[2:])
+        assert steps_serial == steps_batch == [1]
+        assert s_batch.strategy._cursor == 3
+        _assert_same_server_state(s_serial, s_batch)
+
+    def test_dp_keys_follow_global_submission_counter(self):
+        """Interleaving serial submits and batches consumes the same DP key
+        sequence as an all-serial feed — model bits stay identical."""
+        rows = _rows(9, seed=5)
+        versions = [0] * 9
+        weights = [1.0] * 9
+        s_serial, s_mixed = _mk_server(3, "local"), _mk_server(3, "local")
+        _serial_feed(s_serial, rows, weights, versions)
+        _serial_feed(s_mixed, rows[:2], weights[:2], versions[:2])
+        s_mixed.submit_batch(rows[2:6], weights[2:6], versions[2:6])
+        _serial_feed(s_mixed, rows[6:7], weights[6:7], versions[6:7])
+        s_mixed.submit_batch(rows[7:], weights[7:], versions[7:])
+        _assert_same_server_state(s_serial, s_mixed)
+
+
+class TestFedBuff:
+    def test_room_tracks_cursor_and_resets_on_drain(self):
+        s = FedBuff(buffer_size=3)
+        params = {"w": jnp.zeros(4, jnp.float32)}
+        st = s.init_state(params)
+        assert s.room() == 3
+        s.offer({"w": jnp.ones(4)}, 1.0, 0, 0)
+        assert s.room() == 2
+        s.offer({"w": jnp.ones(4)}, 1.0, 0, 0)
+        s.offer({"w": jnp.ones(4)}, 1.0, 0, 0)
+        assert s.room() == 0
+        _, st = s.drain(params, st)
+        assert s.room() == 3
+
+    def test_offer_beyond_room_raises(self):
+        s = FedBuff(buffer_size=2)
+        s.offer({"w": jnp.ones(4)}, 1.0, 0, 0)
+        s.offer({"w": jnp.ones(4)}, 1.0, 0, 0)
+        with pytest.raises(ValueError, match="drain first"):
+            s.offer({"w": jnp.ones(4)}, 1.0, 0, 0)
+
+    def test_partial_drain_masks_stale_rows(self):
+        """A partial drain must see only rows [0, cursor) — rows left over
+        from the previous fill are weight-masked, and a reference
+        weighted mean reproduces the result."""
+        s = FedBuff(buffer_size=4, server_lr=1.0)
+        params = {"w": jnp.zeros(4, jnp.float32)}
+        st = s.init_state(params)
+        rng = np.random.RandomState(0)
+        first = rng.uniform(-1, 1, (4, 4)).astype(np.float32)
+        for r in first:
+            s.offer({"w": jnp.asarray(r)}, 1.0, 0, 0)
+        params, st = s.drain(params, st)
+        second = rng.uniform(-1, 1, (2, 4)).astype(np.float32)
+        s.offer({"w": jnp.asarray(second[0])}, 2.0, 0, 1)
+        s.offer({"w": jnp.asarray(second[1])}, 1.0, 1, 1)
+        params, st = s.drain(params, st)
+        w = np.asarray([2.0 * (1 + 1) ** -0.5, 1.0], np.float32)
+        ref = first.mean(axis=0) + (w / w.sum()) @ second
+        np.testing.assert_allclose(np.asarray(params["w"]), ref, atol=1e-6)
+        assert st["model_version"] == 2
+
+    def test_drain_caches_raveled_params(self):
+        """Between drains the params stay raveled — the second drain must
+        reuse the cached flat vector instead of re-raveling the pytree."""
+        s = FedBuff(buffer_size=2)
+        params = {"w": jnp.zeros(4, jnp.float32)}
+        st = s.init_state(params)
+        s.offer({"w": jnp.ones(4)}, 1.0, 0, 0)
+        s.offer({"w": jnp.ones(4)}, 1.0, 0, 0)
+        params, st = s.drain(params, st)
+        assert s._params_ref is params and s._params_flat is not None
+        cached = s._params_flat
+        s.offer({"w": jnp.ones(4)}, 1.0, 0, 1)
+        s.offer({"w": jnp.ones(4)}, 1.0, 0, 1)
+        params2, st = s.drain(params, st)
+        assert s._params_flat is not cached   # advanced, not re-raveled
+        np.testing.assert_allclose(np.asarray(params2["w"]), 2.0, atol=1e-6)
+
+
+class TestServiceBulkRoute:
+    def _mk_task(self, n_rounds=2, buffer_size=3):
+        from repro.fl import (AttestationAuthority, ManagementService,
+                              TaskConfig)
+        svc = ManagementService()
+        model = {"w": jnp.zeros(8, jnp.float32)}
+        cfg = TaskConfig("t", "app", "wf", clients_per_round=4,
+                         n_rounds=n_rounds, mode="async",
+                         buffer_size=buffer_size, vg_size=2)
+        tid = svc.create_task(cfg, model)
+        auth = AttestationAuthority()
+        for i in range(6):
+            assert svc.register_client(tid, f"c{i}",
+                                       {"os": "linux", "n_samples": 10,
+                                        "battery": 0.9}, auth.issue(f"c{i}"))
+        return svc, tid
+
+    def test_bulk_matches_per_client_submits(self):
+        rng = np.random.RandomState(1)
+        ups = rng.uniform(-0.3, 0.3, (6, 8)).astype(np.float32)
+        versions = [0, 0, 0, 1, 1, 1]   # serial default: round_idx at submit
+        svc_a, tid_a = self._mk_task()
+        for j in range(6):
+            svc_a.submit_update(tid_a, f"c{j}", {"w": jnp.asarray(ups[j])},
+                                10, update_version=versions[j])
+        svc_b, tid_b = self._mk_task()
+        steps = svc_b.submit_updates_async(
+            tid_b, [f"c{j}" for j in range(6)],
+            {"w": jnp.asarray(ups)}, [10] * 6, versions)
+        assert steps == [2, 5]
+        ta, tb = svc_a.get_task(tid_a), svc_b.get_task(tid_b)
+        np.testing.assert_array_equal(np.asarray(ta.model["w"]),
+                                      np.asarray(tb.model["w"]))
+        assert ta.round_idx == tb.round_idx == 2
+        assert ta.status == tb.status
+        assert [h["n"] for h in ta.history] == [h["n"] for h in tb.history]
+
+    def test_bulk_truncates_at_completion_like_serial(self):
+        """Rows past the task's final server step must be dropped exactly
+        as the serial loop rejects them once the task COMPLETES."""
+        rng = np.random.RandomState(2)
+        ups = rng.uniform(-0.3, 0.3, (9, 8)).astype(np.float32)
+        svc_a, tid_a = self._mk_task(n_rounds=2, buffer_size=3)
+        for j in range(9):   # submissions 6..8 rejected (COMPLETED)
+            svc_a.submit_update(tid_a, f"c{j % 6}",
+                                {"w": jnp.asarray(ups[j])}, 10,
+                                update_version=0)
+        svc_b, tid_b = self._mk_task(n_rounds=2, buffer_size=3)
+        steps = svc_b.submit_updates_async(
+            tid_b, [f"c{j % 6}" for j in range(9)],
+            {"w": jnp.asarray(ups)}, [10] * 9, [0] * 9)
+        assert steps == [2, 5]
+        np.testing.assert_array_equal(
+            np.asarray(svc_a.get_task(tid_a).model["w"]),
+            np.asarray(svc_b.get_task(tid_b).model["w"]))
+
+    def test_async_buffer_room_uses_room_api(self):
+        svc, tid = self._mk_task(buffer_size=3)
+        assert svc.async_buffer_room(tid) == 3
+        svc.submit_update(tid, "c0", {"w": jnp.ones(8)}, 1,
+                          update_version=0)
+        assert svc.async_buffer_room(tid) == 2
+        assert not hasattr(svc._async[tid].strategy, "_buffer")
+
+
+class TestRavelingCache:
+    def test_unflatten_closure_is_cached_by_signature(self):
+        t1 = {"a": jnp.zeros((2, 3)), "b": jnp.ones(4)}
+        t2 = {"a": jnp.ones((2, 3)) * 7, "b": jnp.zeros(4)}
+        s1, u1 = raveling.cached_unflatten(t1)
+        s2, u2 = raveling.cached_unflatten(t2)
+        assert s1 == s2 == 10
+        assert u1 is u2                       # same structure -> same closure
+        s3, u3 = raveling.cached_unflatten({"a": jnp.zeros((3, 2)),
+                                            "b": jnp.ones(4)})
+        assert u3 is not u1                   # shape change -> new closure
+        rebuilt = u1(ravel_pytree(t2)[0])
+        np.testing.assert_array_equal(np.asarray(rebuilt["a"]),
+                                      np.asarray(t2["a"]))
+
+    def test_stack_flat_updates_roundtrip(self):
+        from repro.core.privacy_engine import stack_flat_updates
+        ups = [{"w": jnp.ones(3) * j, "v": jnp.zeros((2, 2))}
+               for j in range(3)]
+        flat, unflatten = stack_flat_updates(ups)
+        assert flat.shape == (3, 7)
+        back = unflatten(flat[2])
+        np.testing.assert_array_equal(np.asarray(back["w"]),
+                                      np.asarray(ups[2]["w"]))
