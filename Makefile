@@ -5,12 +5,16 @@
 # (batched DP + device buffer + one-dispatch drain) are exercised end to end.
 PY ?= python
 
-.PHONY: verify test deps bench-cohort bench-secureagg-smoke bench-async-smoke
+.PHONY: verify test deps docs-check bench-cohort bench-secureagg-smoke \
+	bench-async-smoke
 
 deps:
 	$(PY) -m pip install -r requirements-dev.txt
 
-verify: deps test bench-secureagg-smoke bench-async-smoke
+verify: deps test docs-check bench-secureagg-smoke bench-async-smoke
+
+docs-check:
+	$(PY) tools/check_docs.py
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q

@@ -8,6 +8,10 @@
    cohort sizes {64, 256, 1024}: the serial reference dispatches O(n)
    python-level jnp calls; ``repro.core.privacy_engine`` runs the cohort
    as one compiled call (two at most, for ragged plans).
+3. The hierarchical stage-2 combine at {2^14, 2^16, 2^18} virtual groups:
+   per-shard limb-state fold + exact cross-shard merge wall time, vs the
+   single-tier fold where it is still legal (< 2^16 VGs; 2^16 and beyond
+   REQUIRE the sharded route — the single-tier accumulator would wrap).
 """
 from __future__ import annotations
 
@@ -72,6 +76,38 @@ def pipeline_times(n_cohort: int, model_size: int, vg_size: int = 8,
     return times
 
 
+def sharded_combine_times(n_groups: int, size: int, n_shards: int,
+                          repeats: int = 3) -> dict:
+    """-> {'single'|'sharded': seconds} for one stage-2 combine over
+    ``n_groups`` interims of ``size`` elems ('single' only when legal)."""
+    from repro.core.quantize import MAX_MASTER_GROUPS
+    rng = np.random.RandomState(0)
+    interims = jnp.asarray(rng.randint(
+        0, 1 << 24, (n_groups, size), dtype=np.int64).astype(np.uint32))
+    n = 8 * n_groups
+    cfg = sa.SecureAggConfig()
+
+    def run_sharded():
+        return sa.combine_limb_states(
+            sa._shard_limbs_jit(interims, n_shards), n, cfg)
+
+    def run_single():
+        return sa.combine_limb_states(
+            sa._shard_limbs_jit(interims, 1), n, cfg)
+
+    out = {}
+    runs = {"sharded": run_sharded}
+    if n_groups < MAX_MASTER_GROUPS:
+        runs["single"] = run_single
+    for name, fn in runs.items():
+        jax.block_until_ready(fn())              # warmup/compile
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            jax.block_until_ready(fn())
+        out[name] = (time.perf_counter() - t0) / repeats
+    return out
+
+
 def main(quick=False):
     rows = []
     n_cohort = 1024
@@ -101,6 +137,23 @@ def main(quick=False):
         rows.append((f"secureagg_pipeline_n{n}",
                      t["vectorized"] * 1e6,
                      f"serial_speedup={sv:.2f}x kernels_speedup={sk:.2f}x"))
+
+    csize = 1 << 6 if quick else 1 << 8
+    sweeps = [1 << 10, 1 << 12] if quick else [1 << 14, 1 << 16, 1 << 18]
+    print(f"# hierarchical stage-2 combine, interim size={csize} elems")
+    print("#    n_vgs | shards | sharded s | single-tier s")
+    for g in sweeps:
+        from repro.core.secure_agg import resolve_master_shards
+        shards = max(4, resolve_master_shards(g))
+        t = sharded_combine_times(g, csize, shards,
+                                  repeats=1 if quick else 3)
+        single = f"{t['single']:.4f}" if "single" in t else \
+            "     wraps (>2^16)"
+        print(f"#  {g:7d} | {shards:6d} | {t['sharded']:9.4f} | {single}")
+        note = (f"single_tier={t['single']:.5f}s" if "single" in t
+                else "single_tier=illegal_past_2^16")
+        rows.append((f"secureagg_sharded_combine_vg{g}",
+                     t["sharded"] * 1e6, f"shards={shards} {note}"))
     return rows
 
 

@@ -63,6 +63,29 @@ def set_mesh(mesh):
     return mesh
 
 
+def shard_map(f, *, mesh, in_specs, out_specs, check_rep=False):
+    """Version-portable ``shard_map``: ``jax.shard_map`` where it exists
+    (newer releases), else ``jax.experimental.shard_map.shard_map`` (the
+    0.4.x–0.5.x home). ``check_rep`` defaults to False because the FL
+    combine paths feed uint32 collectives (psum of limb states) whose
+    replication rule the checker rejects on some versions."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+    try:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check_rep)
+    except TypeError:
+        pass
+    try:
+        # newer API renamed the flag (check_vma on 0.7+); keep the checker
+        # OFF there too — dropping the flag would silently re-enable it
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_rep)
+    except TypeError:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+
 def make_mesh(axis_shapes, axis_names, *, devices=None):
     """``jax.make_mesh`` with Auto axis types where the API supports them
     (>= 0.5); 0.4.x meshes are implicitly Auto, so omitting is equivalent."""

@@ -13,12 +13,18 @@ from repro.core.privacy_engine import (BucketSpec, PrivacyEngine,
                                        plan_buckets, ravel_rows,
                                        stack_flat_updates)
 from repro.core.raveling import cached_unflatten, tree_signature
-from repro.core.quantize import (DEFAULT_BITS, DEFAULT_CLIP, check_headroom,
-                                 check_master_headroom, dequantize,
-                                 dequantize_interim_sum, dequantize_sum,
-                                 quantize)
+from repro.core.quantize import (DEFAULT_BITS, DEFAULT_CLIP,
+                                 MAX_MASTER_GROUPS, MAX_MASTER_SHARDS,
+                                 carry_normalize, check_headroom,
+                                 check_master_headroom, check_shard_headroom,
+                                 dequantize, dequantize_interim_sum,
+                                 dequantize_limb_state, dequantize_sum,
+                                 interim_limb_state, merge_limb_states,
+                                 min_master_shards, quantize,
+                                 shard_limb_states)
 from repro.core.secure_agg import (SecureAggConfig, client_protect,
-                                   group_seed, master_aggregate,
+                                   combine_limb_states, group_seed,
+                                   master_aggregate, resolve_master_shards,
                                    secure_aggregate_round, vg_aggregate)
 from repro.core.strategies import (DGA, STRATEGIES, FedAvg, FedBuff, FedProx,
                                    make_strategy)

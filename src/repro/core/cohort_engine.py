@@ -38,9 +38,9 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.optim.adamw import Optimizer, apply_updates
 
 
@@ -133,9 +133,8 @@ def shard_cohort(spec: LocalTrainSpec, mesh, *, axis: str = "data",
     f = jax.vmap(make_local_update(spec),
                  in_axes=(0 if personalized else None, 0))
     in_specs = (P(axis) if personalized else P(), P(axis))
-    sharded = shard_map(f, mesh=mesh, in_specs=in_specs,
-                        out_specs=(P(axis), P(axis)),
-                        check_rep=False)
+    sharded = compat.shard_map(f, mesh=mesh, in_specs=in_specs,
+                               out_specs=(P(axis), P(axis)))
     return jax.jit(sharded)
 
 

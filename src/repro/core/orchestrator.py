@@ -40,6 +40,7 @@ class RoundInfo:
     n_participants: int
     n_groups: int
     metrics: dict = field(default_factory=dict)
+    n_shards: int = 1   # stage-2 combine shards (hierarchical master)
 
 
 @dataclass
@@ -84,18 +85,23 @@ def run_sync_round(params, strategy, strategy_state,
     ``secure_cfg.vectorized`` (default) runs the whole privacy pipeline —
     DP, quantize, mask, VG sums, master combine — as one compiled call via
     ``repro.core.privacy_engine``; ``vectorized=False`` keeps the serial
-    per-client reference loop (bit-identical output, O(n) dispatches)."""
+    per-client reference loop (bit-identical output, O(n) dispatches).
+    Plans past 2^16 VGs (or with ``secure_cfg.master_shards`` set) take
+    the hierarchical sharded stage-2 route on both paths — bit-identical
+    at any legal shard count."""
     key, round_seed = _round_randomness(key, round_seed, round_idx)
 
     cids = sorted(client_results)
     plan = make_virtual_groups(cids, vg_size, seed=round_idx)
+    n_shards = sa.resolve_master_shards(len(plan.groups), secure_cfg)
 
     if secure_cfg.vectorized:
         flat, unflatten = pe.stack_flat_updates(
             [client_results[c].update for c in cids])
         delta = unflatten(pe.aggregate_flat(
             flat, plan, cids, round_seed,
-            secure_cfg=secure_cfg, dp_cfg=dp_cfg, key=key))
+            secure_cfg=secure_cfg, dp_cfg=dp_cfg, key=key,
+            n_shards=n_shards))
     else:
         delta = _secure_mean_serial(
             {cid: client_results[cid].update for cid in cids}, plan,
@@ -114,7 +120,8 @@ def run_sync_round(params, strategy, strategy_state,
     params, strategy_state = strategy.apply(params, strategy_state, delta)
 
     info = RoundInfo(round_idx, len(cids), len(plan.groups),
-                     metrics=avg_metrics(client_results))
+                     metrics=avg_metrics(client_results),
+                     n_shards=n_shards)
     return params, strategy_state, info
 
 
@@ -142,6 +149,7 @@ def run_sync_round_stacked(params, strategy, strategy_state,
         stacked_updates = jax.tree.map(lambda a: a[idx], stacked_updates)
     cids_sorted = [cids[j] for j in order]
     plan = make_virtual_groups(cids_sorted, vg_size, seed=round_idx)
+    n_shards = sa.resolve_master_shards(len(plan.groups), secure_cfg)
 
     delta = pe.aggregate_stacked(stacked_updates, plan, cids_sorted,
                                  round_seed, secure_cfg=secure_cfg,
@@ -153,7 +161,8 @@ def run_sync_round_stacked(params, strategy, strategy_state,
     metrics = _avg_metric_dicts(metrics_list or [])
     delta = strategy.combine([delta], [1.0], [metrics])
     params, strategy_state = strategy.apply(params, strategy_state, delta)
-    info = RoundInfo(round_idx, len(cids), len(plan.groups), metrics=metrics)
+    info = RoundInfo(round_idx, len(cids), len(plan.groups), metrics=metrics,
+                     n_shards=n_shards)
     return params, strategy_state, info
 
 
@@ -190,6 +199,18 @@ def _avg_metric_dicts(metric_dicts) -> dict:
 
 def avg_metrics(client_results: dict) -> dict:
     return _avg_metric_dicts([r.metrics for r in client_results.values()])
+
+
+def _dp_pad_len(k: int, buffer_size: int) -> int:
+    """Batched-DP pad target for a k-row batch: the next power of two
+    below one buffer, whole buffers above — O(log buffer_size) compile
+    classes total, <2x padded waste."""
+    if k >= buffer_size:
+        return -(-k // buffer_size) * buffer_size
+    p = 1
+    while p < k:
+        p <<= 1
+    return p
 
 
 class AsyncServer:
@@ -263,8 +284,18 @@ class AsyncServer:
         if len(weights) != k or len(versions) != k:
             raise ValueError("weights/versions must match the batch rows")
         if self.dp_cfg.mechanism == "local":
+            # pad to a BOUNDED set of shape classes (powers of two below
+            # one buffer, whole buffers above) so the batched-DP jit stops
+            # recompiling per batch length (the ROADMAP item) while wasted
+            # clip+noise work stays < 2x (padding straight to the buffer
+            # size would burn up to buffer_size extra rows on a 1-row
+            # batch). Pad rows burn key-folds PAST the real counter range
+            # (the counter only advances by k) and are dropped before the
+            # buffer writes, so serial/batch bit-parity is untouched.
+            from repro.core.strategies import _pad_rows
             rows = dp_mod.flat_local_dp_rows(
-                rows, self._base_key, self._n_submissions,
+                _pad_rows(rows, _dp_pad_len(k, self.strategy.buffer_size)),
+                self._base_key, self._n_submissions,
                 clip_norm=float(self.dp_cfg.clip_norm),
                 sigma=self._dp_sigma())
         self._n_submissions += k
@@ -272,7 +303,7 @@ class AsyncServer:
         while i < k:
             take = min(self.strategy.room(), k - i)
             full = self.strategy.offer_rows(
-                rows if (i == 0 and take == k) else rows[i:i + take],
+                rows[i:i + take],
                 weights[i:i + take], versions[i:i + take],
                 self.model_version)
             i += take

@@ -22,16 +22,21 @@ masking reuses ``masking.net_mask_traced`` via ``protect_cohort_grouped``
 
 Bit-exactness contract (hypothesis-tested in tests/test_privacy_engine.py):
 the engine's output is bit-identical to the serial reference. The integer
-stages (quantize codes, masks, wrapping sums) are exact by construction; the
-float stages (DP rows, stage-2 combine) are shared JITTED functions on both
-paths, because XLA FMA-contracts the clip/noise and dequantize chains — an
-eager reference would differ from any jitted pipeline by ulps. The big jit
-therefore returns exact integer interims and the final combine runs in the
-same standalone ``_combine_jit`` executable the serial master uses.
+stages (quantize codes, masks, wrapping sums, stage-2 limb states) are exact
+by construction; the float stages (DP rows, the stage-2 dequantize tail) are
+shared JITTED functions on both paths, because XLA FMA-contracts the
+clip/noise and dequantize chains — an eager reference would differ from any
+jitted pipeline by ulps. The big jit therefore returns exact integer
+per-shard limb states and the final dequantize runs in the same standalone
+``secure_agg._finalize_jit`` executable the serial master uses.
 
-Stage 2 uses the overflow-safe split-limb combine
-(``quantize.dequantize_interim_sum``): the pre-fix master summed interims in
-uint32 and silently wrapped once bits + ceil(log2(total_cohort)) > 32.
+Stage 2 is the hierarchical limb-state combine of ``repro.core.quantize``:
+the cohort's VGs split into disjoint pod shards, each folded to a canonical
+base-2^16 limb state inside the big jit (exact for < 2^16 VGs per shard),
+merged exactly across < 2^16 shards, then dequantized once — lifting the
+old single-tier 2^16-VG cap to ~2^32 VGs with bit-identical results at any
+shard count. (The pre-PR-2 master summed interims in raw uint32 and
+silently wrapped once bits + ceil(log2(total_cohort)) > 32.)
 """
 from __future__ import annotations
 
@@ -47,9 +52,9 @@ from repro.core import dp as dp_mod
 from repro.core import masking
 from repro.core import raveling
 from repro.core.kdf import U32
-from repro.core.quantize import (check_headroom, check_master_headroom,
-                                 quantize)
-from repro.core.secure_agg import SecureAggConfig, _combine_jit, group_seed
+from repro.core.quantize import check_headroom, quantize, shard_limb_states
+from repro.core.secure_agg import (SecureAggConfig, combine_limb_states,
+                                   group_seed, resolve_master_shards)
 
 
 @dataclass(frozen=True)
@@ -93,17 +98,21 @@ def plan_buckets(plan, client_order) -> tuple:
 
 
 @partial(jax.jit,
-         static_argnames=("bucket_shapes", "secure_cfg", "dp_cfg"))
+         static_argnames=("bucket_shapes", "n_shards", "secure_cfg",
+                          "dp_cfg"))
 def _cohort_interims(flat, round_seed, key, rows_t, vgs_t, *,
-                     bucket_shapes, secure_cfg, dp_cfg):
+                     bucket_shapes, n_shards, secure_cfg, dp_cfg):
     """The one compiled call: (n, size) f32 stacked updates -> exact
-    (n_groups_total, size) uint32 per-VG interim sums, bucket order.
+    (n_shards, N_LIMBS, size) uint32 per-shard stage-2 limb states
+    (``quantize.interim_limb_state`` over disjoint VG shards, bucket
+    order; zero-row padding on the last shard is a no-op in the integer
+    sums).
 
-    ``bucket_shapes``: tuple of (g, n_groups) per bucket — the ONLY
-    plan-dependent static; the per-round permutation (``rows_t`` row
-    indices, ``vgs_t`` group ids) is traced, so rounds with the same
-    cohort/bucket geometry hit the jit cache even though
-    ``make_virtual_groups`` reshuffles clients every round."""
+    ``bucket_shapes``: tuple of (g, n_groups) per bucket — with
+    ``n_shards`` the only plan-dependent statics; the per-round
+    permutation (``rows_t`` row indices, ``vgs_t`` group ids) is traced,
+    so rounds with the same cohort/bucket geometry hit the jit cache even
+    though ``make_virtual_groups`` reshuffles clients every round."""
     n = flat.shape[0]
     flat = flat.astype(jnp.float32)
 
@@ -139,7 +148,11 @@ def _cohort_interims(flat, round_seed, key, rows_t, vgs_t, *,
         else:
             masked = masking.protect_cohort_grouped(qb, idxs, gseeds, g)
         interims.append(masking.vg_sums(masked, g))         # (m, size)
-    return jnp.concatenate(interims, axis=0)
+    stacked = jnp.concatenate(interims, axis=0)             # (G, size)
+    # pod-shard axis: fold each disjoint VG shard into its limb state
+    # INSIDE this jit (tier 1, exact); the cross-shard merge + float tail
+    # run in the shared executables outside (aggregate_flat).
+    return shard_limb_states(stacked, n_shards)
 
 
 @jax.jit
@@ -166,30 +179,37 @@ def stack_flat_updates(updates):
     return jnp.asarray(np.stack(rows)), unflatten
 
 
-def _check_plan(buckets, secure_cfg):
+def _check_plan(buckets, secure_cfg, n_shards=None) -> int:
+    """Headroom guards for a bucketed plan; returns the resolved stage-2
+    shard count (tier-1 per-shard and tier-2 cross-shard bounds both
+    enforced by ``resolve_master_shards``)."""
     for b in buckets:
         check_headroom(secure_cfg.bits, b.g)
-    check_master_headroom(sum(b.n_groups for b in buckets))
+    return resolve_master_shards(sum(b.n_groups for b in buckets),
+                                 secure_cfg, n_shards)
 
 
 def aggregate_flat(flat, plan, client_order, round_seed, *,
                    secure_cfg: SecureAggConfig = SecureAggConfig(),
                    dp_cfg: dp_mod.DPConfig = dp_mod.DPConfig(),
-                   key=None):
-    """Full pipeline over pre-flattened rows -> (size,) f32 cohort mean."""
+                   key=None, n_shards=None):
+    """Full pipeline over pre-flattened rows -> (size,) f32 cohort mean.
+
+    ``n_shards`` (or ``secure_cfg.master_shards``) shards the stage-2
+    combine across per-pod limb-state accumulators — required past 2^16
+    VGs, bit-identical at any legal count (auto-resolved by default)."""
     buckets = plan_buckets(plan, client_order)
-    _check_plan(buckets, secure_cfg)
+    n_shards = _check_plan(buckets, secure_cfg, n_shards)
     n = flat.shape[0]
     if key is None:
         key = jax.random.PRNGKey(0)
-    interims = _cohort_interims(
+    states = _cohort_interims(
         jnp.asarray(flat), jnp.asarray(round_seed, U32), key,
         tuple(jnp.asarray(b.rows, jnp.int32) for b in buckets),
         tuple(jnp.asarray(b.vg_ids, U32) for b in buckets),
         bucket_shapes=tuple((b.g, b.n_groups) for b in buckets),
-        secure_cfg=secure_cfg, dp_cfg=dp_cfg)
-    return _combine_jit(interims, n, float(secure_cfg.clip),
-                        int(secure_cfg.bits))
+        n_shards=n_shards, secure_cfg=secure_cfg, dp_cfg=dp_cfg)
+    return combine_limb_states(states, n, secure_cfg)
 
 
 def aggregate_stacked(stacked_updates, plan, client_order, round_seed, *,

@@ -17,6 +17,7 @@ to 2c / (2^bits - 1) resolution; tests bound this error.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 U32 = jnp.uint32
@@ -29,6 +30,11 @@ def levels(bits: int):
 
 
 def check_headroom(bits: int, n_clients: int):
+    """Stage-1 guard: a virtual group's unmasked uint32 sum of ``n_clients``
+    ``bits``-bit codes is exact iff bits + ceil(log2(n)) <= 32. This bounds
+    the GROUP size only; the cross-group (stage-2) total has its own
+    two-tier bound — see :func:`check_master_headroom` /
+    :func:`check_shard_headroom`."""
     need = bits + max(1, (n_clients - 1).bit_length())
     if need > 32:
         raise ValueError(
@@ -37,7 +43,9 @@ def check_headroom(bits: int, n_clients: int):
 
 
 def quantize(x, clip=DEFAULT_CLIP, bits=DEFAULT_BITS):
-    """f32 array -> uint32 codes in [0, 2^bits - 1]."""
+    """f32 array -> uint32 codes in [0, 2^bits - 1]. Lossy by design
+    (resolution :func:`quantization_resolution`); every integer stage
+    DOWNSTREAM of it is exact under the headroom preconditions."""
     xf = jnp.clip(x.astype(jnp.float32), -clip, clip)
     q = jnp.round((xf + clip) / (2.0 * clip) * levels(bits))
     return q.astype(U32)
@@ -49,46 +57,176 @@ def dequantize(q, clip=DEFAULT_CLIP, bits=DEFAULT_BITS):
 
 
 def dequantize_sum(q_sum, n, clip=DEFAULT_CLIP, bits=DEFAULT_BITS):
-    """Recover the MEAN of n quantized values from their (non-wrapped) sum."""
+    """Recover the MEAN of n quantized values from their (non-wrapped) sum.
+
+    Precondition: ``q_sum`` did not wrap, i.e. ``check_headroom(bits, n)``
+    held for the group that produced it. For sums OF sums (the stage-2
+    master), use the limb-state combine below instead — a uint32 grand
+    total wraps long before the per-group bound does."""
     mean_code = q_sum.astype(jnp.float32) / jnp.float32(n)
     return (mean_code / levels(bits)) * (2.0 * clip) - clip
 
 
-MAX_MASTER_GROUPS = 1 << 16
+# --------------------------------------------------------------------------
+# hierarchical stage-2 master combine (two-tier limb-state tree)
+# --------------------------------------------------------------------------
+#
+# The master's job is the EXACT integer total of all per-VG interim sums.
+# A naive uint32 total wraps once bits + ceil(log2(total_cohort)) > 32, so
+# the combine instead carries a LIMB STATE: the canonical base-2^16 digits
+# of the running total, held in three uint32 lanes
+#
+#     value = limbs[0] + limbs[1] * 2^16 + limbs[2] * 2^32
+#     limbs[0], limbs[1] in [0, 2^16);  limbs[2] <= 2^16 per shard
+#
+# Tier 1 (per pod / per shard): ``interim_limb_state`` folds a shard of
+# < 2^16 interims into one limb state — each 16-bit half-sum stays below
+# 2^32, so the shard total is exact (``check_master_headroom``).
+# Tier 2 (cross-pod): ``merge_limb_states`` sums < 2^16 limb states
+# per-limb in uint32 and carry-normalizes (``check_shard_headroom``) —
+# exact again, lifting the overall exact bound from 2^16 VGs total to
+# 2^16 per shard x 2^16 shards (~2^32 VGs).
+#
+# Because the canonical digits of a sum do not depend on how its terms are
+# sharded, EVERY shard count (including 1 = the single-tier path) yields
+# bit-identical limbs; the only float stage, ``dequantize_limb_state``, is
+# jitted ONCE and shared by all routes (``secure_agg._finalize_jit``), so
+# sharded and serial combines are bit-identical end to end.
+
+MAX_MASTER_GROUPS = 1 << 16     # tier-1 bound: VGs per shard
+MAX_MASTER_SHARDS = 1 << 16     # tier-2 bound: shards per merge
+LIMB_BITS = 16
+N_LIMBS = 3
+_LIMB_MASK = 0xFFFF
 
 
 def check_master_headroom(n_groups: int):
-    """Stage-2 guard: the split-limb accumulator of
-    :func:`dequantize_interim_sum` is exact for up to 2^16 virtual groups
-    (each 16-bit half-sum stays below 2^32). Beyond that the master must
-    shard its combine — raise rather than wrap."""
+    """Tier-1 guard: one shard's limb state (:func:`interim_limb_state`)
+    is exact for up to 2^16 - 1 virtual groups — each 16-bit half-sum
+    stays below 2^32. Precondition for every single-shard combine; a
+    master holding more VGs must shard its combine (tree-combine across
+    pods, :func:`merge_limb_states`) — raise rather than wrap."""
     if n_groups >= MAX_MASTER_GROUPS:
         raise ValueError(
             f"master combine over {n_groups} virtual groups exceeds the "
-            f"{MAX_MASTER_GROUPS - 1}-group exact-accumulation limit")
+            f"{MAX_MASTER_GROUPS - 1}-group per-shard exact-accumulation "
+            f"limit; shard the stage-2 combine (master_shards / n_shards)")
+
+
+def check_shard_headroom(n_shards: int):
+    """Tier-2 (cross-pod) guard: the per-limb uint32 sums of
+    :func:`merge_limb_states` are exact for up to 2^16 - 1 shards (limb
+    values are <= 2^16, so 2^16 - 1 of them plus carries stay below
+    2^32). Precondition of every cross-shard merge."""
+    if n_shards >= MAX_MASTER_SHARDS:
+        raise ValueError(
+            f"cross-shard merge over {n_shards} shards exceeds the "
+            f"{MAX_MASTER_SHARDS - 1}-shard exact-merge limit")
+
+
+def min_master_shards(n_groups: int) -> int:
+    """Smallest shard count that keeps a ``n_groups``-VG stage-2 combine
+    exact (tier-1 bound per shard; tier-2 bound checked by the caller)."""
+    return -(-max(1, n_groups) // (MAX_MASTER_GROUPS - 1))
+
+
+def interim_limb_state(interims):
+    """Tier-1 fold: (m, *shape) uint32 exact per-VG sums -> (N_LIMBS,
+    *shape) uint32 canonical base-2^16 digits of the shard total.
+
+    Precondition: m < 2^16 (:func:`check_master_headroom`) — the lo/hi
+    half-sums then stay below 2^32 and the digits are exact. Integer-only,
+    so any compilation (inside the cohort jit, under shard_map, per pod)
+    produces identical bits; wrapping-add associativity makes the result
+    independent of row order within the shard."""
+    interims = interims.astype(U32)
+    lo = jnp.sum(interims & U32(_LIMB_MASK), axis=0, dtype=U32)
+    hi = jnp.sum(interims >> U32(LIMB_BITS), axis=0, dtype=U32)
+    l0 = lo & U32(_LIMB_MASK)
+    t1 = (lo >> U32(LIMB_BITS)) + (hi & U32(_LIMB_MASK))
+    l1 = t1 & U32(_LIMB_MASK)
+    l2 = (t1 >> U32(LIMB_BITS)) + (hi >> U32(LIMB_BITS))
+    return jnp.stack([l0, l1, l2])
+
+
+def shard_limb_states(interims, n_shards: int):
+    """Split the VG axis into ``n_shards`` disjoint shards and fold each:
+    (m, *shape) uint32 -> (n_shards, N_LIMBS, *shape) per-shard states.
+
+    The ONE sharding implementation every route uses (serial master,
+    vectorized engine, fl_step, benches) so edge semantics stay uniform:
+    a non-dividing shard count zero-pads the VG axis (zero rows are exact
+    no-ops in the integer sums). Preconditions: ceil(m / n_shards) < 2^16
+    per shard (:func:`check_master_headroom`) and n_shards < 2^16
+    (:func:`check_shard_headroom`). Traceable — callable inside a jit."""
+    m = interims.shape[0]
+    per = -(-m // n_shards)
+    interims = interims.astype(U32)
+    if per * n_shards > m:
+        interims = jnp.concatenate(
+            [interims,
+             jnp.zeros((per * n_shards - m, *interims.shape[1:]), U32)])
+    return jax.vmap(interim_limb_state)(
+        interims.reshape(n_shards, per, *interims.shape[1:]))
+
+
+def carry_normalize(limb_sums):
+    """Per-limb uint32 sums of canonical limb states -> the canonical limb
+    state of the total (schoolbook carry propagation). Exact while each
+    input lane stays below 2^32 — guaranteed for < 2^16 summed states
+    (:func:`check_shard_headroom`). The cross-pod ``psum``-merge in
+    ``launch/fl_step.py`` lands here after its integer collective."""
+    s = limb_sums.astype(U32)
+    l0 = s[0] & U32(_LIMB_MASK)
+    t1 = s[1] + (s[0] >> U32(LIMB_BITS))
+    l1 = t1 & U32(_LIMB_MASK)
+    l2 = s[2] + (t1 >> U32(LIMB_BITS))
+    return jnp.stack([l0, l1, l2])
+
+
+def merge_limb_states(states):
+    """Tier-2 merge: (p, N_LIMBS, *shape) uint32 per-shard limb states ->
+    (N_LIMBS, *shape) canonical state of the grand total.
+
+    Precondition: p < 2^16 (:func:`check_shard_headroom`). Exact and
+    shard-layout-independent: merging any partition of the same interims
+    yields the digits of the same integer, so a 1-shard "merge" is the
+    identity and every shard count is bit-identical."""
+    return carry_normalize(jnp.sum(states.astype(U32), axis=0, dtype=U32))
+
+
+def dequantize_limb_state(limbs, n, clip=DEFAULT_CLIP, bits=DEFAULT_BITS):
+    """The ONLY float stage of the master combine: canonical limb state ->
+    f32 cohort MEAN update.
+
+    ``n``: total cohort size (clients, not groups). The integer digits are
+    exact on entry; this conversion rounds to f32 resolution exactly once.
+    Both the serial master and every sharded/vectorized route call the
+    single jitted instance (``secure_agg._finalize_jit``) — XLA contracts
+    the mul/sub chain differently per executable, so sharing it is what
+    makes the final floats bit-identical across paths (the PR-2 parity
+    discipline)."""
+    total = (limbs[2].astype(jnp.float32) * jnp.float32(4294967296.0)
+             + limbs[1].astype(jnp.float32) * jnp.float32(65536.0)
+             + limbs[0].astype(jnp.float32))
+    mean_code = total / jnp.float32(n)
+    return (mean_code / levels(bits)) * (2.0 * clip) - clip
 
 
 def dequantize_interim_sum(interims, n, clip=DEFAULT_CLIP,
                            bits=DEFAULT_BITS):
-    """Overflow-safe stage-2 combine: per-VG interim sums -> cohort MEAN.
+    """Single-tier stage-2 combine: per-VG interim sums -> cohort MEAN.
 
     ``interims``: (n_groups, size) uint32 exact per-group sums (stage 1
     guarantees each fits uint32 via the per-group ``check_headroom``);
-    ``n``: total cohort size. The naive uint32 total wraps whenever
-    bits + ceil(log2(n)) > 32 (e.g. 4097+ clients at the default 20 bits).
-    Instead each interim is split into 16-bit halves and the halves are
-    summed in uint32 — exact for < 2^16 groups — then recombined in f32,
-    so the master combine never wraps regardless of cohort size.
-    Wrapping-add is associative, so the result is independent of group
-    order (the vectorized engine relies on this for bit-exact parity with
-    the serial reference)."""
-    interims = interims.astype(U32)
-    lo = jnp.sum(interims & U32(0xFFFF), axis=0, dtype=U32)
-    hi = jnp.sum(interims >> U32(16), axis=0, dtype=U32)
-    total = hi.astype(jnp.float32) * jnp.float32(65536.0) \
-        + lo.astype(jnp.float32)
-    mean_code = total / jnp.float32(n)
-    return (mean_code / levels(bits)) * (2.0 * clip) - clip
+    ``n``: total cohort size. Exact for < 2^16 groups — the tier-1
+    precondition ``check_master_headroom`` — via the limb-state fold
+    (:func:`interim_limb_state`); larger masters must go through the
+    sharded route (``secure_agg.master_aggregate`` with ``n_shards`` > 1),
+    which produces bit-identical results for any cohort this single-tier
+    form can hold."""
+    return dequantize_limb_state(interim_limb_state(interims), n, clip,
+                                 bits)
 
 
 def quantization_resolution(clip=DEFAULT_CLIP, bits=DEFAULT_BITS) -> float:

@@ -6,9 +6,11 @@ Stage 1 (Secure Aggregator, per Virtual Group):
     modular sum is the *interim result* (masks cancel exactly).
 
 Stage 2 (Master Aggregator):
-    interim results are dequantized to mean-updates and combined with the
-    user-defined aggregation logic (a Strategy — FedAvg/FedProx/DGA/...),
-    optionally after global DP noise.
+    interim results combine through the hierarchical limb-state tree of
+    ``repro.core.quantize`` (per-pod shards, exact cross-shard merge, one
+    shared dequantize) into the cohort mean, then the user-defined
+    aggregation logic (a Strategy — FedAvg/FedProx/DGA/...), optionally
+    after global DP noise.
 
 The async path (paper §4.3) skips masking: with a trusted aggregation
 boundary (confidential container / on-pod aggregation) clients upload
@@ -24,9 +26,11 @@ from jax.flatten_util import ravel_pytree
 
 from repro.core import masking
 from repro.core.kdf import U32
-from repro.core.quantize import (DEFAULT_BITS, DEFAULT_CLIP,
+from repro.core.quantize import (DEFAULT_BITS, DEFAULT_CLIP, MAX_MASTER_GROUPS,
                                  check_headroom, check_master_headroom,
-                                 dequantize_interim_sum, quantize)
+                                 check_shard_headroom, dequantize_limb_state,
+                                 merge_limb_states, min_master_shards,
+                                 quantize, shard_limb_states)
 
 
 @dataclass(frozen=True)
@@ -36,17 +40,27 @@ class SecureAggConfig:
     use_kernels: bool = False   # route mask expansion through Pallas kernels
     vectorized: bool = True     # whole-cohort pipeline as one compiled call
                                 # (False: serial per-client reference loop)
+    master_shards: int = 0      # stage-2 combine shards (per-pod tier-1
+                                # accumulators); 0 = auto: 1 shard while the
+                                # plan fits the single-tier bound, else the
+                                # smallest exact shard count
 
 
 def flatten_update(update_pytree):
-    """-> (flat f32 vector, unflatten fn)."""
+    """-> (flat f32 vector, unflatten fn). Lossless for f32 leaves (wider
+    dtypes narrow to f32 — the protocol's carrier precision)."""
     flat, unflatten = ravel_pytree(update_pytree)
     return flat.astype(jnp.float32), unflatten
 
 
 def client_protect(update_pytree, idx_in_vg: int, vg_size: int, round_seed,
                    cfg: SecureAggConfig = SecureAggConfig()):
-    """Client-side: quantize + mask. Returns (payload uint32, unflatten)."""
+    """Client-side: quantize + mask. Returns (payload uint32, unflatten).
+
+    Precondition (enforced): ``check_headroom(cfg.bits, vg_size)`` — the
+    VG's unmasked sum must fit uint32, bits + ceil(log2(g)) <= 32. The
+    masked payload itself wraps freely by design (mask cancellation is
+    modular); quantization is the chain's only lossy step."""
     check_headroom(cfg.bits, vg_size)
     flat, unflatten = flatten_update(update_pytree)
     q = quantize(flat, cfg.clip, cfg.bits)
@@ -59,36 +73,78 @@ def client_protect(update_pytree, idx_in_vg: int, vg_size: int, round_seed,
 
 
 def vg_aggregate(payloads):
-    """Stage 1: (n, size) uint32 masked payloads -> interim (size,) uint32."""
+    """Stage 1: (n, size) uint32 masked payloads -> interim (size,) uint32.
+
+    The wrapping sum cancels every pairwise mask exactly; the residue
+    equals the sum of unmasked codes, which is EXACT (no wrap) under the
+    per-group ``check_headroom`` each payload was built with."""
     return masking.modular_sum(jnp.stack(list(payloads)))
 
 
-# The combine is jitted ONCE and shared by the serial reference and the
-# vectorized engine: jit FMA-contracts the dequantize mul/sub chain, so an
-# eager master and a jitted engine would differ by ulps. Interims are exact
-# integers on both sides, so sharing this executable makes the final floats
-# bit-identical.
-_combine_jit = jax.jit(dequantize_interim_sum, static_argnums=(1, 2, 3))
+# The stage-2 combine splits into integer limb stages (exact in ANY
+# executable — inside the cohort jit, under shard_map, per pod) and ONE
+# float tail. Only the tail can differ across compilations (XLA
+# FMA-contracts the dequantize mul/sub chain), so it is jitted ONCE here
+# and shared by the serial reference, the vectorized engine, and every
+# sharded route — that is what keeps the final floats bit-identical.
+_shard_limbs_jit = jax.jit(shard_limb_states, static_argnums=(1,))
+_merge_jit = jax.jit(merge_limb_states)
+_finalize_jit = jax.jit(dequantize_limb_state, static_argnums=(1, 2, 3))
+
+
+def resolve_master_shards(n_groups: int,
+                          cfg: SecureAggConfig = SecureAggConfig(),
+                          n_shards=None) -> int:
+    """Shard count for a stage-2 combine over ``n_groups`` VGs: an explicit
+    ``n_shards`` wins, then ``cfg.master_shards``, then auto (1 while the
+    single-tier tier-1 bound holds, else the smallest exact count). The
+    returned count always satisfies both tier guards or raises."""
+    if n_shards is None:
+        n_shards = cfg.master_shards or \
+            (1 if n_groups < MAX_MASTER_GROUPS else
+             min_master_shards(n_groups))
+    n_shards = max(1, min(int(n_shards), max(1, n_groups)))
+    check_shard_headroom(n_shards)
+    check_master_headroom(-(-n_groups // n_shards))
+    return n_shards
+
+
+def combine_limb_states(states, n: int,
+                        cfg: SecureAggConfig = SecureAggConfig()):
+    """Merge per-shard limb states and dequantize to the cohort-mean flat
+    update: (p, N_LIMBS, size) uint32 -> (size,) f32. Preconditions: each
+    shard held < 2^16 groups (tier 1) and p < 2^16 (tier 2). The float
+    tail is the shared ``_finalize_jit`` executable."""
+    check_shard_headroom(states.shape[0])
+    merged = _merge_jit(states)
+    return _finalize_jit(merged, int(n), float(cfg.clip), int(cfg.bits))
 
 
 def master_aggregate(interims, group_sizes, unflatten,
-                     cfg: SecureAggConfig = SecureAggConfig()):
+                     cfg: SecureAggConfig = SecureAggConfig(), *,
+                     n_shards=None):
     """Stage 2: combine interim VG sums into the cohort-mean update pytree.
 
     interims: list of (size,) uint32; group_sizes: list of int.
 
     Each interim is exact per the per-group headroom check, but their naive
     uint32 TOTAL wraps once bits + ceil(log2(total_cohort)) > 32 (4097+
-    clients at the default 20 bits) — the pre-fix code silently corrupted
-    the global mean there. The combine now goes through the split-limb
-    accumulator :func:`repro.core.quantize.dequantize_interim_sum`, exact
-    for any cohort the master can hold (< 2^16 groups, enforced)."""
+    clients at the default 20 bits) — the pre-PR-2 code silently corrupted
+    the global mean there. The combine is the hierarchical limb-state tree
+    of ``repro.core.quantize``: disjoint VG shards fold into per-shard
+    (per-pod) limb states — exact for < 2^16 groups per shard — which
+    merge exactly across < 2^16 shards, then dequantize through the one
+    shared float tail. Any shard count (``n_shards`` explicit,
+    ``cfg.master_shards``, or auto) is bit-identical; the guards raise
+    rather than wrap when a plan exceeds the active tier bounds."""
     n = int(sum(group_sizes))
     for g in group_sizes:
         check_headroom(cfg.bits, int(g))
-    check_master_headroom(len(group_sizes))
+    m = len(group_sizes)
+    n_shards = resolve_master_shards(m, cfg, n_shards)
     stacked = jnp.stack([i.astype(U32) for i in interims])
-    mean_flat = _combine_jit(stacked, n, float(cfg.clip), int(cfg.bits))
+    states = _shard_limbs_jit(stacked, n_shards)
+    mean_flat = combine_limb_states(states, n, cfg)
     return unflatten(mean_flat)
 
 
@@ -97,7 +153,10 @@ def secure_aggregate_round(client_updates, vg_plan, round_seed,
     """End-to-end reference protocol over a cohort (used by the simulator).
 
     client_updates: dict client_id -> update pytree (all same structure).
-    Returns the cohort-mean update pytree.
+    Returns the cohort-mean update pytree. Exact up to quantization
+    resolution under the per-group stage-1 headroom and the two-tier
+    stage-2 bounds (auto-sharded past 2^16 VGs via ``master_aggregate``);
+    this serial loop is the bit-parity oracle for the vectorized engine.
     """
     interims, sizes, unflatten = [], [], None
     for group in vg_plan.groups:

@@ -52,7 +52,12 @@ def _tree_zeros_like(t):
 
 
 def weighted_mean(updates, weights):
-    """updates: list of pytrees; weights: list of float. -> pytree."""
+    """updates: list of pytrees; weights: list of float. -> pytree.
+
+    Float stage (f32 normalize + accumulate, list order) — deterministic
+    per call but NOT shared-jitted; strategies sit above the secure
+    aggregate, outside the protocol's bit-exactness boundary (the sync
+    path feeds it a single cohort mean, so order effects are moot)."""
     w = jnp.asarray(weights, jnp.float32)
     w = w / jnp.clip(jnp.sum(w), 1e-12)
     out = _tree_zeros_like(updates[0])
@@ -115,8 +120,38 @@ class DGA(FedAvg):
 def _buffer_write(buf, rows, cursor):
     """Write ``rows`` (k, size) into ``buf`` at row ``cursor`` — one
     ``dynamic_update_slice``, buffer donated so XLA writes in place. The
-    cursor is traced, so every fill position shares one executable."""
+    cursor is traced, so every fill position shares one executable. Used
+    by the single-row (serial ``submit``) path, where the shape is always
+    (1, size); batched fills go through :func:`_buffer_write_masked`."""
     return jax.lax.dynamic_update_slice(buf, rows, (cursor, 0))
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _buffer_write_masked(buf, padded, cursor, k):
+    """Batched fill with ONE executable for every (cursor, batch-length)
+    pair: ``padded`` is the segment padded to the full buffer shape
+    (buffer_size, size); buffer row p takes ``padded[p - cursor]`` when
+    ``cursor <= p < cursor + k`` and keeps its old value otherwise, so the
+    pad rows never land. Killing the per-batch-length recompiles of the
+    old exact-shape ``dynamic_update_slice`` route (ROADMAP item) costs a
+    full-buffer select per fill — amortized, the same O(buffer) work per
+    drain cycle the exact writes did."""
+    pos = jnp.arange(buf.shape[0])
+    src = jnp.clip(pos - cursor, 0, buf.shape[0] - 1)
+    valid = (pos >= cursor) & (pos < cursor + k)
+    return jnp.where(valid[:, None], padded[src], buf)
+
+
+def _pad_rows(rows, target_len: int):
+    """(k, size) -> (target_len, size), zero rows appended. Padding is
+    DATA-free: pad rows are masked out of the buffer write and weighted 0
+    by the masked drain, so batch results stay bit-identical to the
+    unpadded (and serial) paths."""
+    k, size = rows.shape
+    if k == target_len:
+        return rows
+    return jnp.concatenate(
+        [rows, jnp.zeros((target_len - k, size), rows.dtype)])
 
 
 @partial(jax.jit, static_argnames=("server_lr",), donate_argnums=(0,))
@@ -185,11 +220,17 @@ class FedBuff:
                                current_version)
 
     def offer_rows(self, rows, weights, update_versions, current_version):
-        """Batched offer: write k <= room() raveled rows with ONE
-        ``dynamic_update_slice``. ``weights``/``update_versions`` are
-        per-row; staleness is computed in host floats exactly as the
-        one-row path does, so serial and batched fills are bit-identical.
-        Returns True if the buffer is now full."""
+        """Batched offer: write k <= room() raveled rows in ONE dispatch.
+        ``weights``/``update_versions`` are per-row; staleness is computed
+        in host floats exactly as the one-row path does, so serial and
+        batched fills are bit-identical. Returns True if the buffer is now
+        full.
+
+        Single rows (the serial ``submit`` reference) keep the exact-shape
+        ``dynamic_update_slice``; multi-row segments are padded to the
+        buffer size and merged with the masked write, so every batch
+        length shares one compiled executable (no per-length recompiles —
+        the ROADMAP's padding item)."""
         rows = jnp.asarray(rows, jnp.float32)
         k = rows.shape[0]
         if k > self.room():
@@ -200,15 +241,24 @@ class FedBuff:
             self._weights[self._cursor + j] = np.float32(
                 float(weights[j]) * self.staleness_weight(
                     int(update_versions[j]), current_version))
-        self._rows = _buffer_write(self._rows, rows,
-                                   jnp.asarray(self._cursor, jnp.int32))
+        if k == 1:
+            self._rows = _buffer_write(self._rows, rows,
+                                       jnp.asarray(self._cursor, jnp.int32))
+        else:
+            self._rows = _buffer_write_masked(
+                self._rows, _pad_rows(rows, self.buffer_size),
+                jnp.asarray(self._cursor, jnp.int32),
+                jnp.asarray(k, jnp.int32))
         self._cursor += k
         return self._cursor >= self.buffer_size
 
     def drain(self, params, state):
         """Apply the buffered aggregate (one jitted weighted-mean + axpy on
-        the raveled params); resets the cursor. Stale rows past the cursor
-        are masked, so partial drains are exact."""
+        the raveled params); resets the cursor. Rows past the cursor are
+        masked to weight 0, so partial drains and pad rows are exact
+        no-ops; every caller shares the one ``_drain_apply`` executable,
+        which is what keeps serial and batched submit paths bit-identical
+        through the float server step."""
         if self._cursor == 0:
             return params, state
         _, unflatten = raveling.cached_unflatten(params)

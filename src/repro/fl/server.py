@@ -194,6 +194,7 @@ class ManagementService:
         rec.round_idx += 1
         self._finish_round(rec, dict(info.metrics, n=info.n_participants,
                                      n_groups=info.n_groups,
+                                     n_shards=info.n_shards,
                                      n_samples_per_client=n_samples))
         return True
 
@@ -283,7 +284,8 @@ class ManagementService:
         self._strategy_state[rec.task_id] = state
         rec.round_idx += 1
         self._finish_round(rec, dict(info.metrics, n=info.n_participants,
-                                     n_groups=info.n_groups))
+                                     n_groups=info.n_groups,
+                                     n_shards=info.n_shards))
 
     def _finish_round(self, rec: TaskRecord, metrics: dict):
         rec.history.append({"round": rec.round_idx, **metrics})

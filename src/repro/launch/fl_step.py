@@ -5,7 +5,12 @@
       -> quantize (uint32 fixed point)                     [paper §4.1]
       -> + net pairwise mask within the silo's VG          [paper §4.1]
       -> stage-1: modular uint32 sum over each VG          [paper §3.1.2]
-      -> stage-2: dequantize + master mean over VGs        [paper §3.1.3]
+      -> stage-2: hierarchical master combine over VGs     [paper §3.1.3]
+         (per-pod limb-state accumulators + exact cross-pod merge — the
+         SAME combine implementation as the cross-device master in
+         ``repro.core.quantize``; under the per_pod scheme it runs as a
+         ``compat.shard_map`` over the mesh's "pod" axis with the merge
+         lowered to one uint32 psum)
       -> server AdamW update (FedOpt-style master logic)
 
 The whole protocol runs PER LEAF of the gradient pytree (never raveled:
@@ -31,7 +36,12 @@ import jax.numpy as jnp
 
 from repro import compat
 from repro.core.kdf import U32, mask_stream, pair_seed
-from repro.core.quantize import check_headroom, dequantize_sum, quantize
+from repro.core.quantize import (MAX_MASTER_GROUPS, carry_normalize,
+                                 check_headroom, check_master_headroom,
+                                 check_shard_headroom, dequantize_limb_state,
+                                 interim_limb_state, merge_limb_states,
+                                 min_master_shards, quantize,
+                                 shard_limb_states)
 from repro.models import loss_fn
 from repro.optim import adamw
 from repro.optim.adamw import apply_updates
@@ -94,6 +104,49 @@ def leaf_offsets(params_struct):
         acc += math.prod(leaf.shape) if leaf.shape else 1
     treedef = jax.tree.structure(params_struct)
     return jax.tree.unflatten(treedef, offsets)
+
+
+def hierarchical_master_combine(interim, n_total: int, clip: float,
+                                bits: int, *, n_shards: int = 1,
+                                pod_axis: str | None = None, mesh=None):
+    """Stage 2, shared with the cross-device master (``repro.core.quantize``):
+    fold disjoint VG shards into per-pod limb states (tier 1, exact for
+    < 2^16 VGs per shard), merge exactly across shards (tier 2, < 2^16
+    shards), dequantize the cohort total ONCE.
+
+    ``interim``: (n_vgs, *leaf_shape) uint32 exact per-VG sums;
+    ``n_total``: total silo count (the mean's denominator). With
+    ``pod_axis`` set (per_pod scheme under a mesh whose pod axis divides
+    n_vgs) the tier-1 fold runs per pod under ``compat.shard_map`` and the
+    tier-2 merge is one uint32 ``psum`` over the pod axis — the paper's
+    tree-combine, visible as a single integer collective in the HLO.
+    Every sharding (including n_shards=1) is bit-identical: canonical
+    limb digits don't depend on how the VG axis is partitioned. A
+    ``n_shards`` that does not divide n_vgs zero-pads the VG axis (an
+    exact no-op in the integer sums); the shard_map route does require
+    the pod axis to divide n_vgs (its input spec blocks the leading
+    axis)."""
+    n_vgs = interim.shape[0]
+    if pod_axis is not None and mesh is not None:
+        from jax.sharding import PartitionSpec as P
+        p = mesh.shape[pod_axis]
+        check_shard_headroom(p)
+        check_master_headroom(n_vgs // p)
+
+        def local(ishard):                 # (n_vgs/p, *leaf_shape) per pod
+            state = interim_limb_state(ishard)
+            merged = carry_normalize(jax.lax.psum(state, pod_axis))
+            return dequantize_limb_state(merged, n_total, clip, bits)
+
+        pad = [None] * (interim.ndim - 1)
+        return compat.shard_map(local, mesh=mesh,
+                                in_specs=P(pod_axis, *pad),
+                                out_specs=P(*pad))(interim)
+    check_shard_headroom(n_shards)
+    check_master_headroom(-(-n_vgs // n_shards))
+    states = shard_limb_states(interim, n_shards)
+    return dequantize_limb_state(merge_limb_states(states), n_total, clip,
+                                 bits)
 
 
 def _build_pack_axes(cfg, mesh):
@@ -207,6 +260,20 @@ def make_fl_train_step(cfg, mesh, *, vg_size: int | None = None,
         bits = min(bits, 13)
         check_pack_headroom(bits, vg_size)
     check_headroom(bits, vg_size)
+    # stage-2 sharding over the mesh's pod axis: per_pod consumes the same
+    # hierarchical merge as the cross-device master. The shard_map route
+    # needs the pod axis to divide the VG axis AND the per-pod shard to
+    # fit the tier-1 bound; otherwise fall back to the bit-identical
+    # zero-padded form (GSPMD lowers the tree), keeping enough shards for
+    # headroom even when the pod count doesn't divide n_vgs.
+    n_pods = mesh.shape.get("pod", 1)
+    divisible = n_vgs % n_pods == 0
+    pod_axis = ("pod" if cfg.fl_scheme == "per_pod" and "pod" in mesh.shape
+                and divisible and n_vgs // n_pods < MAX_MASTER_GROUPS
+                else None)
+    stage2_shards = max(n_pods if divisible else 1, min_master_shards(n_vgs))
+    check_master_headroom(-(-n_vgs // stage2_shards))
+    check_shard_headroom(stage2_shards)
     microbatches = microbatches or cfg.train_microbatches
     pack_axes = _build_pack_axes(cfg, mesh) if packed else None
     if cfg.fl_scheme == "per_pod" and cfg.activation_batch_axes is None:
@@ -286,8 +353,9 @@ def make_fl_train_step(cfg, mesh, *, vg_size: int | None = None,
                 hi = interim >> U32(PACK_FIELD_BITS)
                 interim = jnp.stack([lo, hi], axis=pack_ax + 2).reshape(
                     n_vgs, *leaf_shape)
-            vg_means = dequantize_sum(interim, vg_size, clip, bits)
-            return jnp.mean(vg_means, axis=0)               # stage 2
+            return hierarchical_master_combine(         # stage 2 (tree)
+                interim, n_silos, clip, bits, n_shards=stage2_shards,
+                pod_axis=pod_axis, mesh=mesh)
 
         agg_grad = jax.tree.map(aggregate_leaf, grads, offsets, pack_axes)
 
@@ -300,4 +368,6 @@ def make_fl_train_step(cfg, mesh, *, vg_size: int | None = None,
 
     return fl_round, dict(n_silos=n_silos, vg_size=vg_size, n_vgs=n_vgs,
                           bits=bits, clip=clip, microbatches=microbatches,
-                          local_steps=local_steps)
+                          local_steps=local_steps,
+                          stage2_shards=stage2_shards,
+                          stage2_pod_axis=pod_axis)

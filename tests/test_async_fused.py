@@ -265,3 +265,44 @@ class TestRavelingCache:
         back = unflatten(flat[2])
         np.testing.assert_array_equal(np.asarray(back["w"]),
                                       np.asarray(ups[2]["w"]))
+
+
+class TestPaddedBatchCompiles:
+    """ISSUE 4 satellite: ``submit_batch`` pads DP rows to whole buffers and
+    buffer fills to the buffer shape, so varying batch lengths reuse ONE
+    compiled executable per jit (the ROADMAP's per-batch-length recompile
+    item) — while staying bit-identical to the serial reference."""
+
+    def test_no_per_length_recompiles(self):
+        from repro.core import dp as dp_mod
+        from repro.core import strategies as strat_mod
+        server = _mk_server(buffer_size=8, dp="local")
+        # warm each DP SHAPE CLASS once (powers of two below one buffer,
+        # whole buffers above: {1, 2, 4, 8, 16} here); the masked buffer
+        # write and the 1-row write each have exactly one shape.
+        for j, k in enumerate([1, 2, 3, 5, 9]):
+            server.submit_batch(_rows(k, seed=1 + j), [1.0] * k, [0] * k)
+        dp0 = dp_mod._flat_local_dp_rows_jit._cache_size()
+        wr0 = strat_mod._buffer_write_masked._cache_size()
+        # every batch length up to two buffers reuses those executables —
+        # the pre-padding code compiled one DP program and one write
+        # program PER DISTINCT LENGTH
+        for j, k in enumerate([5, 2, 7, 6, 4, 8, 1, 5, 12, 16, 3, 10]):
+            server.submit_batch(_rows(k, seed=10 + j),
+                                [1.0] * k, [0] * k)
+        assert dp_mod._flat_local_dp_rows_jit._cache_size() == dp0
+        assert strat_mod._buffer_write_masked._cache_size() == wr0
+
+    def test_padded_batches_bit_identical_to_serial(self):
+        """Lengths chosen to hit pad amounts 0..B-1 and mid-batch drains."""
+        rows = _rows(23, seed=7)
+        versions = [j % 3 for j in range(23)]
+        weights = [1.0 + (j % 4) for j in range(23)]
+        s_serial, s_batch = _mk_server(5, "local"), _mk_server(5, "local")
+        _serial_feed(s_serial, rows, weights, versions)
+        i = 0
+        for k in [4, 6, 1, 5, 7]:
+            s_batch.submit_batch(rows[i:i + k], weights[i:i + k],
+                                 versions[i:i + k])
+            i += k
+        _assert_same_server_state(s_serial, s_batch)

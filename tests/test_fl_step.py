@@ -131,3 +131,62 @@ def test_pack2_roundtrip():
     assert packed.shape == (3, 4)
     np.testing.assert_array_equal(np.asarray(unpack2_sum(packed)),
                                   np.asarray(q))
+
+
+def test_hierarchical_master_combine_matches_reference():
+    """Stage 2 is the shared limb-state tree: any shard count of the VG
+    axis is bit-identical, and the value equals the plain mean of
+    dequantized VG means to f32 resolution."""
+    from repro.core.quantize import dequantize_sum
+    from repro.launch.fl_step import hierarchical_master_combine
+    rng = np.random.RandomState(2)
+    n_vgs, g, bits, clip = 12, 4, 18, 0.05
+    interim = jnp.asarray(
+        rng.randint(0, g * ((1 << bits) - 1), (n_vgs, 3, 5),
+                    dtype=np.int64).astype(np.uint32))
+    ref = hierarchical_master_combine(interim, n_vgs * g, clip, bits)
+    for shards in [2, 3, 5, 6, 7, 12]:   # incl. non-dividing (zero-pad)
+        out = hierarchical_master_combine(interim, n_vgs * g, clip, bits,
+                                          n_shards=shards)
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+    naive = np.asarray(dequantize_sum(interim, g, clip, bits),
+                       np.float32).mean(axis=0)
+    np.testing.assert_allclose(np.asarray(ref), naive, atol=1e-6)
+
+
+def test_hierarchical_combine_shard_map_pod_route():
+    """The per_pod route: per-pod limb states under compat.shard_map with
+    a uint32 psum merge — same numbers as the unsharded form."""
+    from repro.launch.fl_step import hierarchical_master_combine
+    mesh = compat.make_mesh((1, 1, 1), ("pod", "data", "model"))
+    rng = np.random.RandomState(3)
+    interim = jnp.asarray(
+        rng.randint(0, 1 << 22, (8, 6), dtype=np.int64).astype(np.uint32))
+    plain = hierarchical_master_combine(interim, 32, 0.05, 18)
+    podded = hierarchical_master_combine(interim, 32, 0.05, 18,
+                                         pod_axis="pod", mesh=mesh)
+    np.testing.assert_allclose(np.asarray(plain), np.asarray(podded),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_per_pod_round_uses_shard_map_combine():
+    """End-to-end per_pod fl_round on a pod mesh: the stage-2 combine runs
+    under shard_map over the pod axis and the round still trains."""
+    cfg = get_reduced_config("deepseek-67b")
+    assert cfg.fl_scheme == "per_pod"
+    mesh = compat.make_mesh((1, 1, 1), ("pod", "data", "model"))
+    with compat.set_mesh(mesh):
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        opt_state = adamw().init(params)
+        step, meta = make_fl_train_step(cfg, mesh, secure=True,
+                                        microbatches=1, server_lr=5e-3)
+        assert meta["stage2_pod_axis"] == "pod"
+        assert meta["stage2_shards"] == 1
+        batch = _batch(cfg, meta["n_silos"], 4, 16)
+        step = jax.jit(step)
+        losses = []
+        for i in range(4):
+            seed = jnp.asarray([i, i + 1], jnp.uint32)
+            params, opt_state, loss = step(params, opt_state, batch, seed)
+            losses.append(float(loss))
+    assert losses[-1] < losses[0], losses

@@ -73,6 +73,146 @@ def test_master_group_count_guard():
 
 
 # ---------------------------------------------------------------------------
+# hierarchical (two-tier) stage-2 combine (ISSUE 4 tentpole)
+# ---------------------------------------------------------------------------
+
+def test_shard_count_guard():
+    from repro.core.quantize import check_shard_headroom
+    check_shard_headroom(65535)
+    with pytest.raises(ValueError):
+        check_shard_headroom(1 << 16)
+
+
+def test_limb_state_merge_is_shard_layout_independent():
+    """The canonical limb digits of the grand total do not depend on how
+    the VG axis is partitioned — the property that makes every shard
+    count bit-identical."""
+    from repro.core.quantize import (interim_limb_state,  # noqa: F401
+                                     merge_limb_states)
+    rng = np.random.RandomState(0)
+    interims = jnp.asarray(
+        rng.randint(0, 1 << 32, (60, 9), dtype=np.uint64).astype(np.uint32))
+    single = interim_limb_state(interims)
+    for cuts in [(30,), (7, 31, 44), (1, 2, 3, 4, 59), tuple(range(1, 60))]:
+        parts = np.split(np.asarray(interims), list(cuts))
+        states = jnp.stack([interim_limb_state(jnp.asarray(p))
+                            for p in parts])
+        merged = merge_limb_states(states)
+        np.testing.assert_array_equal(np.asarray(merged),
+                                      np.asarray(single))
+    # digits really are the exact total (checked in python ints)
+    total = np.asarray(interims, np.uint64).sum(axis=0, dtype=np.uint64)
+    digits = np.asarray(single, np.uint64)
+    rebuilt = digits[0] + (digits[1] << 16) + (digits[2] << 32)
+    np.testing.assert_array_equal(rebuilt, total)
+
+
+def test_single_tier_wraps_past_2_16_groups_sharded_is_exact():
+    """The >2^16-VG regression: the old single-tier combine either raises
+    (guarded) or silently wraps mod 2^32 in its 16-bit half-sums
+    (unguarded math); the sharded combine stays exact."""
+    import sys
+    qz = sys.modules["repro.core.quantize"]
+    from repro.core import secure_agg as sa_mod
+    G, size, bits = 1 << 17, 8, 20            # 131072 VGs of 2 clients
+    n = 2 * G
+    code = (1 << bits) - 1                    # every client at +clip
+    interims = jnp.full((G, size), 2 * code, jnp.uint32)
+
+    # guarded single-tier path refuses the plan
+    with pytest.raises(ValueError):
+        qz.check_master_headroom(G)
+    with pytest.raises(ValueError):
+        sa_mod.resolve_master_shards(G, sa_mod.SecureAggConfig(), 1)
+
+    # the raw single-tier math WOULD wrap: its uint32 lo half-sum is
+    # G * 0xFFFF-scale and exceeds 2^32 for G >= 2^17 at these codes
+    wrapped = qz.dequantize_interim_sum(interims, n, 1.0, bits)
+    assert not np.allclose(np.asarray(wrapped), 1.0, atol=1e-4)
+
+    # the hierarchical route is exact (auto shard count, and explicit)
+    for shards in [None, 4, 9]:
+        cfg = sa_mod.SecureAggConfig(bits=bits)
+        ns = sa_mod.resolve_master_shards(G, cfg, shards)
+        per = -(-G // ns)
+        states = jnp.stack([
+            qz.interim_limb_state(interims[s * per:(s + 1) * per])
+            for s in range(ns)])
+        mean = sa_mod.combine_limb_states(states, n, cfg)
+        np.testing.assert_allclose(np.asarray(mean), 1.0, atol=1e-5)
+
+
+def test_sharded_pipeline_bit_identical_across_shard_counts():
+    """aggregate_flat with explicit n_shards in {1..7} is bit-identical to
+    the default route AND to the serial reference, across ragged plans
+    and DP."""
+    rng = np.random.RandomState(11)
+    n = 19
+    updates = {f"c{i:03d}": jnp.asarray(
+        rng.uniform(-1.1, 1.1, 33).astype(np.float32)) for i in range(n)}
+    plan = make_virtual_groups(list(updates), 4, seed=3)   # ragged: merged
+    seed = jnp.asarray([5, 6], jnp.uint32)
+    key = jax.random.PRNGKey(2)
+    dcfg = dp_mod.DPConfig(mechanism="local", clip_norm=0.5,
+                           noise_multiplier=0.7)
+    scfg = sa.SecureAggConfig(bits=18)
+    serial = _secure_mean_serial(dict(sorted(updates.items())), plan, seed,
+                                 key, scfg, dcfg)
+    cids = sorted(updates)
+    flat = jnp.stack([updates[c] for c in cids])
+    ref = pe.aggregate_flat(flat, plan, cids, seed, secure_cfg=scfg,
+                            dp_cfg=dcfg, key=key)
+    np.testing.assert_array_equal(np.asarray(serial), np.asarray(ref))
+    for shards in range(1, 8):
+        out = pe.aggregate_flat(flat, plan, cids, seed, secure_cfg=scfg,
+                                dp_cfg=dcfg, key=key, n_shards=shards)
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+    # master_shards via config (the service-layer route) too
+    out = pe.aggregate_flat(flat, plan, cids, seed,
+                            secure_cfg=sa.SecureAggConfig(
+                                bits=18, master_shards=3),
+                            dp_cfg=dcfg, key=key)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+
+
+def test_serial_master_aggregate_sharded_matches_single_tier():
+    """The serial master's sharded route (list-of-interims entry) is
+    bit-identical to its single-tier form."""
+    rng = np.random.RandomState(4)
+    interims = [jnp.asarray(rng.randint(0, 1 << 20, 13, dtype=np.int64)
+                            .astype(np.uint32)) for _ in range(9)]
+    sizes = [4] * 9
+    unflatten = lambda x: x  # noqa: E731
+    ref = sa.master_aggregate(interims, sizes, unflatten)
+    for shards in [2, 3, 9]:
+        out = sa.master_aggregate(interims, sizes, unflatten,
+                                  n_shards=shards)
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+
+
+def test_full_pipeline_past_2_16_virtual_groups():
+    """Acceptance: a cohort with > 2^16 VGs aggregates exactly via the
+    sharded combine (the single-tier path rejects the same plan). Kept
+    cheap: tiny rows, vg_size 2, DP off."""
+    n_groups = (1 << 16) + 3
+    n = 2 * n_groups
+    size = 4
+    rng = np.random.RandomState(0)
+    base = rng.uniform(-0.9, 0.9, size).astype(np.float32)
+    flat = jnp.broadcast_to(jnp.asarray(base), (n, size))
+    cids = list(range(n))
+    plan = make_virtual_groups(cids, 2, seed=0)
+    assert len(plan.groups) > (1 << 16)
+    seed = jnp.asarray([9, 1], jnp.uint32)
+    with pytest.raises(ValueError):
+        pe.aggregate_flat(flat, plan, cids, seed, n_shards=1)
+    out = pe.aggregate_flat(flat, plan, cids, seed)
+    from repro.core.quantize import quantization_resolution
+    np.testing.assert_allclose(np.asarray(out), base,
+                               atol=2 * quantization_resolution())
+
+
+# ---------------------------------------------------------------------------
 # cost model consistency (ISSUE satellite 2) — deterministic sweep
 # ---------------------------------------------------------------------------
 
