@@ -1,17 +1,19 @@
 # Tier-1 verification (ROADMAP.md): full test suite, dev deps included so
 # the hypothesis property tests actually run (they importorskip otherwise),
 # plus tiny-scale bench smokes so the vectorized privacy pipeline
-# (serial/vectorized/kernels) and the fused async FedBuff path
-# (batched DP + device buffer + one-dispatch drain) are exercised end to end.
+# (serial/vectorized/kernels), the fused async FedBuff path
+# (batched DP + device buffer + one-dispatch drain), and the churn path
+# (dropout recovery) are exercised end to end.
 PY ?= python
 
 .PHONY: verify test deps docs-check bench-cohort bench-secureagg-smoke \
-	bench-async-smoke
+	bench-async-smoke bench-dropout-smoke
 
 deps:
 	$(PY) -m pip install -r requirements-dev.txt
 
-verify: deps test docs-check bench-secureagg-smoke bench-async-smoke
+verify: deps test docs-check bench-secureagg-smoke bench-async-smoke \
+	bench-dropout-smoke
 
 docs-check:
 	$(PY) tools/check_docs.py
@@ -27,3 +29,6 @@ bench-secureagg-smoke:
 
 bench-async-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.bench_async --quick
+
+bench-dropout-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.bench_dropout --quick

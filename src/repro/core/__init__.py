@@ -4,6 +4,8 @@ from repro.core.cohort_engine import (CohortEngine, LocalTrainSpec,
                                       make_local_update, serial_cohort,
                                       shard_cohort, vmap_cohort)
 from repro.core.dp import DPConfig, RdpAccountant, compute_rdp, get_privacy_spent
+from repro.core.dropout import (dropped_net_mask, net_mask_restricted,
+                                recover_interims)
 from repro.core.kdf import kdf_u32, mask_stream, pair_seed
 from repro.core.masking import apply_mask, modular_sum, net_mask
 from repro.core.orchestrator import (AsyncServer, ClientResult, RoundInfo,
@@ -25,7 +27,8 @@ from repro.core.quantize import (DEFAULT_BITS, DEFAULT_CLIP,
 from repro.core.secure_agg import (SecureAggConfig, client_protect,
                                    combine_limb_states, group_seed,
                                    master_aggregate, resolve_master_shards,
-                                   secure_aggregate_round, vg_aggregate)
+                                   secure_aggregate_round,
+                                   secure_aggregate_survivors, vg_aggregate)
 from repro.core.strategies import (DGA, STRATEGIES, FedAvg, FedBuff, FedProx,
                                    make_strategy)
 from repro.core.virtual_groups import (VGPlan, VirtualGroup,

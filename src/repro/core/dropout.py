@@ -1,0 +1,160 @@
+"""Dropout-tolerant secure aggregation: Bonawitz-style mask recovery.
+
+The pairwise-mask protocol (``repro.core.masking``) cancels only when every
+member of a virtual group submits: client i's payload carries signed mask
+terms for ALL of its g-1 peers, so a missing peer d leaves a non-cancelling
+residual in the group's wrapping sum. Concretely, with survivors S and
+dropped set D, the survivor sum is
+
+    sum_{i in S} y_i = sum_{i in S} q_i  -  sum_{d in D} M_d|S   (mod 2^32)
+
+where ``M_d|S = sum_{i in S} sign_d(i) * m_{(d,i)}`` is the net mask the
+dropped client d *would have contributed*, restricted to the surviving
+peers (``sign_d(i) = +1`` if d < i else -1, matching ``masking.net_mask``;
+the i-side terms flip sign, which is where the minus comes from). Recovery
+therefore reconstructs ``sum_d M_d|S`` from the round's ``kdf.pair_seed``
+expansions and ADDS it back, leaving the exact unmasked survivor sum —
+bit-identical to a clean round run over S only.
+
+Trust model (documented in docs/ARCHITECTURE.md): in Bonawitz et al. the
+pair secrets of dropped clients are recovered via Shamir secret shares held
+by the surviving peers, so no single party ever holds them all. Here the
+ORCHESTRATOR stands in for that key-recovery service — it already
+distributes ``round_seed`` (DESIGN.md §2 stands pair negotiation in with a
+keyed hash), so it can re-derive any pair seed directly. The algebra and
+cost profile are the paper-faithful parts; the key custody is simulated.
+
+Cost: recovery expands ``g-1`` pair masks per dropped client — O(|D| * g *
+size) work, independent of the number of groups and of the cohort size, so
+a round with few drops pays almost nothing (``benchmarks/bench_dropout.py``
+measures exactly this scaling). The whole cohort's reconstruction runs as
+ONE jitted batched call per group-size bucket (at most two, mirroring
+``privacy_engine``'s bucketing), with the dropped axis padded to a power of
+two so per-round |D| jitter does not recompile: pad rows carry an all-False
+survivor mask and therefore contribute exact uint32 zeros.
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kdf import U32, mask_stream, pair_seed
+from repro.core.secure_agg import group_seed
+
+
+def net_mask_restricted(idx, alive, vg_size: int, seed, size: int,
+                        offset: int = 0):
+    """Net mask of group member ``idx`` against the ALIVE peers only.
+
+    ``alive``: (vg_size,) bool — which members of the group survived (the
+    entry at ``idx`` itself is ignored). Traced-friendly; with ``alive``
+    all-True (minus self) this is exactly ``masking.net_mask_traced`` with
+    ``vg_id=0`` — the per-group-seed convention of the serial protocol."""
+    peers = jnp.arange(vg_size, dtype=U32)
+    i = jnp.asarray(idx, U32)
+
+    def one(peer, peer_alive):
+        lo = jnp.minimum(i, peer)
+        hi = jnp.maximum(i, peer)
+        m = mask_stream(pair_seed(seed, lo, hi), offset, size)
+        signed = jnp.where(i < peer, m, jnp.zeros((), U32) - m)
+        keep = peer_alive & (peer != i)
+        return jnp.where(keep, signed, jnp.zeros((), U32))
+
+    return jnp.sum(jax.vmap(one)(peers, jnp.asarray(alive, bool)),
+                   axis=0, dtype=U32)
+
+
+def dropped_net_mask(dropped_idxs, survivor_idxs, vg_size: int, seed,
+                     size: int, offset: int = 0):
+    """Serial reference: ``sum_{d in D} M_d|S`` for ONE virtual group.
+
+    Pure python loop over pairs — the oracle the batched path is
+    parity-tested against. Returns (size,) uint32; adding it to the
+    group's survivor sum recovers the exact unmasked survivor total."""
+    total = jnp.zeros((size,), U32)
+    for d in dropped_idxs:
+        for i in survivor_idxs:
+            lo, hi = min(d, i), max(d, i)
+            m = mask_stream(pair_seed(seed, lo, hi), offset, size)
+            total = total + (m if d < i else jnp.zeros((), U32) - m)
+    return total
+
+
+@partial(jax.jit, static_argnames=("vg_size", "size", "offset"))
+def _bucket_corrections(round_seed, d_idxs, d_vgs, d_alive, *,
+                        vg_size: int, size: int, offset: int = 0):
+    """One batched reconstruction for every dropped client of a bucket:
+    (n_d,) within-group indices + plan vg_ids + (n_d, vg_size) survivor
+    masks -> (n_d, size) uint32 corrections ``M_d|S``. Rows whose alive
+    mask is all-False (the pow2 padding) contribute exact zeros."""
+    seeds = jax.vmap(lambda v: group_seed(round_seed, v))(d_vgs)
+    return jax.vmap(
+        lambda d, s, a: net_mask_restricted(d, a, vg_size, s, size, offset)
+    )(d_idxs, seeds, d_alive)
+
+
+def _pad_pow2(k: int) -> int:
+    p = 1
+    while p < k:
+        p <<= 1
+    return p
+
+
+def recover_interims(interims, buckets, alive, round_seed, *,
+                     offset: int = 0, stats: dict | None = None):
+    """Repair a cohort's stacked per-VG interims after dropout.
+
+    ``interims``: (G, size) uint32 survivor-only wrapping group sums, rows
+    in bucket order (the layout ``privacy_engine._cohort_interims``
+    produces). ``buckets``: the plan's ``BucketSpec`` tuple against the
+    FULL cohort row order. ``alive``: (n_clients,) bool by stack row —
+    False rows are the dropped set D. Returns the corrected (G, size)
+    interims, each group's row now the exact unmasked sum of its survivor
+    codes (uint32 scatter-add wraps mod 2^32, as the algebra requires).
+
+    One jitted ``_bucket_corrections`` call per group-size bucket (<= 2),
+    dropped axis padded to a power of two; groups with no drops are
+    untouched and a fully-dropped group's row corrects to exact zero.
+    ``stats`` (optional dict) receives ``n_dropped`` and ``recovery_s``
+    (wall time of the reconstruction, device-synchronized)."""
+    alive = np.asarray(alive, bool)
+    size = interims.shape[1]
+    if stats is not None:
+        # the upstream cohort jit is dispatched async — sync on it first
+        # so recovery_s clocks the reconstruction alone (churn rounds
+        # already pay a host sync right after, at the limb combine)
+        jax.block_until_ready(interims)
+    t0 = time.perf_counter()
+    n_dropped = 0
+    row_off = 0
+    for b in buckets:
+        rows = np.asarray(b.rows, np.int64)
+        a = alive[rows].reshape(b.n_groups, b.g)
+        gj, di = np.nonzero(~a)              # bucket-group idx, member idx
+        if len(gj):
+            n_dropped += len(gj)
+            pad = _pad_pow2(len(gj))
+            d_idxs = np.zeros(pad, np.uint32)
+            d_idxs[:len(gj)] = di
+            d_vgs = np.zeros(pad, np.uint32)
+            d_vgs[:len(gj)] = np.asarray(b.vg_ids, np.uint32)[gj]
+            d_alive = np.zeros((pad, b.g), bool)
+            d_alive[:len(gj)] = a[gj]
+            corr = _bucket_corrections(
+                jnp.asarray(round_seed, U32), jnp.asarray(d_idxs),
+                jnp.asarray(d_vgs), jnp.asarray(d_alive),
+                vg_size=b.g, size=size, offset=offset)
+            target = np.zeros(pad, np.int32)  # pad rows add 0 to row 0
+            target[:len(gj)] = row_off + gj
+            interims = interims.at[jnp.asarray(target)].add(corr)
+        row_off += b.n_groups
+    if stats is not None:
+        jax.block_until_ready(interims)
+        stats["n_dropped"] = n_dropped
+        stats["recovery_s"] = time.perf_counter() - t0
+    return interims

@@ -25,6 +25,7 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import dp as dp_mod
 from repro.core import privacy_engine as pe
@@ -37,10 +38,15 @@ from repro.core.virtual_groups import make_virtual_groups
 @dataclass
 class RoundInfo:
     round_idx: int
-    n_participants: int
+    n_participants: int          # survivors actually aggregated (== |S|)
     n_groups: int
     metrics: dict = field(default_factory=dict)
     n_shards: int = 1   # stage-2 combine shards (hierarchical master)
+    # churn telemetry (paper §3.1.4 heterogeneity): selected cohort size,
+    # mid-round dropouts, and the mask-recovery wall time
+    n_selected: int = 0          # set to n_participants when nobody drops
+    n_dropped: int = 0
+    recovery_s: float = 0.0
 
 
 @dataclass
@@ -74,12 +80,32 @@ def _secure_mean_serial(updates_sorted: dict, plan, round_seed, key,
     return sa.secure_aggregate_round(updates, plan, round_seed, secure_cfg)
 
 
+def _secure_mean_survivors(updates_sorted: dict, plan, round_seed, key,
+                           secure_cfg, dp_cfg, fold_of: dict):
+    """Churn twin of :func:`_secure_mean_serial`: ``updates_sorted`` holds
+    only the survivors while ``plan`` covers the full selected cohort.
+    DP keys fold at ``fold_of[cid]`` — the client's SELECTION-TIME row in
+    the full sorted cohort, assigned before anyone dropped — so a
+    survivor's noised update is bit-identical whether or not its peers
+    survived (and matches the vectorized engine's row-indexed folds)."""
+    updates = {}
+    for cid, u in updates_sorted.items():
+        if dp_cfg.mechanism == "local":
+            u = dp_mod.local_dp(u, dp_cfg,
+                                jax.random.fold_in(key, fold_of[cid]))
+        elif dp_cfg.mechanism == "global":
+            u = dp_mod.clip_update(u, dp_cfg.clip_norm)
+        updates[cid] = u
+    return sa.secure_aggregate_survivors(updates, plan, round_seed,
+                                         secure_cfg)
+
+
 def run_sync_round(params, strategy, strategy_state,
                    client_results: dict,
                    *, round_idx: int, vg_size: int,
                    secure_cfg: sa.SecureAggConfig = sa.SecureAggConfig(),
                    dp_cfg: dp_mod.DPConfig = dp_mod.DPConfig(),
-                   key=None, round_seed=None):
+                   key=None, round_seed=None, cohort=None):
     """One synchronous FL round over a cohort of client results.
 
     ``secure_cfg.vectorized`` (default) runs the whole privacy pipeline —
@@ -88,24 +114,54 @@ def run_sync_round(params, strategy, strategy_state,
     per-client reference loop (bit-identical output, O(n) dispatches).
     Plans past 2^16 VGs (or with ``secure_cfg.master_shards`` set) take
     the hierarchical sharded stage-2 route on both paths — bit-identical
-    at any legal shard count."""
+    at any legal shard count.
+
+    ``cohort``: the FULL selected client list — pass it when some
+    selected clients dropped mid-round (``client_results`` then holds the
+    survivors only). The VG plan and the DP key-fold rows are built over
+    the full cohort (clients masked/noised before drops were known), the
+    dropped residual is recovered (``repro.core.dropout``), and the round
+    aggregates exactly the survivor mean — no abort, bit-identical to a
+    clean round over the survivors."""
     key, round_seed = _round_randomness(key, round_seed, round_idx)
 
     cids = sorted(client_results)
-    plan = make_virtual_groups(cids, vg_size, seed=round_idx)
+    protocol_order = sorted(cohort) if cohort is not None else cids
+    dropped = [c for c in protocol_order if c not in client_results]
+    if len(protocol_order) - len(dropped) != len(cids):
+        raise ValueError("client_results must be a subset of cohort")
+    plan = make_virtual_groups(protocol_order, vg_size, seed=round_idx)
     n_shards = sa.resolve_master_shards(len(plan.groups), secure_cfg)
+    stats: dict = {}
 
-    if secure_cfg.vectorized:
+    if not dropped:
+        if secure_cfg.vectorized:
+            flat, unflatten = pe.stack_flat_updates(
+                [client_results[c].update for c in cids])
+            delta = unflatten(pe.aggregate_flat(
+                flat, plan, cids, round_seed,
+                secure_cfg=secure_cfg, dp_cfg=dp_cfg, key=key,
+                n_shards=n_shards))
+        else:
+            delta = _secure_mean_serial(
+                {cid: client_results[cid].update for cid in cids}, plan,
+                round_seed, key, secure_cfg, dp_cfg)
+    elif secure_cfg.vectorized:
         flat, unflatten = pe.stack_flat_updates(
             [client_results[c].update for c in cids])
+        alive = np.asarray([c in client_results for c in protocol_order],
+                           bool)
+        full = jnp.zeros((len(protocol_order), flat.shape[1]), flat.dtype)
+        positions = jnp.asarray(np.nonzero(alive)[0], jnp.int32)
         delta = unflatten(pe.aggregate_flat(
-            flat, plan, cids, round_seed,
+            full.at[positions].set(flat), plan, protocol_order, round_seed,
             secure_cfg=secure_cfg, dp_cfg=dp_cfg, key=key,
-            n_shards=n_shards))
+            n_shards=n_shards, alive=alive, stats=stats))
     else:
-        delta = _secure_mean_serial(
+        fold_of = {cid: j for j, cid in enumerate(protocol_order)}
+        delta = _secure_mean_survivors(
             {cid: client_results[cid].update for cid in cids}, plan,
-            round_seed, key, secure_cfg, dp_cfg)
+            round_seed, key, secure_cfg, dp_cfg, fold_of)
 
     if dp_cfg.mechanism == "global":
         delta = dp_mod.global_dp(delta, dp_cfg, len(cids),
@@ -121,7 +177,10 @@ def run_sync_round(params, strategy, strategy_state,
 
     info = RoundInfo(round_idx, len(cids), len(plan.groups),
                      metrics=avg_metrics(client_results),
-                     n_shards=n_shards)
+                     n_shards=n_shards,
+                     n_selected=len(protocol_order),
+                     n_dropped=len(dropped),
+                     recovery_s=stats.get("recovery_s", 0.0))
     return params, strategy_state, info
 
 
@@ -131,14 +190,17 @@ def run_sync_round_stacked(params, strategy, strategy_state,
                            secure_cfg: sa.SecureAggConfig
                            = sa.SecureAggConfig(),
                            dp_cfg: dp_mod.DPConfig = dp_mod.DPConfig(),
-                           key=None, round_seed=None):
+                           key=None, round_seed=None, cohort=None):
     """Fused sync round: cohort updates arrive ALREADY STACKED (pytree
     leaves (n_clients, ...)) straight from ``CohortEngine.run_cohort_
     stacked`` — no unstack-to-host, no per-client dict round-trip. Produces
     the same round as :func:`run_sync_round` given the same cohort.
 
     ``metrics_list``: optional per-client metric dicts (input order) for
-    the round's RoundInfo."""
+    the round's RoundInfo. ``cohort``: the FULL selected client list when
+    ``client_ids``/``stacked_updates`` hold only the round's survivors —
+    the plan spans the full cohort and the dropped residual is recovered,
+    exactly as in :func:`run_sync_round`."""
     key, round_seed = _round_randomness(key, round_seed, round_idx)
     cids = list(client_ids)
     order = sorted(range(len(cids)), key=cids.__getitem__)
@@ -148,12 +210,19 @@ def run_sync_round_stacked(params, strategy, strategy_state,
         idx = jnp.asarray(order)
         stacked_updates = jax.tree.map(lambda a: a[idx], stacked_updates)
     cids_sorted = [cids[j] for j in order]
-    plan = make_virtual_groups(cids_sorted, vg_size, seed=round_idx)
+    protocol_order = sorted(cohort) if cohort is not None else cids_sorted
+    n_dropped = len(protocol_order) - len(cids_sorted)
+    cohort_set = set(protocol_order)
+    if n_dropped < 0 or any(c not in cohort_set for c in cids_sorted):
+        raise ValueError("client_ids must be a subset of cohort")
+    plan = make_virtual_groups(protocol_order, vg_size, seed=round_idx)
     n_shards = sa.resolve_master_shards(len(plan.groups), secure_cfg)
+    stats: dict = {}
 
-    delta = pe.aggregate_stacked(stacked_updates, plan, cids_sorted,
-                                 round_seed, secure_cfg=secure_cfg,
-                                 dp_cfg=dp_cfg, key=key)
+    delta = pe.aggregate_stacked(
+        stacked_updates, plan, cids_sorted, round_seed,
+        secure_cfg=secure_cfg, dp_cfg=dp_cfg, key=key,
+        cohort_order=protocol_order if n_dropped else None, stats=stats)
     if dp_cfg.mechanism == "global":
         delta = dp_mod.global_dp(delta, dp_cfg, len(cids),
                                  jax.random.fold_in(key, 10_000))
@@ -162,7 +231,9 @@ def run_sync_round_stacked(params, strategy, strategy_state,
     delta = strategy.combine([delta], [1.0], [metrics])
     params, strategy_state = strategy.apply(params, strategy_state, delta)
     info = RoundInfo(round_idx, len(cids), len(plan.groups), metrics=metrics,
-                     n_shards=n_shards)
+                     n_shards=n_shards,
+                     n_selected=len(protocol_order), n_dropped=n_dropped,
+                     recovery_s=stats.get("recovery_s", 0.0))
     return params, strategy_state, info
 
 

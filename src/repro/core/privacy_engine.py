@@ -35,8 +35,15 @@ the cohort's VGs split into disjoint pod shards, each folded to a canonical
 base-2^16 limb state inside the big jit (exact for < 2^16 VGs per shard),
 merged exactly across < 2^16 shards, then dequantized once — lifting the
 old single-tier 2^16-VG cap to ~2^32 VGs with bit-identical results at any
-shard count. (The pre-PR-2 master summed interims in raw uint32 and
-silently wrapped once bits + ceil(log2(total_cohort)) > 32.)
+shard count (``SecureAggConfig.limbs=4`` adds a 2^48 lane for plans past
+that). (The pre-PR-2 master summed interims in raw uint32 and silently
+wrapped once bits + ceil(log2(total_cohort)) > 32.)
+
+CHURN: ``aggregate_flat(alive=...)`` / ``aggregate_stacked(cohort_order=
+...)`` run the same pipeline when part of the selected cohort dropped
+mid-round — survivor-only group sums (payloads still carry FULL masks),
+one batched mask-recovery call (``repro.core.dropout``), then the shared
+combine over |S|. Bit-identical to a clean round over the survivors.
 """
 from __future__ import annotations
 
@@ -53,8 +60,9 @@ from repro.core import masking
 from repro.core import raveling
 from repro.core.kdf import U32
 from repro.core.quantize import check_headroom, quantize, shard_limb_states
-from repro.core.secure_agg import (SecureAggConfig, combine_limb_states,
-                                   group_seed, resolve_master_shards)
+from repro.core.secure_agg import (SecureAggConfig, _shard_limbs_jit,
+                                   combine_limb_states, group_seed,
+                                   resolve_master_shards)
 
 
 @dataclass(frozen=True)
@@ -97,22 +105,19 @@ def plan_buckets(plan, client_order) -> tuple:
     return tuple(buckets)
 
 
-@partial(jax.jit,
-         static_argnames=("bucket_shapes", "n_shards", "secure_cfg",
-                          "dp_cfg"))
-def _cohort_interims(flat, round_seed, key, rows_t, vgs_t, *,
-                     bucket_shapes, n_shards, secure_cfg, dp_cfg):
-    """The one compiled call: (n, size) f32 stacked updates -> exact
-    (n_shards, N_LIMBS, size) uint32 per-shard stage-2 limb states
-    (``quantize.interim_limb_state`` over disjoint VG shards, bucket
-    order; zero-row padding on the last shard is a no-op in the integer
-    sums).
+def _interims_body(flat, round_seed, key, rows_t, vgs_t, alive,
+                   bucket_shapes, secure_cfg, dp_cfg):
+    """Shared trace body: (n, size) f32 stacked updates -> (G, size)
+    uint32 per-VG wrapping sums, bucket order.
 
-    ``bucket_shapes``: tuple of (g, n_groups) per bucket — with
-    ``n_shards`` the only plan-dependent statics; the per-round
-    permutation (``rows_t`` row indices, ``vgs_t`` group ids) is traced,
-    so rounds with the same cohort/bucket geometry hit the jit cache even
-    though ``make_virtual_groups`` reshuffles clients every round."""
+    ``alive``: None (every row submits — the churn-free path compiles
+    with no extra ops) or a traced (n,) bool row mask: each SURVIVOR's
+    payload still carries its FULL net mask (clients masked before drops
+    were known), dropped rows are zeroed before the group sums, and the
+    caller repairs the non-cancelling residual via
+    ``dropout.recover_interims``. DP/quantize run on every row either
+    way, so a survivor's code — key-folded at its FULL-cohort row — is
+    bit-identical whether or not anyone else dropped."""
     n = flat.shape[0]
     flat = flat.astype(jnp.float32)
 
@@ -147,12 +152,48 @@ def _cohort_interims(flat, round_seed, key, rows_t, vgs_t, *,
             masked = ops.mask_apply_cohort(qb, idxs, gseeds, g)
         else:
             masked = masking.protect_cohort_grouped(qb, idxs, gseeds, g)
+        if alive is not None:
+            masked = jnp.where(alive[rows][:, None], masked,
+                               jnp.zeros((), U32))
         interims.append(masking.vg_sums(masked, g))         # (m, size)
-    stacked = jnp.concatenate(interims, axis=0)             # (G, size)
+    return jnp.concatenate(interims, axis=0)                # (G, size)
+
+
+@partial(jax.jit,
+         static_argnames=("bucket_shapes", "n_shards", "secure_cfg",
+                          "dp_cfg"))
+def _cohort_interims(flat, round_seed, key, rows_t, vgs_t, *,
+                     bucket_shapes, n_shards, secure_cfg, dp_cfg):
+    """The one compiled call: (n, size) f32 stacked updates -> exact
+    (n_shards, n_limbs, size) uint32 per-shard stage-2 limb states
+    (``quantize.interim_limb_state`` over disjoint VG shards, bucket
+    order; zero-row padding on the last shard is a no-op in the integer
+    sums).
+
+    ``bucket_shapes``: tuple of (g, n_groups) per bucket — with
+    ``n_shards`` the only plan-dependent statics; the per-round
+    permutation (``rows_t`` row indices, ``vgs_t`` group ids) is traced,
+    so rounds with the same cohort/bucket geometry hit the jit cache even
+    though ``make_virtual_groups`` reshuffles clients every round."""
+    stacked = _interims_body(flat, round_seed, key, rows_t, vgs_t, None,
+                             bucket_shapes, secure_cfg, dp_cfg)
     # pod-shard axis: fold each disjoint VG shard into its limb state
     # INSIDE this jit (tier 1, exact); the cross-shard merge + float tail
     # run in the shared executables outside (aggregate_flat).
-    return shard_limb_states(stacked, n_shards)
+    return shard_limb_states(stacked, n_shards, secure_cfg.limbs)
+
+
+@partial(jax.jit,
+         static_argnames=("bucket_shapes", "secure_cfg", "dp_cfg"))
+def _cohort_interims_churn(flat, round_seed, key, rows_t, vgs_t, alive, *,
+                           bucket_shapes, secure_cfg, dp_cfg):
+    """Churn twin of :func:`_cohort_interims`: survivor-only group sums
+    returned RAW (G, size) — mask recovery scatter-adds onto them before
+    the limb fold, so the fold runs outside this jit. ``alive`` is a
+    traced row mask; rounds that only differ in WHO dropped reuse the
+    executable."""
+    return _interims_body(flat, round_seed, key, rows_t, vgs_t, alive,
+                          bucket_shapes, secure_cfg, dp_cfg)
 
 
 @jax.jit
@@ -192,38 +233,89 @@ def _check_plan(buckets, secure_cfg, n_shards=None) -> int:
 def aggregate_flat(flat, plan, client_order, round_seed, *,
                    secure_cfg: SecureAggConfig = SecureAggConfig(),
                    dp_cfg: dp_mod.DPConfig = dp_mod.DPConfig(),
-                   key=None, n_shards=None):
+                   key=None, n_shards=None, alive=None, stats=None):
     """Full pipeline over pre-flattened rows -> (size,) f32 cohort mean.
 
     ``n_shards`` (or ``secure_cfg.master_shards``) shards the stage-2
     combine across per-pod limb-state accumulators — required past 2^16
-    VGs, bit-identical at any legal count (auto-resolved by default)."""
+    VGs, bit-identical at any legal count (auto-resolved by default).
+
+    ``alive``: optional (n,) host bool array — the churn path. False rows
+    are clients that were SELECTED into the plan (their peers' payloads
+    carry mask terms for them) but never submitted; their rows in ``flat``
+    are ignored (feed zeros). Survivor group sums are repaired by
+    ``dropout.recover_interims`` and the mean divides by |S| — the guards
+    and the dequantize retarget to the survivor count, and the result is
+    bit-identical to a clean round over the survivors (same DP key-fold
+    rows). ``stats``: optional dict, receives ``n_dropped``/``recovery_s``
+    from the recovery step."""
     buckets = plan_buckets(plan, client_order)
     n_shards = _check_plan(buckets, secure_cfg, n_shards)
     n = flat.shape[0]
     if key is None:
         key = jax.random.PRNGKey(0)
-    states = _cohort_interims(
-        jnp.asarray(flat), jnp.asarray(round_seed, U32), key,
-        tuple(jnp.asarray(b.rows, jnp.int32) for b in buckets),
-        tuple(jnp.asarray(b.vg_ids, U32) for b in buckets),
-        bucket_shapes=tuple((b.g, b.n_groups) for b in buckets),
-        n_shards=n_shards, secure_cfg=secure_cfg, dp_cfg=dp_cfg)
-    return combine_limb_states(states, n, secure_cfg)
+    round_seed = jnp.asarray(round_seed, U32)
+    rows_t = tuple(jnp.asarray(b.rows, jnp.int32) for b in buckets)
+    vgs_t = tuple(jnp.asarray(b.vg_ids, U32) for b in buckets)
+    bucket_shapes = tuple((b.g, b.n_groups) for b in buckets)
+    if alive is None:
+        states = _cohort_interims(
+            jnp.asarray(flat), round_seed, key, rows_t, vgs_t,
+            bucket_shapes=bucket_shapes, n_shards=n_shards,
+            secure_cfg=secure_cfg, dp_cfg=dp_cfg)
+        return combine_limb_states(states, n, secure_cfg)
+
+    from repro.core import dropout
+    alive = np.asarray(alive, bool)
+    n_survivors = int(alive.sum())
+    if alive.shape[0] != n:
+        raise ValueError(f"alive mask has {alive.shape[0]} rows for "
+                         f"{n} clients")
+    if n_survivors == 0:
+        raise ValueError("no survivors: every selected client dropped — "
+                         "nothing to aggregate")
+    interims = _cohort_interims_churn(
+        jnp.asarray(flat), round_seed, key, rows_t, vgs_t,
+        jnp.asarray(alive), bucket_shapes=bucket_shapes,
+        secure_cfg=secure_cfg, dp_cfg=dp_cfg)
+    interims = dropout.recover_interims(interims, buckets, alive,
+                                        round_seed, stats=stats)
+    states = _shard_limbs_jit(interims, n_shards, secure_cfg.limbs)
+    return combine_limb_states(states, n_survivors, secure_cfg)
 
 
 def aggregate_stacked(stacked_updates, plan, client_order, round_seed, *,
                       secure_cfg: SecureAggConfig = SecureAggConfig(),
                       dp_cfg: dp_mod.DPConfig = dp_mod.DPConfig(),
-                      key=None):
+                      key=None, cohort_order=None, stats=None):
     """Fused entry: consume a CohortEngine's already-stacked cohort output
     (leaves (n, ...)) directly — no unstack-to-host, no per-client dicts.
-    Returns the cohort-mean update pytree."""
+    Returns the cohort-mean update pytree.
+
+    ``cohort_order``: the churn path — the FULL selected cohort in
+    protocol (row) order, a superset of ``client_order`` (the survivors
+    whose rows ``stacked_updates`` holds). Survivor rows scatter into
+    their full-cohort positions (zeros at dropped rows, which the alive
+    mask excludes), so each survivor keeps the DP key-fold of its
+    selection-time row and the recovered mean is bit-identical to a clean
+    round over the survivors."""
     flat = ravel_rows(stacked_updates)
     template = jax.tree.map(lambda a: a[0], stacked_updates)
     _, unflatten = raveling.cached_unflatten(template)
+    alive = None
+    if cohort_order is not None and list(cohort_order) != list(client_order):
+        cohort_order = list(cohort_order)
+        pos_of = {cid: j for j, cid in enumerate(cohort_order)}
+        positions = jnp.asarray([pos_of[c] for c in client_order],
+                                jnp.int32)
+        full = jnp.zeros((len(cohort_order), flat.shape[1]), flat.dtype)
+        flat = full.at[positions].set(flat)
+        alive = np.zeros(len(cohort_order), bool)
+        alive[np.asarray(positions)] = True
+        client_order = cohort_order
     mean_flat = aggregate_flat(flat, plan, client_order, round_seed,
-                               secure_cfg=secure_cfg, dp_cfg=dp_cfg, key=key)
+                               secure_cfg=secure_cfg, dp_cfg=dp_cfg,
+                               key=key, alive=alive, stats=stats)
     return unflatten(mean_flat)
 
 

@@ -74,10 +74,11 @@ def dequantize_sum(q_sum, n, clip=DEFAULT_CLIP, bits=DEFAULT_BITS):
 # The master's job is the EXACT integer total of all per-VG interim sums.
 # A naive uint32 total wraps once bits + ceil(log2(total_cohort)) > 32, so
 # the combine instead carries a LIMB STATE: the canonical base-2^16 digits
-# of the running total, held in three uint32 lanes
+# of the running total, held in ``n_limbs`` uint32 lanes (default 3):
 #
-#     value = limbs[0] + limbs[1] * 2^16 + limbs[2] * 2^32
-#     limbs[0], limbs[1] in [0, 2^16);  limbs[2] <= 2^16 per shard
+#     value = limbs[0] + limbs[1] * 2^16 + limbs[2] * 2^32 [+ limbs[3] * 2^48]
+#     limbs[0], limbs[1] in [0, 2^16);  limbs[2] <= 2^16 per shard (3-limb)
+#     limbs[0..2] in [0, 2^16), limbs[3] the open top lane (4-limb)
 #
 # Tier 1 (per pod / per shard): ``interim_limb_state`` folds a shard of
 # < 2^16 interims into one limb state — each 16-bit half-sum stays below
@@ -86,6 +87,14 @@ def dequantize_sum(q_sum, n, clip=DEFAULT_CLIP, bits=DEFAULT_BITS):
 # per-limb in uint32 and carry-normalizes (``check_shard_headroom``) —
 # exact again, lifting the overall exact bound from 2^16 VGs total to
 # 2^16 per shard x 2^16 shards (~2^32 VGs).
+#
+# The 3-limb state caps the representable total at < 2^48-ish (the top
+# lane holds the 2^32 digit); planetary plans past ~2^32 VGs overflow the
+# VALUE even though each tier's arithmetic is exact. ``n_limbs=4``
+# (``SecureAggConfig.limbs``) adds a 2^48 lane, making the representable
+# total < 2^64 — headroom for > 2^32 virtual groups. Within the 3-limb
+# bound the two variants are bit-identical: the first three canonical
+# digits agree exactly and the 4th is zero (parity-tested).
 #
 # Because the canonical digits of a sum do not depend on how its terms are
 # sharded, EVERY shard count (including 1 = the single-tier path) yields
@@ -96,7 +105,7 @@ def dequantize_sum(q_sum, n, clip=DEFAULT_CLIP, bits=DEFAULT_BITS):
 MAX_MASTER_GROUPS = 1 << 16     # tier-1 bound: VGs per shard
 MAX_MASTER_SHARDS = 1 << 16     # tier-2 bound: shards per merge
 LIMB_BITS = 16
-N_LIMBS = 3
+N_LIMBS = 3                     # default lanes; 4 buys > 2^32-VG headroom
 _LIMB_MASK = 0xFFFF
 
 
@@ -130,28 +139,35 @@ def min_master_shards(n_groups: int) -> int:
     return -(-max(1, n_groups) // (MAX_MASTER_GROUPS - 1))
 
 
-def interim_limb_state(interims):
-    """Tier-1 fold: (m, *shape) uint32 exact per-VG sums -> (N_LIMBS,
+def interim_limb_state(interims, n_limbs: int = N_LIMBS):
+    """Tier-1 fold: (m, *shape) uint32 exact per-VG sums -> (n_limbs,
     *shape) uint32 canonical base-2^16 digits of the shard total.
 
     Precondition: m < 2^16 (:func:`check_master_headroom`) — the lo/hi
     half-sums then stay below 2^32 and the digits are exact. Integer-only,
     so any compilation (inside the cohort jit, under shard_map, per pod)
     produces identical bits; wrapping-add associativity makes the result
-    independent of row order within the shard."""
+    independent of row order within the shard. ``n_limbs=4`` carries the
+    2^48 lane too (``SecureAggConfig.limbs`` — headroom past ~2^32 VGs);
+    the first three digits are identical to the 3-limb state whenever the
+    total fits it."""
+    if n_limbs not in (3, 4):
+        raise ValueError(f"n_limbs must be 3 or 4, got {n_limbs}")
     interims = interims.astype(U32)
     lo = jnp.sum(interims & U32(_LIMB_MASK), axis=0, dtype=U32)
     hi = jnp.sum(interims >> U32(LIMB_BITS), axis=0, dtype=U32)
     l0 = lo & U32(_LIMB_MASK)
     t1 = (lo >> U32(LIMB_BITS)) + (hi & U32(_LIMB_MASK))
     l1 = t1 & U32(_LIMB_MASK)
-    l2 = (t1 >> U32(LIMB_BITS)) + (hi >> U32(LIMB_BITS))
-    return jnp.stack([l0, l1, l2])
+    t2 = (t1 >> U32(LIMB_BITS)) + (hi >> U32(LIMB_BITS))
+    if n_limbs == 3:
+        return jnp.stack([l0, l1, t2])
+    return jnp.stack([l0, l1, t2 & U32(_LIMB_MASK), t2 >> U32(LIMB_BITS)])
 
 
-def shard_limb_states(interims, n_shards: int):
+def shard_limb_states(interims, n_shards: int, n_limbs: int = N_LIMBS):
     """Split the VG axis into ``n_shards`` disjoint shards and fold each:
-    (m, *shape) uint32 -> (n_shards, N_LIMBS, *shape) per-shard states.
+    (m, *shape) uint32 -> (n_shards, n_limbs, *shape) per-shard states.
 
     The ONE sharding implementation every route uses (serial master,
     vectorized engine, fl_step, benches) so edge semantics stay uniform:
@@ -166,27 +182,32 @@ def shard_limb_states(interims, n_shards: int):
         interims = jnp.concatenate(
             [interims,
              jnp.zeros((per * n_shards - m, *interims.shape[1:]), U32)])
-    return jax.vmap(interim_limb_state)(
+    return jax.vmap(lambda s: interim_limb_state(s, n_limbs))(
         interims.reshape(n_shards, per, *interims.shape[1:]))
 
 
 def carry_normalize(limb_sums):
     """Per-limb uint32 sums of canonical limb states -> the canonical limb
-    state of the total (schoolbook carry propagation). Exact while each
-    input lane stays below 2^32 — guaranteed for < 2^16 summed states
+    state of the total (schoolbook carry propagation, any lane count; the
+    top lane keeps its overflow). Exact while each input lane stays below
+    2^32 — guaranteed for < 2^16 summed states
     (:func:`check_shard_headroom`). The cross-pod ``psum``-merge in
     ``launch/fl_step.py`` lands here after its integer collective."""
     s = limb_sums.astype(U32)
-    l0 = s[0] & U32(_LIMB_MASK)
-    t1 = s[1] + (s[0] >> U32(LIMB_BITS))
-    l1 = t1 & U32(_LIMB_MASK)
-    l2 = s[2] + (t1 >> U32(LIMB_BITS))
-    return jnp.stack([l0, l1, l2])
+    lanes, carry = [], None
+    for j in range(s.shape[0]):
+        t = s[j] if carry is None else s[j] + carry
+        if j < s.shape[0] - 1:
+            lanes.append(t & U32(_LIMB_MASK))
+            carry = t >> U32(LIMB_BITS)
+        else:
+            lanes.append(t)
+    return jnp.stack(lanes)
 
 
 def merge_limb_states(states):
-    """Tier-2 merge: (p, N_LIMBS, *shape) uint32 per-shard limb states ->
-    (N_LIMBS, *shape) canonical state of the grand total.
+    """Tier-2 merge: (p, n_limbs, *shape) uint32 per-shard limb states ->
+    (n_limbs, *shape) canonical state of the grand total.
 
     Precondition: p < 2^16 (:func:`check_shard_headroom`). Exact and
     shard-layout-independent: merging any partition of the same interims
@@ -197,7 +218,7 @@ def merge_limb_states(states):
 
 def dequantize_limb_state(limbs, n, clip=DEFAULT_CLIP, bits=DEFAULT_BITS):
     """The ONLY float stage of the master combine: canonical limb state ->
-    f32 cohort MEAN update.
+    f32 cohort MEAN update (3- or 4-lane states, shape-dispatched).
 
     ``n``: total cohort size (clients, not groups). The integer digits are
     exact on entry; this conversion rounds to f32 resolution exactly once.
@@ -209,6 +230,10 @@ def dequantize_limb_state(limbs, n, clip=DEFAULT_CLIP, bits=DEFAULT_BITS):
     total = (limbs[2].astype(jnp.float32) * jnp.float32(4294967296.0)
              + limbs[1].astype(jnp.float32) * jnp.float32(65536.0)
              + limbs[0].astype(jnp.float32))
+    if limbs.shape[0] == 4:
+        # 2^48 lane last, so a zero top lane adds +0.0 to the 3-limb chain
+        # (exact for the non-negative totals digits encode)
+        total = total + limbs[3].astype(jnp.float32) * jnp.float32(2.0 ** 48)
     mean_code = total / jnp.float32(n)
     return (mean_code / levels(bits)) * (2.0 * clip) - clip
 

@@ -44,6 +44,10 @@ class SecureAggConfig:
                                 # accumulators); 0 = auto: 1 shard while the
                                 # plan fits the single-tier bound, else the
                                 # smallest exact shard count
+    limbs: int = 3              # stage-2 limb lanes: 3 (default, exact to
+                                # ~2^32 VGs) or 4 (adds the 2^48 lane —
+                                # headroom for > 2^32-VG plans; bit-identical
+                                # to 3 within the 3-limb bound)
 
 
 def flatten_update(update_pytree):
@@ -87,7 +91,7 @@ def vg_aggregate(payloads):
 # FMA-contracts the dequantize mul/sub chain), so it is jitted ONCE here
 # and shared by the serial reference, the vectorized engine, and every
 # sharded route — that is what keeps the final floats bit-identical.
-_shard_limbs_jit = jax.jit(shard_limb_states, static_argnums=(1,))
+_shard_limbs_jit = jax.jit(shard_limb_states, static_argnums=(1, 2))
 _merge_jit = jax.jit(merge_limb_states)
 _finalize_jit = jax.jit(dequantize_limb_state, static_argnums=(1, 2, 3))
 
@@ -143,7 +147,7 @@ def master_aggregate(interims, group_sizes, unflatten,
     m = len(group_sizes)
     n_shards = resolve_master_shards(m, cfg, n_shards)
     stacked = jnp.stack([i.astype(U32) for i in interims])
-    states = _shard_limbs_jit(stacked, n_shards)
+    states = _shard_limbs_jit(stacked, n_shards, cfg.limbs)
     mean_flat = combine_limb_states(states, n, cfg)
     return unflatten(mean_flat)
 
@@ -168,6 +172,53 @@ def secure_aggregate_round(client_updates, vg_plan, round_seed,
             payloads.append(payload)
         interims.append(vg_aggregate(payloads))
         sizes.append(len(group.members))
+    return master_aggregate(interims, sizes, unflatten, cfg)
+
+
+def secure_aggregate_survivors(client_updates, vg_plan, round_seed,
+                               cfg: SecureAggConfig = SecureAggConfig()):
+    """Serial dropout-tolerant protocol round (the churn twin of
+    :func:`secure_aggregate_round`, and the vectorized engine's parity
+    oracle for it).
+
+    ``client_updates`` holds ONLY the survivors; ``vg_plan`` covers the
+    FULL selected cohort — missing members are the dropped set D. Each
+    survivor uploads the payload it built BEFORE drops were known (full
+    net mask over all g-1 peers, original within-group index), so a
+    group's wrapping survivor sum keeps the non-cancelling residual
+    ``-sum_{d in D} M_d|S``; ``dropout.dropped_net_mask`` reconstructs it
+    from the round's pair seeds and adds it back, leaving the exact
+    unmasked survivor sum. Groups with no survivors contribute nothing;
+    the master combine and its guards retarget to the survivor counts
+    (the mean divides by |S|). Bit-identical to a clean
+    ``secure_aggregate_round`` over the survivors alone — for ANY clean
+    regrouping of S, since the stage-2 limb digits are layout-independent
+    and every float stage is the same shared jitted executable."""
+    from repro.core import dropout
+    interims, sizes, unflatten = [], [], None
+    for group in vg_plan.groups:
+        g = len(group.members)
+        seed = _group_seed(round_seed, group.vg_id)
+        payloads, surv_idx, drop_idx = [], [], []
+        for idx, cid in enumerate(group.members):
+            if cid in client_updates:
+                payload, unflatten = client_protect(
+                    client_updates[cid], idx, g, seed, cfg)
+                payloads.append(payload)
+                surv_idx.append(idx)
+            else:
+                drop_idx.append(idx)
+        if not payloads:
+            continue                      # whole VG dropped
+        interim = vg_aggregate(payloads)
+        if drop_idx:
+            interim = interim + dropout.dropped_net_mask(
+                drop_idx, surv_idx, g, seed, interim.shape[0])
+        interims.append(interim)
+        sizes.append(len(surv_idx))
+    if unflatten is None:
+        raise ValueError("no survivors: every selected client dropped — "
+                         "nothing to aggregate")
     return master_aggregate(interims, sizes, unflatten, cfg)
 
 

@@ -4,6 +4,9 @@ from repro.fl.auth import AttestationAuthority, AuthenticationService
 from repro.fl.client import (ConsoleLogger, FederatedLearningClient,
                              NullLogger, WorkflowDetails,
                              load_model_snapshot)
+from repro.fl.population import (DEFAULT_TIERS, DeviceProfile, DeviceTier,
+                                 PopulationConfig, make_population_clients,
+                                 population_summary, sample_population)
 from repro.fl.selection import SelectionService
 from repro.fl.server import ManagementService
 from repro.fl.simulator import (SimClient, SimResult,

@@ -45,6 +45,16 @@ def render_task_view(svc, task_id: int) -> str:
     if eps is not None:
         lines.append(f"  privacy spent: epsilon={eps:.2f} "
                      f"at delta={c.dp.delta}")
+    churn = svc.metrics.churn_summary(task_id)
+    if churn["dropped"] or churn["rounds_voided"] \
+            or c.overprovision > 1.0:
+        lines.append(
+            f"  churn: selected={churn['selected']} "
+            f"survived={churn['survived']} dropped={churn['dropped']} "
+            f"({churn['dropout_rate']:.1%}) "
+            f"recovery={churn['recovery_s'] * 1e3:.1f}ms"
+            + (f" voided_rounds={churn['rounds_voided']}"
+               if churn["rounds_voided"] else ""))
     if t.history:
         lines.append("  round history:")
         for h in t.history[-8:]:

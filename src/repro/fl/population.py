@@ -1,0 +1,157 @@
+"""Heterogeneous device-population model (paper §1/§3.1.4, §5).
+
+Project Florida targets "heterogeneous device types ... exhibiting a wide
+variety of performance characteristics": phones that train at very
+different speeds, come and go with charger/wifi availability windows, and
+disconnect mid-round. The simulator's original log-normal speed jitter
+(``SimClient.duration``) models only the first axis; this module is the
+full population model that drives the churn subsystem:
+
+- **compute tiers** — a seeded categorical mix of device classes (flagship
+  / mid-range / budget by default), each a speed multiplier band;
+- **availability windows** — a per-device periodic duty cycle (phase,
+  period, duty fraction) standing in for charging/idle/unmetered-network
+  eligibility (the §3.1.4 selection criteria a device can only meet part
+  of the day);
+- **dropout hazard** — a per-device Poisson disconnect rate: the chance a
+  client that STARTED a round vanishes before uploading is
+  ``1 - exp(-hazard * train_time)``.
+
+Everything is derived deterministically from ``(seed, client index)``, so
+two simulations with the same config sample the same population.
+``sample_population`` + ``make_population_clients`` plug straight into the
+simulator; ``fl/selection.py`` consumes availability at selection time and
+the dropout machinery (``repro.core.dropout``) absorbs mid-round losses.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DeviceTier:
+    """One device class: sampled with probability ``weight`` (normalized
+    across the mix); speed drawn log-normally around ``speed``."""
+    name: str
+    speed: float          # median relative compute speed (1.0 = nominal)
+    weight: float         # unnormalized mix probability
+    speed_sigma: float = 0.2   # log-normal spread within the tier
+
+
+# A phone-fleet-flavoured default mix: a few fast flagships, a mid-range
+# bulk, and a long budget tail (the paper's Fig. 11 heterogeneity shape).
+DEFAULT_TIERS = (
+    DeviceTier("flagship", speed=2.0, weight=0.2),
+    DeviceTier("midrange", speed=1.0, weight=0.5),
+    DeviceTier("budget", speed=0.4, weight=0.3),
+)
+
+
+@dataclass(frozen=True)
+class DeviceProfile:
+    """One sampled device. All randomness routed through caller RNGs so
+    profiles stay immutable / hashable."""
+    client_id: str
+    tier: str
+    speed: float                 # relative compute speed (higher = faster)
+    base_train_s: float          # nominal seconds per local update
+    dropout_hazard: float        # disconnects per second of training
+    avail_offset: float          # availability window phase (seconds)
+    avail_period: float          # window period (seconds)
+    avail_duty: float            # fraction of the period the device is up
+
+    def available_at(self, t: float) -> bool:
+        """Is the device eligible (charging/idle/unmetered) at clock t?"""
+        if self.avail_duty >= 1.0:
+            return True
+        phase = math.fmod(t + self.avail_offset, self.avail_period)
+        return phase < self.avail_duty * self.avail_period
+
+    def drop_probability(self, duration: float) -> float:
+        """P(disconnect before uploading | trains for ``duration`` s)."""
+        if self.dropout_hazard <= 0.0:
+            return 0.0
+        return 1.0 - math.exp(-self.dropout_hazard * duration)
+
+    def drops_during(self, duration: float, rng) -> bool:
+        return bool(rng.rand() < self.drop_probability(duration))
+
+
+@dataclass(frozen=True)
+class PopulationConfig:
+    """Knobs of :func:`sample_population`. ``mean_hazard`` is the fleet
+    mean disconnect rate (exponential across devices — most are stable,
+    a few are flaky); ``avail_duty``/``avail_period`` shape the windows
+    (duty 1.0 = always available)."""
+    tiers: tuple = DEFAULT_TIERS
+    base_train_s: float = 1.0
+    mean_hazard: float = 0.0          # 1/s; 0 = nobody disconnects
+    avail_period: float = 24.0        # "a day" in virtual seconds
+    avail_duty: float = 1.0           # fraction of the period online
+    duty_jitter: float = 0.0          # +- uniform jitter on the duty
+
+
+def sample_population(n: int, seed: int = 0,
+                      cfg: PopulationConfig = PopulationConfig()
+                      ) -> list[DeviceProfile]:
+    """Sample ``n`` device profiles, deterministically from ``seed``."""
+    rng = np.random.RandomState(seed)
+    weights = np.asarray([t.weight for t in cfg.tiers], np.float64)
+    weights = weights / weights.sum()
+    profiles = []
+    for i in range(n):
+        tier = cfg.tiers[int(rng.choice(len(cfg.tiers), p=weights))]
+        speed = float(tier.speed *
+                      rng.lognormal(mean=0.0, sigma=tier.speed_sigma))
+        hazard = float(rng.exponential(cfg.mean_hazard)) \
+            if cfg.mean_hazard > 0 else 0.0
+        duty = float(np.clip(
+            cfg.avail_duty + rng.uniform(-cfg.duty_jitter, cfg.duty_jitter),
+            0.05, 1.0))
+        profiles.append(DeviceProfile(
+            client_id=f"client-{i:04d}",
+            tier=tier.name,
+            speed=speed,
+            base_train_s=cfg.base_train_s,
+            dropout_hazard=hazard,
+            avail_offset=float(rng.uniform(0.0, cfg.avail_period)),
+            avail_period=cfg.avail_period,
+            avail_duty=duty,
+        ))
+    return profiles
+
+
+def make_population_clients(profiles, trainer_factory=None):
+    """Profiles -> ``{client_id: SimClient}`` for the simulator.
+
+    ``trainer_factory(i)``: per-client trainer callables (may be None when
+    a CohortEngine supplies client data — the fused simulator path)."""
+    from repro.fl.simulator import SimClient
+    clients = {}
+    for i, p in enumerate(profiles):
+        trainer = trainer_factory(i) if trainer_factory is not None else None
+        clients[p.client_id] = SimClient(
+            p.client_id, trainer, speed=p.speed,
+            base_train_s=p.base_train_s, profile=p,
+            device_info={"os": "linux", "n_samples": 100, "battery": 1.0,
+                         "tier": p.tier})
+    return clients
+
+
+def population_summary(profiles) -> dict:
+    """Aggregate stats for logs/docs: tier mix, speed range, hazard mean."""
+    tiers: dict = {}
+    for p in profiles:
+        tiers[p.tier] = tiers.get(p.tier, 0) + 1
+    speeds = [p.speed for p in profiles]
+    return {
+        "n": len(profiles),
+        "tiers": tiers,
+        "speed_min": min(speeds),
+        "speed_max": max(speeds),
+        "mean_hazard": sum(p.dropout_hazard for p in profiles)
+        / max(1, len(profiles)),
+    }

@@ -1,8 +1,20 @@
 """Selection Service (paper §3.1.4): advertises tasks, registers clients
 that meet the criteria, randomly selects the round cohort, and tracks
-per-participant training status."""
+per-participant training status.
+
+Churn-aware since the dropout subsystem: cohorts can be OVER-PROVISIONED
+(select more than ``clients_per_round`` so the survivor set still hits the
+target under expected dropout), carry a round DEADLINE (stragglers past it
+are dropped, not waited for), and BACKFILL replacements for members found
+unavailable before training starts. Lifecycle: ``registered -> selected ->
+training -> done | dropped``, and ``reset_round`` releases selected/done
+AND dropped members back to the registered pool — a device that
+disconnected mid-round re-registers next round, exactly like a device that
+finished (the pre-fix code kept ``dropped`` sticky forever, so churned
+devices leaked out of the pool and ``ready()`` over-counted them)."""
 from __future__ import annotations
 
+import math
 import random
 from dataclasses import dataclass, field
 
@@ -23,6 +35,8 @@ class SelectionService:
         self._rng = random.Random(seed)
         # task_id -> {client_id -> Registration}
         self._registrations: dict = {}
+        # task_id -> deadline (seconds) of the current round, if any
+        self._deadlines: dict = {}
 
     # -- client side -------------------------------------------------------
     def advertise(self, tasks: list[TaskRecord], app_name: str,
@@ -47,35 +61,86 @@ class SelectionService:
 
     # -- server side -------------------------------------------------------
     def registered(self, task: TaskRecord) -> list[str]:
+        """Every client the task knows about, regardless of round status."""
         return sorted(self._registrations.get(task.task_id, {}))
 
-    def ready(self, task: TaskRecord) -> bool:
-        return len(self.registered(task)) >= task.config.clients_per_round
+    def available(self, task: TaskRecord) -> list[str]:
+        """The selectable pool: clients currently in status 'registered'
+        (not mid-round, not dropped-this-round)."""
+        return sorted(cid for cid, reg in
+                      self._registrations.get(task.task_id, {}).items()
+                      if reg.status == "registered")
 
-    def select_cohort(self, task: TaskRecord) -> list[str]:
-        """Random subset of registered participants, evenly spreading load."""
-        pool = self.registered(task)
-        k = min(task.config.clients_per_round, len(pool))
+    def ready(self, task: TaskRecord) -> bool:
+        return len(self.available(task)) >= task.config.clients_per_round
+
+    def select_cohort(self, task: TaskRecord, overprovision: float = 1.0,
+                      deadline: float | None = None,
+                      available=None) -> list[str]:
+        """Random cohort from the selectable pool, evenly spreading load.
+
+        ``overprovision``: select ``ceil(clients_per_round *
+        overprovision)`` members (>= 1.0) so the round still reaches its
+        target cohort under expected dropout — the deadline-based churn
+        posture. ``deadline``: recorded for the round (stragglers past it
+        get dropped by the caller; see :meth:`round_deadline`).
+        ``available``: optional ``cid -> bool`` predicate (device
+        availability windows at selection time)."""
+        pool = self.available(task)
+        if available is not None:
+            pool = [cid for cid in pool if available(cid)]
+        target = max(1, math.ceil(task.config.clients_per_round
+                                  * max(1.0, overprovision)))
+        k = min(target, len(pool))
         cohort = self._rng.sample(pool, k)
         regs = self._registrations[task.task_id]
         for cid in cohort:
             regs[cid].status = "selected"
+        self._deadlines[task.task_id] = deadline
         return sorted(cohort)
+
+    def backfill(self, task: TaskRecord, n: int, available=None) -> list:
+        """Draw up to ``n`` replacement members from the selectable pool
+        (mid-lifecycle top-up for cohort members found unavailable before
+        training started). Marks them 'selected'; returns the new ids."""
+        pool = self.available(task)
+        if available is not None:
+            pool = [cid for cid in pool if available(cid)]
+        picks = self._rng.sample(pool, min(n, len(pool)))
+        regs = self._registrations[task.task_id]
+        for cid in picks:
+            regs[cid].status = "selected"
+        return sorted(picks)
+
+    def round_deadline(self, task: TaskRecord):
+        """Deadline recorded by the current round's ``select_cohort``."""
+        return self._deadlines.get(task.task_id)
 
     def mark(self, task: TaskRecord, client_id: str, status: str):
         self._registrations[task.task_id][client_id].status = status
 
+    def release(self, task: TaskRecord, client_id: str):
+        """Return a member to the selectable pool without it counting as a
+        round dropout (selection-time unavailability, pre-training)."""
+        self.mark(task, client_id, "registered")
+
     def reset_round(self, task: TaskRecord):
-        """Start-of-round lifecycle reset: participants still 'selected'
-        or 'done' from the previous round return to the registered pool
-        (without this, cohort members stayed 'selected' forever)."""
+        """Start-of-round lifecycle reset: participants still 'selected',
+        'done' — or 'dropped', the churn fix — from the previous round
+        return to the registered pool. (Without this, cohort members
+        stayed 'selected' forever and dropped devices could never
+        re-register for later rounds.)"""
         for reg in self._registrations.get(task.task_id, {}).values():
-            if reg.status in ("selected", "done"):
+            if reg.status in ("selected", "done", "dropped"):
                 reg.status = "registered"
+        self._deadlines.pop(task.task_id, None)
 
     def statuses(self, task: TaskRecord) -> dict:
         return {cid: reg.status for cid, reg in
                 self._registrations.get(task.task_id, {}).items()}
 
     def drop(self, task: TaskRecord, client_id: str):
+        """Mid-round dropout: the member leaves the round (its group's
+        masks get recovered server-side) but re-enters the pool at the
+        next ``reset_round``."""
         self.mark(task, client_id, "dropped")

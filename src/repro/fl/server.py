@@ -29,14 +29,29 @@ class PermissionError_(Exception):
     pass
 
 
+def _churn_metrics(info) -> dict:
+    """Per-round churn telemetry from a RoundInfo: selection/survival/
+    dropout counts always, mask-recovery wall time when anyone dropped."""
+    out = {"n_selected": info.n_selected, "n_survived": info.n_participants,
+           "n_dropped": info.n_dropped}
+    if info.n_dropped:
+        out["recovery_s"] = info.recovery_s
+    return out
+
+
 @dataclass
 class _RoundCollector:
     round_idx: int
     cohort: list
     results: dict = field(default_factory=dict)
+    dropped: set = field(default_factory=set)
 
     def complete(self):
-        return set(self.results) >= set(self.cohort)
+        """Every cohort member accounted for — submitted OR dropped. A
+        straggling VG no longer blocks the round: once the stragglers are
+        reported dropped, aggregation proceeds over the survivors with
+        mask recovery."""
+        return set(self.results) | self.dropped >= set(self.cohort)
 
 
 class ManagementService:
@@ -148,7 +163,8 @@ class ManagementService:
                 self._finish_round(rec, {"n": server.strategy.buffer_size})
             return stepped
         coll = self._collectors.get(task_id)
-        if coll is None or client_id not in coll.cohort:
+        if coll is None or client_id not in coll.cohort \
+                or client_id in coll.dropped:
             return False
         coll.results[client_id] = result
         self.selection.mark(rec, client_id, "done")   # lifecycle: submitted
@@ -156,6 +172,66 @@ class ManagementService:
             self._run_sync_aggregation(rec, coll)
             return True
         return False
+
+    def report_dropout(self, task_id: int, client_id: str) -> bool:
+        """A selected client disconnected (or blew the round deadline)
+        mid-round. Its virtual group's pairwise masks no longer cancel;
+        the round proceeds anyway — aggregation runs over the survivors
+        with the dropped residual recovered (``repro.core.dropout``).
+        Returns True if this report CLOSED the round: aggregated over the
+        survivors, or voided it (every member dropped — the round index is
+        not consumed and the next ``begin_round`` re-selects)."""
+        rec = self._tasks[task_id]
+        coll = self._collectors.get(task_id)
+        if coll is None or client_id not in coll.cohort \
+                or client_id in coll.dropped or client_id in coll.results:
+            return False
+        coll.dropped.add(client_id)
+        self.selection.drop(rec, client_id)
+        if coll.complete():
+            if coll.results:
+                self._run_sync_aggregation(rec, coll)
+            else:
+                # every member dropped: void the round (no survivors to
+                # aggregate); dropped members re-enter the pool at the
+                # next begin_round
+                self._collectors.pop(task_id, None)
+                self.metrics.log(rec.task_id, rec.round_idx, round_voided=1,
+                                 n_selected=len(coll.cohort), n_survived=0,
+                                 n_dropped=len(coll.dropped))
+            return True
+        return False
+
+    def backfill_round(self, task_id: int, unavailable, available=None
+                       ) -> list:
+        """Pre-training cohort repair: ``unavailable`` members (selected
+        but outside their availability window before training started)
+        are RELEASED — they never entered the protocol, so no masks to
+        recover and no dropout on their record — and replacements are
+        drawn from the pool, topping the cohort back up toward its
+        selection target. Returns the repaired cohort list. Must run
+        before any member submits (the VG plan spans the final cohort)."""
+        rec = self._tasks[task_id]
+        coll = self._collectors.get(task_id)
+        if coll is None:
+            return []
+        if coll.results or coll.dropped:
+            raise ValueError("backfill_round must run before training "
+                             "starts (submissions or dropouts already "
+                             "recorded)")
+        unavailable = [c for c in unavailable if c in coll.cohort]
+        released = set(unavailable)
+        for cid in unavailable:
+            self.selection.release(rec, cid)
+        cohort = [c for c in coll.cohort if c not in released]
+        # the released members are back in the pool but must not be drawn
+        # straight back into the cohort they were just removed from
+        refill = self.selection.backfill(
+            rec, len(coll.cohort) - len(cohort),
+            available=lambda cid: cid not in released
+            and (available is None or available(cid)))
+        coll.cohort = sorted(cohort + refill)
+        return list(coll.cohort)
 
     def submit_cohort(self, task_id: int, client_ids, stacked_updates,
                       n_samples: int, metrics_list=None) -> bool:
@@ -169,14 +245,20 @@ class ManagementService:
         ``n_samples`` (per client) is telemetry only: the secure aggregate
         is the privacy-preserving UNIFORM mean on both the bulk and
         per-client paths (sample-weighting would leak per-client counts
-        through the aggregate)."""
+        through the aggregate).
+
+        With churn, ``client_ids``/``stacked_updates`` hold the round's
+        SURVIVORS; every other cohort member must already be reported via
+        :meth:`report_dropout` — the VG plan spans the full cohort and the
+        dropped residual is recovered."""
         rec = self._tasks[task_id]
         if rec.status is not TaskStatus.RUNNING or rec.config.mode == "async":
             return False
         coll = self._collectors.get(task_id)
         cids = list(client_ids)
         if coll is None or len(set(cids)) != len(cids) \
-                or set(cids) != set(coll.cohort):
+                or set(cids) != set(coll.cohort) - coll.dropped \
+                or not cids:
             return False
         strategy = self._strategies[task_id]
         state = self._strategy_state[task_id]
@@ -184,7 +266,8 @@ class ManagementService:
         rec.model, state, info = run_sync_round_stacked(
             rec.model, strategy, state, cids, stacked_updates, metrics_list,
             round_idx=coll.round_idx, vg_size=rec.config.vg_size,
-            secure_cfg=rec.config.secure_agg, dp_cfg=rec.config.dp)
+            secure_cfg=rec.config.secure_agg, dp_cfg=rec.config.dp,
+            cohort=list(coll.cohort) if coll.dropped else None)
         self._strategy_state[task_id] = state
         for cid in cids:
             self.selection.mark(rec, cid, "done")
@@ -195,7 +278,8 @@ class ManagementService:
         self._finish_round(rec, dict(info.metrics, n=info.n_participants,
                                      n_groups=info.n_groups,
                                      n_shards=info.n_shards,
-                                     n_samples_per_client=n_samples))
+                                     n_samples_per_client=n_samples,
+                                     **_churn_metrics(info)))
         return True
 
     def submit_updates_async(self, task_id: int, client_ids,
@@ -264,13 +348,20 @@ class ManagementService:
     # orchestration
     # ------------------------------------------------------------------
 
-    def begin_round(self, task_id: int):
-        """Select the cohort for the next round. -> (round_idx, cohort)."""
+    def begin_round(self, task_id: int, available=None):
+        """Select the cohort for the next round -> (round_idx, cohort).
+
+        Over-provisions by ``config.overprovision`` and records
+        ``config.round_timeout_s`` as the round deadline; ``available`` is
+        an optional ``cid -> bool`` availability predicate (device windows
+        at selection time)."""
         rec = self._tasks[task_id]
         if rec.status is not TaskStatus.RUNNING:
             return rec.round_idx, []
-        self.selection.reset_round(rec)   # last round's selected/done
-        cohort = self.selection.select_cohort(rec)
+        self.selection.reset_round(rec)   # last round's selected/done/dropped
+        cohort = self.selection.select_cohort(
+            rec, overprovision=rec.config.overprovision,
+            deadline=rec.config.round_timeout_s, available=available)
         self._collectors[task_id] = _RoundCollector(rec.round_idx, cohort)
         return rec.round_idx, cohort
 
@@ -280,12 +371,18 @@ class ManagementService:
         rec.model, state, info = run_sync_round(
             rec.model, strategy, state, coll.results,
             round_idx=coll.round_idx, vg_size=rec.config.vg_size,
-            secure_cfg=rec.config.secure_agg, dp_cfg=rec.config.dp)
+            secure_cfg=rec.config.secure_agg, dp_cfg=rec.config.dp,
+            cohort=list(coll.cohort) if coll.dropped else None)
         self._strategy_state[rec.task_id] = state
+        # the round is closed — drop the collector so a straggling retry
+        # (a late duplicate submit after a dropout report completed the
+        # round) cannot re-trigger the aggregation
+        self._collectors.pop(rec.task_id, None)
         rec.round_idx += 1
         self._finish_round(rec, dict(info.metrics, n=info.n_participants,
                                      n_groups=info.n_groups,
-                                     n_shards=info.n_shards))
+                                     n_shards=info.n_shards,
+                                     **_churn_metrics(info)))
 
     def _finish_round(self, rec: TaskRecord, metrics: dict):
         rec.history.append({"round": rec.round_idx, **metrics})
@@ -294,11 +391,14 @@ class ManagementService:
         if acc is not None:
             pool = max(1, len(self.selection.registered(rec)))
             # mode-correct sample rate: an async server step composes over
-            # the buffer_size clients that filled the FedBuff buffer, not
-            # the sync path's clients_per_round (which async never selects)
+            # the buffer_size clients that filled the FedBuff buffer; a
+            # sync round over the clients whose data actually entered the
+            # aggregate — the REALIZED participation ("n" = survivors),
+            # not clients_per_round, which over-provisioned cohorts exceed
+            # (using the config target would under-report epsilon)
             per_step = (rec.config.buffer_size
                         if rec.config.mode == "async"
-                        else rec.config.clients_per_round)
+                        else metrics.get("n", rec.config.clients_per_round))
             acc.q = min(1.0, per_step / pool)
             acc.step()
         if rec.round_idx >= rec.config.n_rounds:

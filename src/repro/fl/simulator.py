@@ -50,11 +50,21 @@ class SimClient:
     base_train_s: float = 1.0           # nominal seconds per local update
     device_info: dict = field(default_factory=lambda: {
         "os": "linux", "n_samples": 100, "battery": 1.0})
+    profile: object = None              # optional population.DeviceProfile —
+                                        # availability windows + dropout
+                                        # hazard (enables the churn path)
 
     def duration(self, rng) -> float:
         # log-normal jitter around base/speed: heterogeneous device model
         return float(self.base_train_s / self.speed *
                      rng.lognormal(mean=0.0, sigma=0.25))
+
+    def available_at(self, t: float) -> bool:
+        return self.profile is None or self.profile.available_at(t)
+
+    def drops_during(self, duration: float, rng) -> bool:
+        return self.profile is not None and \
+            self.profile.drops_during(duration, rng)
 
 
 @dataclass
@@ -63,6 +73,7 @@ class SimResult:
     metrics_history: list
     total_time: float
     n_server_steps: int
+    n_dropped_total: int = 0      # churn runs: mid-round dropouts, all rounds
 
 
 def _register_all(service, task_id, clients):
@@ -77,17 +88,30 @@ def run_sync_simulation(service: ManagementService, task_id: int,
                         clients: dict[str, SimClient],
                         server_agg_s: float = 0.05, seed: int = 0,
                         eval_fn: Callable | None = None,
-                        engine=None) -> SimResult:
+                        engine=None, churn: bool | None = None) -> SimResult:
     """Drive a sync task to completion under the virtual clock.
 
     ``engine``: optional CohortEngine — executes each round's whole cohort
     in one vmapped call (engine.batch_fn supplies client data; SimClient
     trainers are bypassed). Virtual-clock timing is unchanged: wall time
     still models per-client device speed, not host compute.
+
+    ``churn``: run rounds under realistic device churn — availability
+    windows filter + backfill the cohort before training, per-client
+    dropout hazards and the ``round_timeout_s`` deadline drop members
+    mid-round, and aggregation proceeds over the survivors with mask
+    recovery (``repro.core.dropout``). Defaults to auto: on iff any client
+    carries a ``population.DeviceProfile`` or the task over-provisions.
     """
     rng = np.random.RandomState(seed)
     task = service.get_task(task_id)
     _register_all(service, task_id, clients)
+    if churn is None:
+        churn = any(sc.profile is not None for sc in clients.values()) \
+            or task.config.overprovision > 1.0
+    if churn:
+        return _run_sync_churn(service, task_id, clients, rng,
+                               server_agg_s, eval_fn, engine)
 
     durations, history, clock = [], [], 0.0
     while task.status.value == "running":
@@ -136,6 +160,111 @@ def run_sync_simulation(service: ManagementService, task_id: int,
                                 round_duration_s=round_wall)
         history.append(row)
     return SimResult(durations, history, clock, len(durations))
+
+
+def _run_sync_churn(service, task_id, clients, rng, server_agg_s,
+                    eval_fn, engine) -> SimResult:
+    """Sync rounds under device churn (the paper's cross-device reality):
+
+    1. over-provisioned selection from the STALE registry
+       (``TaskConfig.overprovision``; the Selection Service cannot know
+       live device state);
+    2. availability windows are probed when the round starts — members
+       outside theirs are released and backfilled (pre-protocol, no masks
+       involved); an instant with nobody reachable idles one deadline and
+       re-selects;
+    3. every member draws a train duration; members past the
+       ``round_timeout_s`` deadline or hit by their dropout hazard are
+       reported dropped — the server declares dropouts AT the deadline,
+       so any dropout costs the round the full deadline wall time;
+    4. the survivors' aggregate runs with mask recovery — no abort.
+    """
+    from repro.checkpoint import deserialize_pytree
+    task = service.get_task(task_id)
+    deadline = task.config.round_timeout_s
+    durations, history, clock, dropped_total = [], [], 0.0, 0
+    voided, steps, idle = 0, 0, 0
+    if engine is not None and engine.template is None:
+        raise ValueError("CohortEngine.template must be the model pytree "
+                         "structure to use the simulator fast path")
+    while task.status.value == "running":
+        # selection sees the (stale) registry, not live device state —
+        # availability is probed when the round actually starts, and
+        # members found outside their window are released + backfilled
+        round_idx, cohort = service.begin_round(task_id)
+        if cohort:
+            unavailable = [c for c in cohort
+                           if not clients[c].available_at(clock)]
+            if unavailable:
+                cohort = service.backfill_round(
+                    task_id, unavailable,
+                    available=lambda cid: clients[cid].available_at(clock))
+        if not cohort:
+            # nobody reachable at this instant: idle one deadline and try
+            # again when availability windows have moved (bounded — a
+            # fleet that is NEVER available ends the run)
+            clock += deadline
+            idle += 1
+            if idle >= 64:
+                break
+            continue
+        idle = 0
+        dur = {cid: clients[cid].duration(rng) for cid in cohort}
+        dropped = {cid for cid in cohort
+                   if dur[cid] > deadline
+                   or clients[cid].drops_during(min(dur[cid], deadline),
+                                                rng)}
+        survivors = [cid for cid in cohort if cid not in dropped]
+        dropped_total += len(dropped)
+        for cid in sorted(dropped):
+            service.report_dropout(task_id, cid)
+        if not survivors:
+            # round voided server-side: the deadline wall time still burns
+            # but NO aggregation step ran (no server_agg_s, no step count)
+            clock += deadline
+            durations.append(deadline)
+            history.append({"round_voided": 1})
+            voided += 1
+            if voided >= 64:      # hazard so high no round can complete
+                break
+            continue
+        voided = 0
+        blob = service.model_snapshot(task_id)
+        if engine is not None:
+            params = deserialize_pytree(blob, like=engine.template)
+            stacked, losses, n_samples = engine.run_cohort_stacked(
+                params, survivors, round_idx)
+            losses = np.asarray(losses)
+            if not service.submit_cohort(
+                    task_id, survivors, stacked, n_samples,
+                    [{"loss": float(l)} for l in losses]):
+                raise RuntimeError(
+                    f"bulk survivor submission rejected for round "
+                    f"{round_idx} (survivors {survivors})")
+        else:
+            for cid in survivors:
+                sc = clients[cid]
+                out = sc.trainer(blob, round_idx)
+                update, n_samples, metrics = _normalize_trainer_output(out)
+                service.submit_update(task_id, cid, update, n_samples,
+                                      metrics)
+        round_wall = (deadline if dropped
+                      else max(dur[cid] for cid in survivors))
+        round_wall += server_agg_s
+        clock += round_wall
+        durations.append(round_wall)
+        steps += 1
+        row = dict(task.history[-1]) if task.history else {}
+        if eval_fn is not None:
+            row["eval_accuracy"] = float(eval_fn(task.model))
+            service.metrics.log(task_id, round_idx + 1,
+                                eval_accuracy=row["eval_accuracy"],
+                                round_duration_s=round_wall)
+        history.append(row)
+    # n_server_steps counts ROUNDS THAT AGGREGATED — voided rounds appear
+    # in durations/history (their wall time is real) but not here
+    return SimResult(durations, history, clock, steps,
+                     n_dropped_total=dropped_total)
 
 
 class _SnapshotStore:

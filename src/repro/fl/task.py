@@ -61,7 +61,12 @@ class TaskConfig:
     dp: DPConfig = field(default_factory=DPConfig)
     selection: SelectionCriteria = field(default_factory=SelectionCriteria)
     eval_interval: int = 1
-    round_timeout_s: float = 600.0
+    round_timeout_s: float = 600.0          # sync round deadline: stragglers
+                                            # past it are dropped + recovered,
+                                            # not waited for
+    overprovision: float = 1.0              # select ceil(cpr * this) clients
+                                            # so the survivor set still hits
+                                            # the target under churn
     permissions: tuple = ()                 # user ids allowed to manage
     owner: str = "default-user"
 

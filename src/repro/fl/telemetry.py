@@ -27,5 +27,28 @@ class MetricsStore:
         _, vals = self.series(task_id, metric)
         return vals[-1] if vals else default
 
+    def churn_summary(self, task_id: int) -> dict:
+        """Aggregate the per-round churn telemetry the sync server logs
+        (``n_selected`` / ``n_survived`` / ``n_dropped`` / ``recovery_s``
+        plus ``round_voided`` for all-dropped rounds) into fleet-health
+        numbers for the dashboard: totals, the realized dropout rate, and
+        the cumulative mask-recovery time."""
+        _, selected = self.series(task_id, "n_selected")
+        _, survived = self.series(task_id, "n_survived")
+        _, dropped = self.series(task_id, "n_dropped")
+        _, recovery = self.series(task_id, "recovery_s")
+        _, voided = self.series(task_id, "round_voided")
+        total_sel = int(sum(selected))
+        return {
+            "rounds": len(selected),
+            "selected": total_sel,
+            "survived": int(sum(survived)),
+            "dropped": int(sum(dropped)),
+            "dropout_rate": (float(sum(dropped)) / total_sel
+                             if total_sel else 0.0),
+            "recovery_s": float(sum(recovery)),
+            "rounds_voided": int(sum(voided)),
+        }
+
     def to_json(self, task_id: int) -> str:
         return json.dumps(self._rows[task_id])

@@ -1,0 +1,103 @@
+"""Hypothesis property (the churn ISSUE acceptance criterion): for random
+VG plans, dropped subsets D (possibly empty, possibly whole groups, down
+to a single survivor), bits, update sizes, and DP modes, the recovered
+survivor aggregate — on BOTH the serial survivor protocol and the
+vectorized churn engine — is bit-identical to the maskless clean reference
+over the survivors alone, with every survivor's DP key folded at its
+full-cohort row."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import dp as dp_mod
+from repro.core import privacy_engine as pe
+from repro.core import secure_agg as sa
+from repro.core.orchestrator import _secure_mean_survivors
+from repro.core.virtual_groups import make_virtual_groups
+
+from test_churn import clean_survivor_reference
+
+
+@settings(deadline=None, max_examples=40)
+@given(n=st.integers(2, 18), vg_size=st.integers(2, 6),
+       bits=st.integers(10, 24), size=st.integers(1, 60),
+       mech=st.sampled_from(["off", "local", "global"]),
+       noise=st.sampled_from([0.0, 0.8]),
+       drop_bits=st.integers(0, (1 << 18) - 1),
+       seed=st.integers(0, 10_000))
+def test_recovered_aggregate_bit_identical(n, vg_size, bits, size, mech,
+                                           noise, drop_bits, seed):
+    rng = np.random.RandomState(seed)
+    updates = {f"c{i:03d}": jnp.asarray(
+        rng.uniform(-1.2, 1.2, size).astype(np.float32)) for i in range(n)}
+    cohort = sorted(updates)
+    plan = make_virtual_groups(cohort, vg_size, seed=seed)
+    # dropped set from the bitmask; force >= 1 survivor
+    dropped = {cohort[j] for j in range(n) if (drop_bits >> j) & 1}
+    if len(dropped) == n:
+        dropped.discard(cohort[seed % n])
+    survivors = [c for c in cohort if c not in dropped]
+    round_seed = jnp.asarray(rng.randint(0, 2**31, 2), jnp.uint32)
+    key = jax.random.PRNGKey(seed)
+    scfg = sa.SecureAggConfig(bits=bits)
+    dcfg = dp_mod.DPConfig(mechanism=mech, clip_norm=0.5,
+                           noise_multiplier=noise)
+
+    ref = clean_survivor_reference(updates, cohort, plan, dropped, key,
+                                   scfg, dcfg)
+
+    fold_of = {c: j for j, c in enumerate(cohort)}
+    serial = _secure_mean_survivors({c: updates[c] for c in survivors},
+                                    plan, round_seed, key, scfg, dcfg,
+                                    fold_of)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(serial))
+
+    alive = np.asarray([c not in dropped for c in cohort])
+    flat = jnp.stack([updates[c] if alive[j]
+                      else jnp.zeros(size, jnp.float32)
+                      for j, c in enumerate(cohort)])
+    stats = {}
+    vect = pe.aggregate_flat(flat, plan, cohort, round_seed,
+                             secure_cfg=scfg, dp_cfg=dcfg, key=key,
+                             alive=alive, stats=stats)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(vect))
+    assert stats["n_dropped"] == len(dropped)
+
+
+@settings(deadline=None, max_examples=15)
+@given(n=st.integers(3, 14), vg_size=st.integers(2, 5),
+       drop_bits=st.integers(1, (1 << 14) - 1), seed=st.integers(0, 1000))
+def test_residual_never_cancels_silently(n, vg_size, drop_bits, seed):
+    """Complement of the parity property: whenever a group with >= 2
+    survivors loses a member, the UNRECOVERED survivor sum differs from
+    the clean survivor sum (the residual mask is non-zero) — i.e. the
+    recovery step is doing real work, not a no-op."""
+    rng = np.random.RandomState(seed)
+    cohort = [f"c{i:03d}" for i in range(n)]
+    plan = make_virtual_groups(cohort, vg_size, seed=seed)
+    dropped = {cohort[j] for j in range(n) if (drop_bits >> j) & 1}
+    scfg = sa.SecureAggConfig()
+    rs = jnp.asarray([seed, seed ^ 977], jnp.uint32)
+    size = 8
+    for grp in plan.groups:
+        g = len(grp.members)
+        surv = [i for i, c in enumerate(grp.members) if c not in dropped]
+        drop = [i for i in range(g) if i not in surv]
+        if not drop or len(surv) < 2:
+            continue
+        gseed = sa.group_seed(rs, grp.vg_id)
+        qs = [jnp.full(size, 7 * (i + 1), jnp.uint32) for i in range(g)]
+        from repro.core.masking import apply_mask
+        payloads = [apply_mask(qs[i], i, g, gseed) for i in range(g)]
+        clean = sum(np.asarray(qs[i], np.uint64) for i in surv) % (1 << 32)
+        naive = sum(np.asarray(payloads[i], np.uint64)
+                    for i in surv) % (1 << 32)
+        assert not np.array_equal(naive, clean)
+        from repro.core.dropout import dropped_net_mask
+        corr = dropped_net_mask(drop, surv, g, gseed, size)
+        fixed = (naive + np.asarray(corr, np.uint64)) % (1 << 32)
+        np.testing.assert_array_equal(fixed, clean)

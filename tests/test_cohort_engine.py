@@ -89,6 +89,36 @@ def test_sync_simulation_engine_fast_path_parity(world, engine):
     assert _max_err(run(False), run(True)) < 1e-5
 
 
+def test_sync_churn_engine_fast_path_parity(world, engine):
+    """Churn rounds (over-provisioned cohort, hazard dropouts, deadline,
+    mask recovery) through the engine's fused survivor path produce the
+    same model as the serial-trainer churn loop — and both experience the
+    SAME dropouts (the virtual-clock draws are path-independent)."""
+    from repro.fl import (PopulationConfig, make_population_clients,
+                          sample_population)
+    pop = sample_population(8, seed=5,
+                            cfg=PopulationConfig(mean_hazard=0.3))
+
+    def run(use_engine):
+        svc = ManagementService()
+        tid = svc.create_task(
+            TaskConfig("spam", "app", "wf", clients_per_round=4, n_rounds=2,
+                       vg_size=2, overprovision=1.5, round_timeout_s=4.0),
+            world.model0)
+        clients = make_population_clients(
+            pop, lambda i: engine.make_trainer(f"client-{i:04d}"))
+        res = run_sync_simulation(svc, tid, clients, seed=2,
+                                  engine=engine if use_engine else None)
+        return svc.get_task(tid).model, res
+
+    m_serial, r_serial = run(False)
+    m_engine, r_engine = run(True)
+    assert r_serial.n_dropped_total == r_engine.n_dropped_total >= 1
+    np.testing.assert_allclose(r_engine.round_durations,
+                               r_serial.round_durations, atol=1e-9)
+    assert _max_err(m_serial, m_engine) < 1e-5
+
+
 def test_async_simulation_engine_fast_path_parity(world, engine):
     def run(use_engine):
         svc = ManagementService()

@@ -213,6 +213,89 @@ def test_full_pipeline_past_2_16_virtual_groups():
 
 
 # ---------------------------------------------------------------------------
+# 4-limb stage-2 variant (churn-ISSUE satellite; ROADMAP >2^32-VG headroom)
+# ---------------------------------------------------------------------------
+
+class TestFourLimb:
+    def test_limb_state_variants_bit_parity_within_bound(self):
+        """Within the 3-limb representable bound the 4-limb state carries
+        the SAME canonical digits (plus a zero top lane), and the float
+        tail dequantizes bit-identically."""
+        import sys
+        qz = sys.modules["repro.core.quantize"]
+        rng = np.random.RandomState(3)
+        interims = jnp.asarray(rng.randint(
+            0, 1 << 32, (77, 11), dtype=np.uint64).astype(np.uint32))
+        for shards in (1, 3, 8):
+            s3 = qz.shard_limb_states(interims, shards, 3)
+            s4 = qz.shard_limb_states(interims, shards, 4)
+            m3 = qz.merge_limb_states(s3)
+            m4 = qz.merge_limb_states(s4)
+            np.testing.assert_array_equal(np.asarray(m4[:2]),
+                                          np.asarray(m3[:2]))
+            # 3-limb top lane == canonical l2 + l3 recombined
+            np.testing.assert_array_equal(
+                np.asarray(m3[2], np.uint64),
+                np.asarray(m4[2], np.uint64)
+                + (np.asarray(m4[3], np.uint64) << 16))
+            f3 = sa._finalize_jit(m3, 616, 1.0, 20)
+            f4 = sa._finalize_jit(m4, 616, 1.0, 20)
+            np.testing.assert_array_equal(np.asarray(f3), np.asarray(f4))
+
+    def test_limb_digits_exact_against_python_ints(self):
+        import sys
+        qz = sys.modules["repro.core.quantize"]
+        rng = np.random.RandomState(4)
+        interims = jnp.asarray(rng.randint(
+            0, 1 << 32, (40, 6), dtype=np.uint64).astype(np.uint32))
+        m4 = qz.merge_limb_states(qz.shard_limb_states(interims, 5, 4))
+        d = np.asarray(m4, np.uint64)
+        rebuilt = d[0] + (d[1] << 16) + (d[2] << 32) + (d[3] << 48)
+        np.testing.assert_array_equal(
+            rebuilt, np.asarray(interims, np.uint64).sum(axis=0))
+
+    def test_pipeline_with_limbs_4_bit_identical(self):
+        """SecureAggConfig(limbs=4) routes the whole engine through the
+        4-lane states and still matches the serial 3-limb reference."""
+        rng = np.random.RandomState(6)
+        updates = {f"c{i:03d}": jnp.asarray(
+            rng.uniform(-1.1, 1.1, 31).astype(np.float32))
+            for i in range(14)}
+        plan = make_virtual_groups(list(updates), 4, seed=2)
+        seed = jnp.asarray([8, 1], jnp.uint32)
+        key = jax.random.PRNGKey(3)
+        dcfg = dp_mod.DPConfig(mechanism="local", clip_norm=0.5,
+                               noise_multiplier=0.6)
+        serial = _secure_mean_serial(
+            dict(sorted(updates.items())), plan, seed, key,
+            sa.SecureAggConfig(), dcfg)
+        cids = sorted(updates)
+        flat = jnp.stack([updates[c] for c in cids])
+        for shards in (None, 3):
+            out = pe.aggregate_flat(
+                flat, plan, cids, seed,
+                secure_cfg=sa.SecureAggConfig(limbs=4), dp_cfg=dcfg,
+                key=key, n_shards=shards)
+            np.testing.assert_array_equal(np.asarray(serial),
+                                          np.asarray(out))
+
+    def test_serial_master_with_limbs_4(self):
+        rng = np.random.RandomState(5)
+        interims = [jnp.asarray(rng.randint(0, 1 << 20, 9, dtype=np.int64)
+                                .astype(np.uint32)) for _ in range(7)]
+        ref = sa.master_aggregate(interims, [4] * 7, lambda x: x)
+        out = sa.master_aggregate(interims, [4] * 7, lambda x: x,
+                                  sa.SecureAggConfig(limbs=4))
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+
+    def test_invalid_limb_count_rejected(self):
+        import sys
+        qz = sys.modules["repro.core.quantize"]
+        with pytest.raises(ValueError, match="n_limbs"):
+            qz.interim_limb_state(jnp.zeros((3, 4), jnp.uint32), 5)
+
+
+# ---------------------------------------------------------------------------
 # cost model consistency (ISSUE satellite 2) — deterministic sweep
 # ---------------------------------------------------------------------------
 
