@@ -7,13 +7,13 @@
 PY ?= python
 
 .PHONY: verify test deps docs-check bench-cohort bench-secureagg-smoke \
-	bench-async-smoke bench-dropout-smoke
+	bench-async-smoke bench-dropout-smoke bench-multitask-smoke
 
 deps:
 	$(PY) -m pip install -r requirements-dev.txt
 
 verify: deps test docs-check bench-secureagg-smoke bench-async-smoke \
-	bench-dropout-smoke
+	bench-dropout-smoke bench-multitask-smoke
 
 docs-check:
 	$(PY) tools/check_docs.py
@@ -32,3 +32,6 @@ bench-async-smoke:
 
 bench-dropout-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.bench_dropout --quick
+
+bench-multitask-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.bench_multitask --quick

@@ -143,5 +143,8 @@ if __name__ == "__main__":
     ap.add_argument("--quick", action="store_true",
                     help="tiny shapes — the CI / make-verify smoke run")
     args = ap.parse_args()
-    for r in main(quick=args.quick):
+    rows = main(quick=args.quick)
+    for r in rows:
         print(",".join(str(x) for x in r))
+    from benchmarks.common import write_bench_json
+    print(f"# wrote {write_bench_json('async', rows, quick=args.quick)}")

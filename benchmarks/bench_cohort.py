@@ -111,5 +111,13 @@ def main(quick=False):
 
 
 if __name__ == "__main__":
-    for r in main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny shapes — the CI / make-verify smoke run")
+    args = ap.parse_args()
+    rows = main(quick=args.quick)
+    for r in rows:
         print(",".join(str(x) for x in r))
+    from benchmarks.common import write_bench_json
+    print(f"# wrote {write_bench_json('cohort', rows, quick=args.quick)}")

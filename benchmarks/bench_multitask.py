@@ -1,0 +1,107 @@
+"""Multi-tenant control plane: what scheduling many tasks over ONE fleet
+costs, and whether the fairness policy actually shares it.
+
+Measured (the control-plane ISSUE acceptance):
+
+1. **Throughput** — N concurrent tasks (mixed sync/async) over one shared
+   device population, driven by the ControlPlane's deficit-weighted
+   round-robin: total rounds completed, virtual makespan, and real wall
+   time (the scheduler + directory bookkeeping overhead per round —
+   trainers are trivial so the control plane IS the cost).
+2. **Fairness** — the spread of weight-normalized lease-seconds across
+   the sync tasks: a working policy keeps max/min close to 1 even when
+   the tasks' weights differ.
+3. **Safety** — the directory's lease-interval audit must report zero
+   overlapping sync leases (asserted, not just reported).
+
+Run: ``PYTHONPATH=src python -m benchmarks.bench_multitask [--quick]``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.fl import ControlPlane, TaskConfig
+from repro.fl.simulator import (make_heterogeneous_clients,
+                                run_multi_task_simulation)
+
+
+def _trainer_factory(i):
+    def trainer(blob, round_idx):
+        return {"w": np.full(64, 0.01, np.float32)}, 10, {"loss": 1.0}
+    return trainer
+
+
+def run_fleet(n_clients, n_sync, n_async, n_rounds, cpr, seed=0) -> dict:
+    model0 = {"w": np.zeros(64, np.float32)}
+    plane = ControlPlane(seed=seed)
+    sync_ids, task_ids = [], []
+    for i in range(n_sync):
+        # deliberately unequal weights: fairness must normalize them away
+        tid = plane.create_task(
+            TaskConfig(f"sync-{i}", "bench", "wf", clients_per_round=cpr,
+                       n_rounds=n_rounds, vg_size=max(2, cpr // 4),
+                       weight=float(1 + i % 2)), model0)
+        sync_ids.append(tid)
+        task_ids.append(tid)
+    for i in range(n_async):
+        tid = plane.create_task(
+            TaskConfig(f"async-{i}", "bench", "wf", clients_per_round=cpr,
+                       n_rounds=n_rounds, mode="async", buffer_size=cpr),
+            model0)
+        task_ids.append(tid)
+    for tid in task_ids:
+        plane.deploy(tid)
+    clients = make_heterogeneous_clients(n_clients, _trainer_factory)
+    t0 = time.perf_counter()
+    res = run_multi_task_simulation(plane, clients, seed=seed)
+    wall = time.perf_counter() - t0
+    assert not res.lease_overlaps, res.lease_overlaps[:3]
+    rounds = sum(len(r.round_durations) for r in res.per_task.values())
+    norm = [res.fairness[t]["normalized"] for t in sync_ids
+            if res.fairness[t]["normalized"] > 0]
+    spread = (max(norm) / min(norm)) if len(norm) > 1 else 1.0
+    return {"wall_s": wall, "rounds": rounds,
+            "makespan_s": res.total_time, "fairness_spread": spread,
+            "grant_us": wall / max(1, rounds) * 1e6,
+            "completed": sum(
+                1 for t in task_ids
+                if plane.service.get_task(t).status.value == "completed")}
+
+
+def main(quick=False):
+    shapes = ([(40, 2, 1, 3, 8)] if quick
+              else [(200, 3, 1, 6, 16), (1000, 4, 2, 8, 32)])
+    rows = []
+    print("# multi-tenant control plane: N tasks over one shared fleet")
+    print("#  clients | sync+async | rounds | makespan s | wall s | "
+          "fair max/min")
+    for n_clients, n_sync, n_async, n_rounds, cpr in shapes:
+        r = run_fleet(n_clients, n_sync, n_async, n_rounds, cpr)
+        print(f"#   {n_clients:6d} | {n_sync}+{n_async:9d} | "
+              f"{r['rounds']:6d} | {r['makespan_s']:10.2f} | "
+              f"{r['wall_s']:6.2f} | {r['fairness_spread']:.2f}")
+        tag = f"multitask_c{n_clients}_t{n_sync + n_async}"
+        rows.append((f"{tag}_grant_us", r["grant_us"],
+                     f"rounds={r['rounds']} "
+                     f"completed={r['completed']}/{n_sync + n_async}"))
+        rows.append((f"{tag}_fairness_spread", r["fairness_spread"],
+                     "weight-normalized lease-seconds max/min (1.0=fair)"))
+        rows.append((f"{tag}_makespan_s", r["makespan_s"],
+                     f"virtual; wall={r['wall_s']:.2f}s"))
+        assert r["completed"] == n_sync + n_async
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny shapes — the CI / make-verify smoke run")
+    args = ap.parse_args()
+    rows = main(quick=args.quick)
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    from benchmarks.common import write_bench_json
+    print(f"# wrote {write_bench_json('multitask', rows, quick=args.quick)}")

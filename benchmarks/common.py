@@ -1,14 +1,61 @@
 """Shared benchmark harness pieces: the paper's §5.1 spam-classification
 training setup (BERT-tiny-class model, 100 splits, 20% per round, batch 8,
-AdamW 5e-4), reusable across Fig. 11 benchmarks."""
+AdamW 5e-4), reusable across Fig. 11 benchmarks, plus the machine-readable
+results writer every bench's ``__main__`` feeds."""
 from __future__ import annotations
 
+import json
+import os
 import time
 import zlib
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "results")
+
+
+def write_bench_json(bench: str, rows, quick=False, out_dir=None) -> str:
+    """Persist a bench run as ``BENCH_<bench>.json`` (machine-readable
+    sibling of the human CSV lines every bench prints).
+
+    ``rows``: the ``(name, value, note)`` tuples the bench ``main()``
+    returns. If a previous run's file exists, each metric also records
+    ``prev`` and ``delta_pct`` against it, so regressions are one ``jq``
+    away instead of a diff of stdout logs. Returns the path written.
+    Quick (smoke) runs and full runs land in the same file but are
+    tagged, so a CI smoke never masquerades as a real baseline."""
+    out_dir = out_dir or RESULTS_DIR
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{bench}.json")
+    prev = {}
+    prev_quick = None
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                old = json.load(f)
+            prev_quick = old.get("quick")
+            prev = {r["name"]: r["value"] for r in old.get("rows", [])}
+        except (ValueError, KeyError):
+            pass                      # corrupt previous file: no baseline
+    out_rows = []
+    for name, value, note in rows:
+        row = {"name": str(name), "value": float(value), "note": str(note)}
+        # only compare like with like — a quick smoke vs a full run is
+        # a shape change, not a perf delta
+        if name in prev and prev_quick == bool(quick):
+            row["prev"] = prev[name]
+            if prev[name]:
+                row["delta_pct"] = round(
+                    (row["value"] - prev[name]) / abs(prev[name]) * 100, 2)
+        out_rows.append(row)
+    with open(path, "w") as f:
+        json.dump({"bench": bench, "quick": bool(quick),
+                   "unix_time": time.time(), "rows": out_rows}, f, indent=1)
+        f.write("\n")
+    return path
 
 from repro.checkpoint import deserialize_pytree
 from repro.configs import get_config

@@ -60,9 +60,9 @@ from repro.core import masking
 from repro.core import raveling
 from repro.core.kdf import U32
 from repro.core.quantize import check_headroom, quantize, shard_limb_states
-from repro.core.secure_agg import (SecureAggConfig, _shard_limbs_jit,
-                                   combine_limb_states, group_seed,
-                                   resolve_master_shards)
+from repro.core.secure_agg import (AggregationRefused, SecureAggConfig,
+                                   _shard_limbs_jit, combine_limb_states,
+                                   group_seed, resolve_master_shards)
 
 
 @dataclass(frozen=True)
@@ -267,13 +267,36 @@ def aggregate_flat(flat, plan, client_order, round_seed, *,
 
     from repro.core import dropout
     alive = np.asarray(alive, bool)
-    n_survivors = int(alive.sum())
     if alive.shape[0] != n:
         raise ValueError(f"alive mask has {alive.shape[0]} rows for "
                          f"{n} clients")
-    if n_survivors == 0:
-        raise ValueError("no survivors: every selected client dropped — "
-                         "nothing to aggregate")
+    if not alive.any():
+        raise AggregationRefused(
+            "no survivors: every selected client dropped — nothing to "
+            "aggregate")
+    # min-survivor refusal (mirrors the serial loop's `continue`): a group
+    # whose survivor count drops below the threshold is VOIDED by marking
+    # its remaining rows dead — a fully-dead group's recovered interim is
+    # an exact-zero row, so voiding here is bit-identical to skipping the
+    # group serially, and the mean's divisor shrinks with it.
+    min_surv = int(getattr(secure_cfg, "min_survivors_per_vg", 1))
+    n_voided_groups = 0
+    if min_surv > 1 and not alive.all():
+        alive = alive.copy()
+        for b in buckets:
+            rows_m = np.asarray(b.rows, np.int64).reshape(b.n_groups, b.g)
+            counts = alive[rows_m].sum(axis=1)
+            void = (counts > 0) & (counts < min_surv)
+            if void.any():
+                n_voided_groups += int(void.sum())
+                alive[rows_m[void].ravel()] = False
+        if not alive.any():
+            raise AggregationRefused(
+                "round refused: every surviving virtual group fell below "
+                f"min_survivors_per_vg={min_surv}")
+    if stats is not None:
+        stats["n_voided_groups"] = n_voided_groups
+    n_survivors = int(alive.sum())
     interims = _cohort_interims_churn(
         jnp.asarray(flat), round_seed, key, rows_t, vgs_t,
         jnp.asarray(alive), bucket_shapes=bucket_shapes,

@@ -33,6 +33,12 @@ from repro.core.quantize import (DEFAULT_BITS, DEFAULT_CLIP, MAX_MASTER_GROUPS,
                                  quantize, shard_limb_states)
 
 
+class AggregationRefused(ValueError):
+    """Secure aggregation declined to release a result (privacy refusal):
+    no survivors at all, or every surviving virtual group fell below
+    ``min_survivors_per_vg``. The service layer voids the round."""
+
+
 @dataclass(frozen=True)
 class SecureAggConfig:
     bits: int = DEFAULT_BITS
@@ -48,6 +54,12 @@ class SecureAggConfig:
                                 # ~2^32 VGs) or 4 (adds the 2^48 lane —
                                 # headroom for > 2^32-VG plans; bit-identical
                                 # to 3 within the 3-limb bound)
+    min_survivors_per_vg: int = 2   # dropout recovery refuses (VOIDS) any
+                                    # group left with fewer survivors: after
+                                    # the server reconstructs the dropped
+                                    # net masks, a single-survivor group's
+                                    # interim is that client's BARE update.
+                                    # 1 restores the pre-refusal behaviour.
 
 
 def flatten_update(update_pytree):
@@ -210,6 +222,10 @@ def secure_aggregate_survivors(client_updates, vg_plan, round_seed,
                 drop_idx.append(idx)
         if not payloads:
             continue                      # whole VG dropped
+        if len(surv_idx) < cfg.min_survivors_per_vg:
+            continue  # VOIDED: recovering this group's dropped masks
+            #           would leave < min_survivors_per_vg payloads in
+            #           the sum — at 1 survivor, the client's bare update
         interim = vg_aggregate(payloads)
         if drop_idx:
             interim = interim + dropout.dropped_net_mask(
@@ -217,8 +233,13 @@ def secure_aggregate_survivors(client_updates, vg_plan, round_seed,
         interims.append(interim)
         sizes.append(len(surv_idx))
     if unflatten is None:
-        raise ValueError("no survivors: every selected client dropped — "
-                         "nothing to aggregate")
+        raise AggregationRefused(
+            "no survivors: every selected client dropped — nothing to "
+            "aggregate")
+    if not interims:
+        raise AggregationRefused(
+            "round refused: every surviving virtual group fell below "
+            f"min_survivors_per_vg={cfg.min_survivors_per_vg}")
     return master_aggregate(interims, sizes, unflatten, cfg)
 
 

@@ -1,17 +1,25 @@
 """Florida service layer: Management/Selection/Authentication services,
-client SDK (paper Fig. 3 API), and the multi-client simulator."""
+client SDK (paper Fig. 3 API), the multi-tenant control plane (device
+directory, round scheduler, model registry), and the multi-client
+simulator."""
 from repro.fl.auth import AttestationAuthority, AuthenticationService
 from repro.fl.client import (ConsoleLogger, FederatedLearningClient,
                              NullLogger, WorkflowDetails,
                              load_model_snapshot)
+from repro.fl.directory import DeviceDirectory, DeviceEntry, LeaseConflict
 from repro.fl.population import (DEFAULT_TIERS, DeviceProfile, DeviceTier,
-                                 PopulationConfig, make_population_clients,
+                                 PopulationConfig, enroll_fleet,
+                                 make_population_clients,
                                  population_summary, sample_population)
+from repro.fl.registry import ModelRegistry, RegistryEntry
+from repro.fl.scheduler import ControlPlane, RoundGrant
 from repro.fl.selection import SelectionService
 from repro.fl.server import ManagementService
-from repro.fl.simulator import (SimClient, SimResult,
+from repro.fl.simulator import (MultiTaskResult, SimClient, SimResult,
                                 make_heterogeneous_clients,
-                                run_async_simulation, run_sync_simulation)
+                                run_async_simulation,
+                                run_multi_task_simulation,
+                                run_sync_simulation)
 from repro.fl.task import (SelectionCriteria, TaskConfig, TaskRecord,
                            TaskStatus)
 from repro.fl.telemetry import MetricsStore

@@ -9,10 +9,18 @@ task state persists between invocations via the checkpoint module.
         --app-name spam-app --workflow train --clients-per-round 8 \\
         --rounds 5 [--dp local --noise 1.0 --clip 0.5] [--mode async]
     PYTHONPATH=src python -m repro.fl.cli list
-    PYTHONPATH=src python -m repro.fl.cli run <task_id> --clients 16
+    PYTHONPATH=src python -m repro.fl.cli deploy <task_id>
+    PYTHONPATH=src python -m repro.fl.cli run <task_id> [...] --clients 16
     PYTHONPATH=src python -m repro.fl.cli show <task_id>
     PYTHONPATH=src python -m repro.fl.cli pause|resume|cancel <task_id>
     PYTHONPATH=src python -m repro.fl.cli metrics <task_id>
+    PYTHONPATH=src python -m repro.fl.cli fleet
+    PYTHONPATH=src python -m repro.fl.cli registry [--save-dir DIR]
+
+``run`` with several task ids drives them CONCURRENTLY through the
+:class:`~repro.fl.scheduler.ControlPlane` over one shared client
+population (the multi-tenant path); with one id it uses the direct
+single-task simulators, which the scheduler path reproduces bit-for-bit.
 """
 from __future__ import annotations
 
@@ -22,7 +30,9 @@ import pickle
 import sys
 
 from repro.core.dp import DPConfig
-from repro.fl.dashboard import render_metrics, render_task_list, render_task_view
+from repro.fl.dashboard import (render_fleet, render_metrics,
+                                render_task_list, render_task_view)
+from repro.fl.scheduler import ControlPlane
 from repro.fl.server import ManagementService
 from repro.fl.task import TaskConfig
 
@@ -58,29 +68,82 @@ def cmd_create(svc, args):
                     workflow_name=args.workflow,
                     clients_per_round=args.clients_per_round,
                     n_rounds=args.rounds, strategy=args.strategy,
-                    mode=args.mode, vg_size=args.vg_size, dp=dp)
-    tid = svc.create_task(tc, model, user=args.user)
-    print(f"created task {tid} ({args.task_name})")
+                    mode=args.mode, vg_size=args.vg_size, dp=dp,
+                    priority=args.priority, weight=args.weight,
+                    epsilon_budget=args.epsilon_budget,
+                    target_metric=args.target_metric,
+                    target_value=args.target_value)
+    tid = svc.create_task(tc, model, user=args.user,
+                          deploy=not args.no_deploy)
+    state = "created" if args.no_deploy else "created + deployed"
+    print(f"{state} task {tid} ({args.task_name})")
     return tid
 
 
-def cmd_run(svc, args):
-    """Drive a task with simulated SDK clients (the CLI's test harness)."""
+def _spam_world(model0=None):
     sys.path.insert(0, os.getcwd())
     from benchmarks.common import SpamWorld
-    from repro.fl.simulator import (make_heterogeneous_clients,
-                                    run_async_simulation, run_sync_simulation)
-    task = svc.get_task(args.task_id)
     world = SpamWorld(vocab=1024, d_model=64, n_train=3000, n_splits=20,
                       frac=0.5)
-    world.model0 = task.model  # continue from the task's current snapshot
+    if model0 is not None:
+        world.model0 = model0  # continue from the task's current snapshot
+    return world
+
+
+def cmd_run(svc, args):
+    """Drive task(s) with simulated SDK clients (the CLI's test harness).
+    One task id -> the direct single-task simulators; several -> the
+    ControlPlane-scheduled multi-task simulator over one shared fleet."""
+    from repro.fl.simulator import (make_heterogeneous_clients,
+                                    run_async_simulation,
+                                    run_multi_task_simulation,
+                                    run_sync_simulation)
+    if len(args.task_id) == 1:
+        task = svc.get_task(args.task_id[0])
+        world = _spam_world(task.model)
+        clients = make_heterogeneous_clients(args.clients, world.make_trainer)
+        runner = (run_async_simulation if task.config.mode == "async"
+                  else run_sync_simulation)
+        res = runner(svc, args.task_id[0], clients,
+                     eval_fn=world.test_accuracy)
+        accs = [h.get("eval_accuracy") for h in res.metrics_history]
+        print(f"task {args.task_id[0]}: {len(res.round_durations)} "
+              f"iterations, acc {accs[0]:.3f} -> {accs[-1]:.3f}"
+              if accs else "no rounds ran")
+        return
+    world = _spam_world()
     clients = make_heterogeneous_clients(args.clients, world.make_trainer)
-    runner = (run_async_simulation if task.config.mode == "async"
-              else run_sync_simulation)
-    res = runner(svc, args.task_id, clients, eval_fn=world.test_accuracy)
-    accs = [h.get("eval_accuracy") for h in res.metrics_history]
-    print(f"task {args.task_id}: {len(res.round_durations)} iterations, "
-          f"acc {accs[0]:.3f} -> {accs[-1]:.3f}" if accs else "no rounds ran")
+    plane = ControlPlane(svc)
+    for tid in args.task_id:
+        if svc.get_task(tid).status.value == "created":
+            plane.deploy(tid, user=args.user)
+    res = run_multi_task_simulation(
+        plane, clients,
+        eval_fns={tid: world.test_accuracy for tid in args.task_id})
+    for tid in args.task_id:
+        r = res.per_task[tid]
+        rec = svc.get_task(tid)
+        print(f"task {tid}: {len(r.round_durations)} iterations, "
+              f"status={rec.status.value}"
+              + (f" (stop: {rec.stop_reason})" if rec.stop_reason else ""))
+    if res.lease_overlaps:
+        print(f"WARNING: {len(res.lease_overlaps)} overlapping sync leases")
+    print(render_fleet(plane))
+
+
+def cmd_registry(svc, args):
+    reg = svc.registry
+    if not len(reg):
+        print("registry: no published models")
+        return
+    for e in reg.entries():
+        eps = f" eps={e.epsilon:.2f}" if e.epsilon is not None else ""
+        print(f"task {e.task_id} ({e.task_name}): {e.rounds_run} rounds, "
+              f"stop={e.stop_reason}{eps}, "
+              f"published_at={e.published_at:.1f}")
+    if args.save_dir:
+        reg.save(args.save_dir)
+        print(f"saved {len(reg)} model(s) to {args.save_dir}")
 
 
 def main(argv=None):
@@ -103,14 +166,24 @@ def main(argv=None):
     c.add_argument("--clip", type=float, default=0.5)
     c.add_argument("--noise", type=float, default=1.0)
     c.add_argument("--seed", type=int, default=0)
+    c.add_argument("--no-deploy", action="store_true",
+                   help="leave the task CREATED (deploy it later)")
+    c.add_argument("--priority", type=int, default=0)
+    c.add_argument("--weight", type=float, default=1.0)
+    c.add_argument("--epsilon-budget", type=float, default=None)
+    c.add_argument("--target-metric", default=None)
+    c.add_argument("--target-value", type=float, default=None)
 
     sub.add_parser("list")
-    for name in ("show", "pause", "resume", "cancel", "metrics"):
+    sub.add_parser("fleet")
+    for name in ("show", "deploy", "pause", "resume", "cancel", "metrics"):
         p = sub.add_parser(name)
         p.add_argument("task_id", type=int)
     r = sub.add_parser("run")
-    r.add_argument("task_id", type=int)
+    r.add_argument("task_id", type=int, nargs="+")
     r.add_argument("--clients", type=int, default=16)
+    g = sub.add_parser("registry")
+    g.add_argument("--save-dir", default=None)
 
     args = ap.parse_args(argv)
     svc = load_service(args.session)
@@ -118,6 +191,13 @@ def main(argv=None):
         cmd_create(svc, args)
     elif args.cmd == "list":
         print(render_task_list(svc))
+    elif args.cmd == "fleet":
+        print(render_fleet(ControlPlane(svc)))
+    elif args.cmd == "deploy":
+        svc.deploy_task(args.task_id, user=args.user)
+        print(f"task {args.task_id} deployed")
+    elif args.cmd == "registry":
+        cmd_registry(svc, args)
     elif args.cmd == "show":
         print(render_task_view(svc, args.task_id))
     elif args.cmd == "metrics":

@@ -64,6 +64,37 @@ def render_task_view(svc, task_id: int) -> str:
     return "\n".join(lines)
 
 
+def render_fleet(plane) -> str:
+    """Control-plane view: the shared fleet, per-task scheduling shares
+    (priority / weight / lease-seconds), and the model registry."""
+    d = plane.directory
+    fleet = d.fleet_summary()
+    fair = plane.fairness()
+    lines = [
+        f"fleet: {fleet['devices']} devices, "
+        f"{fleet['leased_now']} leased now, "
+        f"{fleet['tasks_enrolled']} tasks enrolled",
+        f"{'id':>4} {'task':<18} {'status':<10} {'mode':<6} {'prio':>4} "
+        f"{'weight':>6} {'lease_s':>9} {'rounds':>6}",
+    ]
+    lines.append("-" * len(lines[-1]))
+    for t in plane.tasks():
+        f = fair.get(t.task_id, {})
+        lines.append(
+            f"{t.task_id:>4} {t.config.task_name:<18} "
+            f"{t.status.value:<10} {t.config.mode:<6} "
+            f"{f.get('priority', 0):>4} {f.get('weight', 1.0):>6.2f} "
+            f"{f.get('lease_seconds', 0.0):>9.2f} "
+            f"{f.get('rounds_granted', 0):>6}")
+    lines.append(f"registry: {len(plane.registry)} published model(s)"
+                 + ("".join(f"\n  task {e.task_id} ({e.task_name}): "
+                            f"{e.rounds_run} rounds, stop={e.stop_reason}"
+                            + (f", eps={e.epsilon:.2f}"
+                               if e.epsilon is not None else "")
+                            for e in plane.registry.entries())))
+    return "\n".join(lines)
+
+
 def render_metrics(svc, task_id: int) -> str:
     """Fig. 8/9 analogue: per-metric sparkline series."""
     rows = [f"metrics for task {task_id}:"]

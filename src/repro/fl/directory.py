@@ -1,0 +1,194 @@
+"""Shared device directory: ONE source of truth for the physical fleet.
+
+Before the control-plane refactor every task's ``SelectionService`` state
+was fully independent, so two concurrent tasks could "select" the same
+physical phone into overlapping sync cohorts — impossible on real devices
+(the SDK runs one training session at a time) and unsound for secure
+aggregation (a device's compute budget and availability window are
+physical, not per-task). The :class:`DeviceDirectory` fixes the model:
+
+- **registration is physical**: a device registers once, with its
+  ``device_info`` and (optionally) its ``population.DeviceProfile``;
+  per-task *enrollment* (selection-criteria matching, attestation) stays in
+  ``SelectionService``, which is now a per-task VIEW over this directory;
+- **leases**: a sync cohort selection ACQUIRES a lease per member and the
+  round lifecycle releases it (``reset_round`` / ``release`` / ``drop``) —
+  while leased, the device is invisible to every other task's selectable
+  pool, so no device can ever train in two overlapping sync cohorts.
+  Async tasks do not lease (their clients train opportunistically and the
+  trusted-boundary buffer has no cohort barrier to protect);
+- **availability in one place**: :meth:`available_at` answers "is this
+  physical device inside its window at virtual time t" from the profile
+  the device registered with, instead of each task re-deriving it;
+- **fairness accounting**: released leases accumulate per-task
+  *lease-seconds* (``now`` is the virtual clock, maintained by the caller
+  — the scheduler/simulator), the currency the ``ControlPlane``'s
+  deficit-weighted round-robin schedules against.
+
+The lease log (on by default) records every ``(client_id, task_id, t0,
+t1)`` interval so tests and audits can prove the no-overlap invariant via
+:meth:`overlap_violations`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+class LeaseConflict(RuntimeError):
+    """A task tried to lease a device already leased by another task."""
+
+
+@dataclass
+class DeviceEntry:
+    client_id: str
+    device_info: dict = field(default_factory=dict)
+    profile: object = None          # optional population.DeviceProfile
+    tasks: set = field(default_factory=set)   # task_ids enrolled with
+
+
+@dataclass
+class _Lease:
+    task_id: int
+    t_start: float
+
+
+class DeviceDirectory:
+    def __init__(self, log_leases: bool = True):
+        self._devices: dict[str, DeviceEntry] = {}
+        self._leases: dict[str, _Lease] = {}
+        # task_id -> accumulated lease-seconds over released leases (the
+        # fairness currency; active leases charge on release)
+        self.lease_seconds: dict[int, float] = {}
+        self.lease_log: list = []   # (client_id, task_id, t_start, t_end)
+        self.log_leases = log_leases
+        # virtual clock; the scheduler / simulator advances it so lease
+        # intervals are measured in the same time base as round walls
+        self.now: float = 0.0
+
+    # -- fleet ------------------------------------------------------------
+    def register(self, client_id: str, device_info: dict | None = None,
+                 profile=None, task_id: int | None = None) -> DeviceEntry:
+        """Physical registration (idempotent). ``task_id`` additionally
+        records per-task enrollment; a later call may attach the profile a
+        first registration omitted."""
+        entry = self._devices.get(client_id)
+        if entry is None:
+            entry = DeviceEntry(client_id, dict(device_info or {}), profile)
+            self._devices[client_id] = entry
+        else:
+            if device_info:
+                entry.device_info.update(device_info)
+            if profile is not None:
+                entry.profile = profile
+        if task_id is not None:
+            entry.tasks.add(task_id)
+        return entry
+
+    def __contains__(self, client_id: str) -> bool:
+        return client_id in self._devices
+
+    def __len__(self) -> int:
+        return len(self._devices)
+
+    def devices(self) -> list:
+        return sorted(self._devices)
+
+    def profile_of(self, client_id: str):
+        entry = self._devices.get(client_id)
+        return entry.profile if entry else None
+
+    def available_at(self, client_id: str, t: float | None = None) -> bool:
+        """Availability-window check at virtual time ``t`` (default: the
+        directory clock). Devices without a profile are always inside
+        their window — the profile-less simulator contract."""
+        p = self.profile_of(client_id)
+        return p is None or p.available_at(self.now if t is None else t)
+
+    def enrolled(self, task_id: int) -> list:
+        return sorted(cid for cid, e in self._devices.items()
+                      if task_id in e.tasks)
+
+    # -- leases -----------------------------------------------------------
+    def leased_by(self, client_id: str) -> Optional[int]:
+        lease = self._leases.get(client_id)
+        return lease.task_id if lease else None
+
+    def leasable(self, client_id: str, task_id: int) -> bool:
+        """Free, or already held by the SAME task (re-acquire is a no-op
+        so a task's own cohort never blocks its backfill)."""
+        lease = self._leases.get(client_id)
+        return lease is None or lease.task_id == task_id
+
+    def acquire(self, task_id: int, client_ids) -> None:
+        """Lease every id for ``task_id`` (atomic: conflict leaves no
+        partial acquisition). Selection filters on :meth:`leasable`, so a
+        conflict here means two tasks raced the same device — a scheduler
+        bug worth failing loudly on."""
+        ids = list(client_ids)
+        for cid in ids:
+            if not self.leasable(cid, task_id):
+                raise LeaseConflict(
+                    f"device {cid!r} is leased by task "
+                    f"{self._leases[cid].task_id}, wanted by {task_id}")
+        for cid in ids:
+            if cid not in self._leases:          # re-acquire keeps t_start
+                self._leases[cid] = _Lease(task_id, self.now)
+
+    def release(self, task_id: int, client_ids) -> float:
+        """Release this task's leases on ``client_ids`` (ids it does not
+        hold are ignored). Returns the lease-seconds charged."""
+        charged = 0.0
+        for cid in client_ids:
+            lease = self._leases.get(cid)
+            if lease is None or lease.task_id != task_id:
+                continue
+            del self._leases[cid]
+            held = max(0.0, self.now - lease.t_start)
+            charged += held
+            self.lease_seconds[task_id] = \
+                self.lease_seconds.get(task_id, 0.0) + held
+            if self.log_leases:
+                self.lease_log.append((cid, task_id, lease.t_start,
+                                       self.now))
+        return charged
+
+    def release_all(self, task_id: int) -> float:
+        return self.release(task_id,
+                            [cid for cid, lease in self._leases.items()
+                             if lease.task_id == task_id])
+
+    def leased(self, task_id: int | None = None) -> list:
+        """Currently-leased device ids (optionally for one task)."""
+        return sorted(cid for cid, lease in self._leases.items()
+                      if task_id is None or lease.task_id == task_id)
+
+    # -- audit / telemetry ------------------------------------------------
+    def overlap_violations(self) -> list:
+        """Every pair of lease intervals on the SAME device that overlap
+        in time — the multi-task acceptance invariant is that this is
+        empty. Active (unreleased) leases are checked as open intervals
+        ending at ``now``."""
+        by_dev: dict[str, list] = {}
+        for cid, tid, t0, t1 in self.lease_log:
+            by_dev.setdefault(cid, []).append((t0, t1, tid))
+        for cid, lease in self._leases.items():
+            by_dev.setdefault(cid, []).append(
+                (lease.t_start, self.now, lease.task_id))
+        bad = []
+        for cid, spans in by_dev.items():
+            spans.sort()
+            for (a0, a1, ta), (b0, b1, tb) in zip(spans, spans[1:]):
+                if b0 < a1:            # half-open [t0, t1) intervals
+                    bad.append((cid, (a0, a1, ta), (b0, b1, tb)))
+        return bad
+
+    def fleet_summary(self) -> dict:
+        """Cross-task fleet view numbers for the dashboard/telemetry."""
+        return {
+            "devices": len(self._devices),
+            "leased_now": len(self._leases),
+            "lease_seconds": dict(sorted(self.lease_seconds.items())),
+            "tasks_enrolled": len({t for e in self._devices.values()
+                                   for t in e.tasks}),
+        }

@@ -141,6 +141,21 @@ def make_population_clients(profiles, trainer_factory=None):
     return clients
 
 
+def enroll_fleet(directory, profiles, task_id=None):
+    """Register a sampled population straight into a shared
+    :class:`~repro.fl.directory.DeviceDirectory` (the multi-tenant fleet
+    view), without going through any one task's SDK registration. Devices
+    enrolled here carry their availability profile, so every tenant's
+    selection sees the same windows. Returns the directory."""
+    for p in profiles:
+        directory.register(
+            p.client_id,
+            {"os": "linux", "n_samples": 100, "battery": 1.0,
+             "tier": p.tier},
+            profile=p, task_id=task_id)
+    return directory
+
+
 def population_summary(profiles) -> dict:
     """Aggregate stats for logs/docs: tier mix, speed range, hazard mean."""
     tiers: dict = {}

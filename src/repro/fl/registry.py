@@ -1,0 +1,137 @@
+"""Model registry: the durable output of a completed task.
+
+The paper's FLaaS loop ends with the service handing the tenant a trained
+model, not a live python object inside a simulator process. When the
+control plane completes a task (``n_rounds`` reached, target metric hit,
+or epsilon budget exhausted), the ``ManagementService`` publishes a
+:class:`RegistryEntry` here: the final global model (as a
+``checkpoint.serialize_pytree`` blob — framework-portable npz bytes), a
+JSON-able summary of the task config, the full round history, the
+realized privacy cost (epsilon at the ACTUAL participation rates, from
+the per-task ``RdpAccountant``), and the stop reason.
+
+Persistence reuses the checkpoint module's format: ``save(dir)`` writes
+one ``task_<id>.json`` (metadata) + ``task_<id>.model.npz`` (the pytree
+blob, byte-for-byte the ``serialize_pytree`` output) per entry, and
+``load(dir)`` round-trips them, so a registry survives the process and a
+fresh service can serve models it never trained.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass, field, fields as dc_fields
+from typing import Any, Optional
+
+from repro.checkpoint import deserialize_pytree, serialize_pytree
+
+
+def _config_summary(cfg) -> dict:
+    """The JSON-able scalars of a TaskConfig (callables, nested configs
+    and pytrees are summarized or skipped — the registry stores what a
+    tenant needs to identify the artifact, not a pickle)."""
+    out = {}
+    for f in dc_fields(cfg):
+        v = getattr(cfg, f.name)
+        if isinstance(v, (str, int, float, bool)) or v is None:
+            out[f.name] = v
+        elif isinstance(v, (tuple, list)) and all(
+                isinstance(x, (str, int, float, bool)) for x in v):
+            out[f.name] = list(v)
+    dp = getattr(cfg, "dp", None)
+    if dp is not None:
+        out["dp"] = {"mechanism": dp.mechanism, "clip_norm": dp.clip_norm,
+                     "noise_multiplier": dp.noise_multiplier,
+                     "delta": dp.delta}
+    sa = getattr(cfg, "secure_agg", None)
+    if sa is not None:
+        out["secure_agg"] = {"bits": sa.bits, "clip": sa.clip,
+                             "min_survivors_per_vg":
+                                 getattr(sa, "min_survivors_per_vg", 1)}
+    return out
+
+
+@dataclass
+class RegistryEntry:
+    task_id: int
+    task_name: str
+    stop_reason: str
+    rounds_run: int
+    epsilon: Optional[float]
+    config: dict                       # JSON-able TaskConfig summary
+    history: list                      # per-round metric dicts
+    model_blob: bytes                  # serialize_pytree output
+    published_at: float = field(default_factory=time.time)
+
+    def model(self, like: Any = None):
+        """The final global model pytree (``like`` restores structure and
+        dtypes, exactly as ``checkpoint.deserialize_pytree``)."""
+        return deserialize_pytree(self.model_blob, like=like)
+
+
+class ModelRegistry:
+    def __init__(self):
+        self._entries: dict[int, RegistryEntry] = {}
+
+    def publish(self, rec, epsilon: Optional[float] = None) -> RegistryEntry:
+        """Publish a completed TaskRecord. Re-publishing a task_id
+        overwrites (idempotent completion)."""
+        entry = RegistryEntry(
+            task_id=rec.task_id,
+            task_name=rec.config.task_name,
+            stop_reason=rec.stop_reason or "n_rounds",
+            rounds_run=rec.round_idx,
+            epsilon=None if epsilon is None else float(epsilon),
+            config=_config_summary(rec.config),
+            history=[dict(h) for h in rec.history],
+            model_blob=serialize_pytree(rec.model))
+        self._entries[rec.task_id] = entry
+        return entry
+
+    def get(self, task_id: int) -> RegistryEntry:
+        return self._entries[task_id]
+
+    def entries(self) -> list:
+        return [self._entries[t] for t in sorted(self._entries)]
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, task_id: int) -> bool:
+        return task_id in self._entries
+
+    # -- persistence (checkpoint-module format) ---------------------------
+    def save(self, dir_path: str) -> list:
+        """Write every entry under ``dir_path``; returns written paths."""
+        os.makedirs(dir_path, exist_ok=True)
+        written = []
+        for entry in self.entries():
+            stem = os.path.join(dir_path, f"task_{entry.task_id}")
+            blob_path = stem + ".model.npz"
+            with open(blob_path, "wb") as f:
+                f.write(entry.model_blob)
+            meta = {k: getattr(entry, k) for k in
+                    ("task_id", "task_name", "stop_reason", "rounds_run",
+                     "epsilon", "config", "history", "published_at")}
+            meta["model_file"] = os.path.basename(blob_path)
+            meta_path = stem + ".json"
+            with open(meta_path, "w") as f:
+                json.dump(meta, f, indent=1, default=float)
+            written += [meta_path, blob_path]
+        return written
+
+    @classmethod
+    def load(cls, dir_path: str) -> "ModelRegistry":
+        reg = cls()
+        for name in sorted(os.listdir(dir_path)):
+            if not (name.startswith("task_") and name.endswith(".json")):
+                continue
+            with open(os.path.join(dir_path, name)) as f:
+                meta = json.load(f)
+            with open(os.path.join(dir_path, meta.pop("model_file")),
+                      "rb") as f:
+                blob = f.read()
+            reg._entries[meta["task_id"]] = RegistryEntry(model_blob=blob,
+                                                          **meta)
+        return reg

@@ -1,0 +1,206 @@
+"""Round scheduler: the FLaaS control plane (paper §3.1.1 at fleet scope).
+
+The paper's pitch is many tenants submitting tasks to one service over one
+device fleet. Pre-refactor, ``begin_round`` was caller-driven: whoever
+held the service decided when each task's round started, and nothing
+arbitrated between tasks competing for the same devices. The
+:class:`ControlPlane` owns that decision:
+
+- it holds MANY tasks (all inside one shared ``ManagementService``, whose
+  ``SelectionService`` views one shared ``DeviceDirectory``);
+- :meth:`grant_round` picks WHICH ready task's round starts next —
+  **priority tiers** first (a higher ``TaskConfig.priority`` is always
+  granted before a lower one), then **deficit-weighted round-robin**
+  inside a tier: the task with the least ``lease_seconds / weight``
+  (device-time consumed, normalized by its fair-share weight) goes next,
+  so a big-cohort task cannot starve a small one — each round it runs
+  charges it lease-seconds, pushing it behind the tasks it crowded out;
+- :meth:`complete_round` closes a granted round: releases the cohort's
+  device leases (charging the lease-seconds the fairness policy feeds on)
+  and evaluates the task's stop criteria (``n_rounds`` / target metric /
+  epsilon budget — ``ManagementService.check_stop``), publishing completed
+  tasks to the model registry.
+
+Async tasks are not round-granted: FedBuff steps whenever its buffer
+fills, driven by client submissions, and async clients hold no leases —
+the no-overlap invariant the directory enforces is about SYNC cohorts
+(a blocking training session with a cohort barrier).
+
+A single task driven through ``grant_round``/``complete_round`` is
+bit-identical to calling ``begin_round``/``submit_cohort`` directly: the
+scheduler adds arbitration, not protocol steps.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.fl.server import ManagementService
+from repro.fl.task import TaskRecord, TaskStatus
+
+
+@dataclass
+class RoundGrant:
+    task_id: int
+    round_idx: int
+    cohort: list
+
+
+class ControlPlane:
+    def __init__(self, service: ManagementService | None = None,
+                 seed: int = 0):
+        self.service = service if service is not None \
+            else ManagementService(seed=seed)
+        self.directory = self.service.directory
+        self.registry = self.service.registry
+        self._active: dict[int, RoundGrant] = {}   # task_id -> open grant
+        self._deferred: dict[int, float] = {}      # task_id -> retry-at t
+        self.rounds_granted: dict[int, int] = {}
+
+    # -- task management (thin lifecycle wrappers) ------------------------
+    def create_task(self, config, initial_model,
+                    user: str = "default-user") -> int:
+        """Create WITHOUT deploying — the control-plane lifecycle is
+        CREATED -> deploy() -> RUNNING -> stop criteria -> COMPLETED."""
+        return self.service.create_task(config, initial_model, user=user,
+                                        deploy=False)
+
+    def deploy(self, task_id: int, user: str = "default-user"):
+        self.service.deploy_task(task_id, user=user)
+
+    def pause(self, task_id: int, user: str = "default-user"):
+        """Pause aborts any in-flight round (the service releases its
+        leases) and forgets the grant — the scheduler moves straight on to
+        other tasks, never waiting on a paused task's round."""
+        self.service.pause_task(task_id, user=user)
+        self._active.pop(task_id, None)
+
+    def resume(self, task_id: int, user: str = "default-user"):
+        self.service.resume_task(task_id, user=user)
+
+    def cancel(self, task_id: int, user: str = "default-user"):
+        self.service.cancel_task(task_id, user=user)
+        self._active.pop(task_id, None)
+
+    def tasks(self) -> list:
+        return self.service.list_tasks()
+
+    def defer(self, task_id: int, until: float):
+        """Back off granting to a task until virtual time ``until`` (e.g.
+        the simulator found its whole cohort outside availability windows
+        — retry after a deadline instead of spinning at one instant)."""
+        self._deferred[task_id] = until
+
+    # -- scheduling policy ------------------------------------------------
+    def _policy(self, rec: TaskRecord):
+        return (int(getattr(rec.config, "priority", 0)),
+                float(getattr(rec.config, "weight", 1.0)) or 1.0)
+
+    def _ready(self, rec: TaskRecord, now: float) -> bool:
+        """A task can be granted a round: sync, RUNNING, no round in
+        flight, not deferred, and the lease-free selectable pool still
+        covers its target cohort (a task whose devices are leased to
+        another task's round WAITS — it does not burn a round index on a
+        short cohort)."""
+        if rec.config.mode != "sync" or rec.status is not TaskStatus.RUNNING:
+            return False
+        if rec.task_id in self._active:
+            return False
+        if now < self._deferred.get(rec.task_id, float("-inf")):
+            return False
+        pool = self.service.selection.available(rec)
+        # under-provisioned tasks (fewer enrolled devices than the cohort
+        # target) run short cohorts, exactly like the direct path — the
+        # wait is only for devices leased AWAY, never for devices the task
+        # never had
+        need = min(rec.config.clients_per_round,
+                   len(self.service.selection.registered(rec)))
+        return need > 0 and len(pool) >= need
+
+    def next_task(self, now: float | None = None):
+        """The task the fairness policy grants next, or None if no sync
+        task is ready. Highest priority tier first; within a tier, the
+        lowest weighted lease-seconds deficit; task_id breaks ties."""
+        now = self.directory.now if now is None else now
+        ready = [t for t in self.service.list_tasks() if self._ready(t, now)]
+        if not ready:
+            return None
+        spent = self.directory.lease_seconds
+
+        def rank(rec):
+            prio, weight = self._policy(rec)
+            return (-prio, spent.get(rec.task_id, 0.0) / weight,
+                    rec.task_id)
+
+        return min(ready, key=rank).task_id
+
+    # -- round lifecycle --------------------------------------------------
+    def grant_round(self, now: float | None = None,
+                    available=None) -> RoundGrant | None:
+        """Grant the next round to the fairest ready task: advances the
+        directory clock, runs the task's ``begin_round`` (selection
+        acquires the cohort's leases at ``now``) and records the grant.
+        Returns None when no sync task is ready."""
+        if now is not None:
+            self.directory.now = now
+        tid = self.next_task(self.directory.now)
+        if tid is None:
+            return None
+        round_idx, cohort = self.service.begin_round(tid,
+                                                     available=available)
+        if not cohort:
+            return None
+        grant = RoundGrant(tid, round_idx, list(cohort))
+        self._active[tid] = grant
+        self.rounds_granted[tid] = self.rounds_granted.get(tid, 0) + 1
+        return grant
+
+    def active_grants(self) -> list:
+        return [self._active[t] for t in sorted(self._active)]
+
+    def active_grant(self, task_id: int):
+        """The task's open grant, or None (e.g. after a pause aborted
+        it) — the simulator drops stale round-end events with this."""
+        return self._active.get(task_id)
+
+    def next_deferred(self, now: float):
+        """Earliest deferral expiry strictly after ``now`` among RUNNING
+        sync tasks, or None — the simulator's idle-advance target when no
+        events are pending."""
+        times = []
+        for rec in self.service.list_tasks():
+            if rec.config.mode != "sync" \
+                    or rec.status is not TaskStatus.RUNNING:
+                continue
+            t = self._deferred.get(rec.task_id)
+            if t is not None and now < t < float("inf"):
+                times.append(t)
+        return min(times) if times else None
+
+    def complete_round(self, task_id: int, now: float | None = None):
+        """Close a granted round AFTER its submissions (or its void): set
+        the clock to the round's end, release the cohort's leases —
+        charging the task its lease-seconds — and evaluate stop criteria
+        (COMPLETED tasks publish to the registry via the service)."""
+        if now is not None:
+            self.directory.now = now
+        self._active.pop(task_id, None)
+        rec = self.service.get_task(task_id)
+        self.service.selection.reset_round(rec)
+        return self.service.check_stop(task_id)
+
+    # -- telemetry --------------------------------------------------------
+    def fairness(self) -> dict:
+        """Per-task scheduling telemetry: priority, weight, raw and
+        weight-normalized lease-seconds, rounds granted."""
+        out = {}
+        spent = self.directory.lease_seconds
+        for rec in self.service.list_tasks():
+            prio, weight = self._policy(rec)
+            s = spent.get(rec.task_id, 0.0)
+            out[rec.task_id] = {
+                "priority": prio, "weight": weight,
+                "lease_seconds": s, "normalized": s / weight,
+                "rounds_granted": self.rounds_granted.get(rec.task_id, 0),
+                "status": rec.status.value,
+            }
+        return out

@@ -11,7 +11,18 @@ training -> done | dropped``, and ``reset_round`` releases selected/done
 AND dropped members back to the registered pool — a device that
 disconnected mid-round re-registers next round, exactly like a device that
 finished (the pre-fix code kept ``dropped`` sticky forever, so churned
-devices leaked out of the pool and ``ready()`` over-counted them)."""
+devices leaked out of the pool and ``ready()`` over-counted them).
+
+Multi-tenant since the control-plane refactor: the service is a per-task
+VIEW over a shared :class:`~repro.fl.directory.DeviceDirectory`. Per-task
+state (criteria matching, round status) stays here; physical state
+(device identity, profile, leases) lives in the directory. Selecting a
+cohort ACQUIRES a per-device lease and the round lifecycle releases it
+(``reset_round`` / ``release`` / ``drop``), so with many tasks sharing one
+fleet no device can sit in two overlapping sync cohorts — ``available``
+filters leased-elsewhere devices out of the pool. With a single task the
+pool and the RNG draw sequence are bit-identical to the pre-directory
+service."""
 from __future__ import annotations
 
 import math
@@ -19,6 +30,7 @@ import random
 from dataclasses import dataclass, field
 
 from repro.fl.auth import AuthenticationService
+from repro.fl.directory import DeviceDirectory
 from repro.fl.task import TaskRecord
 
 
@@ -30,9 +42,14 @@ class Registration:
 
 
 class SelectionService:
-    def __init__(self, auth: AuthenticationService | None = None, seed=0):
+    def __init__(self, auth: AuthenticationService | None = None, seed=0,
+                 directory: DeviceDirectory | None = None):
         self.auth = auth or AuthenticationService()
         self._rng = random.Random(seed)
+        # the shared physical-fleet view; standalone services get a
+        # private one so single-task behaviour needs no wiring
+        self.directory = directory if directory is not None \
+            else DeviceDirectory()
         # task_id -> {client_id -> Registration}
         self._registrations: dict = {}
         # task_id -> deadline (seconds) of the current round, if any
@@ -48,7 +65,7 @@ class SelectionService:
                 and t.status.value in ("created", "running")]
 
     def register(self, task: TaskRecord, client_id: str, device_info: dict,
-                 certificate: dict | None = None) -> bool:
+                 certificate: dict | None = None, profile=None) -> bool:
         crit = task.config.selection
         if crit.require_attestation:
             if certificate is None or not self.auth.verify(certificate):
@@ -57,6 +74,10 @@ class SelectionService:
             return False
         self._registrations.setdefault(task.task_id, {})[client_id] = \
             Registration(client_id, device_info)
+        # per-task enrollment above; physical registration (identity,
+        # availability profile, leases) in the shared directory
+        self.directory.register(client_id, device_info, profile=profile,
+                                task_id=task.task_id)
         return True
 
     # -- server side -------------------------------------------------------
@@ -66,10 +87,13 @@ class SelectionService:
 
     def available(self, task: TaskRecord) -> list[str]:
         """The selectable pool: clients currently in status 'registered'
-        (not mid-round, not dropped-this-round)."""
+        (not mid-round, not dropped-this-round) whose device is not leased
+        to ANOTHER task (with one task this filter is a no-op, keeping the
+        pool — and hence the RNG sequence — bit-identical)."""
         return sorted(cid for cid, reg in
                       self._registrations.get(task.task_id, {}).items()
-                      if reg.status == "registered")
+                      if reg.status == "registered"
+                      and self.directory.leasable(cid, task.task_id))
 
     def ready(self, task: TaskRecord) -> bool:
         return len(self.available(task)) >= task.config.clients_per_round
@@ -96,6 +120,7 @@ class SelectionService:
         regs = self._registrations[task.task_id]
         for cid in cohort:
             regs[cid].status = "selected"
+        self.directory.acquire(task.task_id, cohort)
         self._deadlines[task.task_id] = deadline
         return sorted(cohort)
 
@@ -110,6 +135,7 @@ class SelectionService:
         regs = self._registrations[task.task_id]
         for cid in picks:
             regs[cid].status = "selected"
+        self.directory.acquire(task.task_id, picks)
         return sorted(picks)
 
     def round_deadline(self, task: TaskRecord):
@@ -123,6 +149,7 @@ class SelectionService:
         """Return a member to the selectable pool without it counting as a
         round dropout (selection-time unavailability, pre-training)."""
         self.mark(task, client_id, "registered")
+        self.directory.release(task.task_id, [client_id])
 
     def reset_round(self, task: TaskRecord):
         """Start-of-round lifecycle reset: participants still 'selected',
@@ -133,6 +160,7 @@ class SelectionService:
         for reg in self._registrations.get(task.task_id, {}).values():
             if reg.status in ("selected", "done", "dropped"):
                 reg.status = "registered"
+        self.directory.release_all(task.task_id)
         self._deadlines.pop(task.task_id, None)
 
     def statuses(self, task: TaskRecord) -> dict:
@@ -142,5 +170,8 @@ class SelectionService:
     def drop(self, task: TaskRecord, client_id: str):
         """Mid-round dropout: the member leaves the round (its group's
         masks get recovered server-side) but re-enters the pool at the
-        next ``reset_round``."""
+        next ``reset_round``. Its lease is released immediately — a
+        disconnected device is physically free for other tasks even
+        though THIS task keeps it out of its own pool until reset."""
         self.mark(task, client_id, "dropped")
+        self.directory.release(task.task_id, [client_id])

@@ -17,8 +17,11 @@ from repro.core import dp as dp_mod
 from repro.core import privacy_engine as pe
 from repro.core.orchestrator import (AsyncServer, ClientResult,
                                      run_sync_round, run_sync_round_stacked)
+from repro.core.secure_agg import AggregationRefused
 from repro.core.strategies import FedBuff, make_strategy
 from repro.fl.auth import AuthenticationService
+from repro.fl.directory import DeviceDirectory
+from repro.fl.registry import ModelRegistry
 from repro.fl.selection import SelectionService
 from repro.fl.task import TaskConfig, TaskRecord, TaskStatus
 from repro.fl.telemetry import MetricsStore
@@ -55,10 +58,18 @@ class _RoundCollector:
 
 
 class ManagementService:
-    def __init__(self, seed: int = 0):
+    def __init__(self, seed: int = 0,
+                 directory: DeviceDirectory | None = None):
         self.auth = AuthenticationService()
-        self.selection = SelectionService(self.auth, seed=seed)
+        # the shared physical fleet; inject one directory into several
+        # services (or, normally, several tasks into ONE service under a
+        # ControlPlane) to make leases mutually exclusive across tasks
+        self.directory = directory if directory is not None \
+            else DeviceDirectory()
+        self.selection = SelectionService(self.auth, seed=seed,
+                                          directory=self.directory)
         self.metrics = MetricsStore()
+        self.registry = ModelRegistry()
         self._tasks: dict[int, TaskRecord] = {}
         self._strategies: dict[int, Any] = {}
         self._strategy_state: dict[int, Any] = {}
@@ -71,9 +82,21 @@ class ManagementService:
     # ------------------------------------------------------------------
 
     def create_task(self, config: TaskConfig, initial_model,
-                    user: str = "default-user") -> int:
+                    user: str = "default-user", deploy: bool = True) -> int:
+        """Create a task: CREATED, then (by default) deployed to RUNNING.
+
+        ``deploy=False`` leaves the task in CREATED — the control-plane
+        lifecycle, where :meth:`deploy_task` is the explicit transition to
+        RUNNING (the ``ControlPlane`` creates tasks this way). The default
+        keeps the one-call convenience path for single-task use.
+
+        The task id is derived from the service's own task store (max +
+        1), NOT the module-global counter in ``fl.task`` — that counter
+        resets in every fresh process, so a CLI session reloaded from disk
+        would mint ids that silently overwrite persisted tasks."""
         config.owner = user
-        rec = TaskRecord(config=config, model=initial_model)
+        rec = TaskRecord(config=config, model=initial_model,
+                         task_id=max(self._tasks, default=0) + 1)
         self._tasks[rec.task_id] = rec
         kw = dict(config.strategy_kwargs)
         if config.mode == "async":
@@ -88,8 +111,19 @@ class ManagementService:
         if config.dp.mechanism != "off":
             self._accountants[rec.task_id] = dp_mod.RdpAccountant(
                 config.dp, sample_rate=1.0)  # rate set per round below
-        rec.status = TaskStatus.RUNNING
+        if deploy:
+            self.deploy_task(rec.task_id, user=user)
         return rec.task_id
+
+    def deploy_task(self, task_id: int, user: str = "default-user"):
+        """CREATED -> RUNNING. The explicit lifecycle step between task
+        definition and the scheduler granting it rounds."""
+        self._check_perm(task_id, user)
+        rec = self._tasks[task_id]
+        if rec.status is not TaskStatus.CREATED:
+            raise ValueError(f"task {task_id} is {rec.status.value}, "
+                             "only CREATED tasks can be deployed")
+        rec.status = TaskStatus.RUNNING
 
     def get_task(self, task_id: int) -> TaskRecord:
         return self._tasks[task_id]
@@ -107,9 +141,18 @@ class ManagementService:
         if not self._tasks[task_id].can_manage(user):
             raise PermissionError_(f"user {user!r} cannot manage {task_id}")
 
+    def _abort_round(self, task_id: int):
+        """Discard any in-flight round: drop the collector and release
+        every device lease so other tasks can select them immediately —
+        pausing/cancelling one task must never pin fleet capacity."""
+        rec = self._tasks[task_id]
+        self._collectors.pop(task_id, None)
+        self.selection.reset_round(rec)
+
     def pause_task(self, task_id: int, user="default-user"):
         self._check_perm(task_id, user)
         self._tasks[task_id].status = TaskStatus.PAUSED
+        self._abort_round(task_id)   # round is re-selected on resume
 
     def resume_task(self, task_id: int, user="default-user"):
         self._check_perm(task_id, user)
@@ -118,6 +161,7 @@ class ManagementService:
     def cancel_task(self, task_id: int, user="default-user"):
         self._check_perm(task_id, user)
         self._tasks[task_id].status = TaskStatus.CANCELLED
+        self._abort_round(task_id)
 
     def epsilon(self, task_id: int):
         acc = self._accountants.get(task_id)
@@ -128,9 +172,13 @@ class ManagementService:
     # ------------------------------------------------------------------
 
     def register_client(self, task_id: int, client_id: str, device_info: dict,
-                        certificate=None) -> bool:
+                        certificate=None, profile=None) -> bool:
+        """``profile``: optional ``population.DeviceProfile`` recorded in
+        the shared device directory (availability windows, dropout hazard
+        — physical facts, shared by every task the device enrolls in)."""
         return self.selection.register(self._tasks[task_id], client_id,
-                                       device_info, certificate)
+                                       device_info, certificate,
+                                       profile=profile)
 
     def model_snapshot(self, task_id: int) -> bytes:
         return serialize_pytree(self._tasks[task_id].model)
@@ -195,10 +243,7 @@ class ManagementService:
                 # every member dropped: void the round (no survivors to
                 # aggregate); dropped members re-enter the pool at the
                 # next begin_round
-                self._collectors.pop(task_id, None)
-                self.metrics.log(rec.task_id, rec.round_idx, round_voided=1,
-                                 n_selected=len(coll.cohort), n_survived=0,
-                                 n_dropped=len(coll.dropped))
+                self._void_round(rec, coll)
             return True
         return False
 
@@ -263,11 +308,16 @@ class ManagementService:
         strategy = self._strategies[task_id]
         state = self._strategy_state[task_id]
         metrics_list = metrics_list or [{} for _ in cids]
-        rec.model, state, info = run_sync_round_stacked(
-            rec.model, strategy, state, cids, stacked_updates, metrics_list,
-            round_idx=coll.round_idx, vg_size=rec.config.vg_size,
-            secure_cfg=rec.config.secure_agg, dp_cfg=rec.config.dp,
-            cohort=list(coll.cohort) if coll.dropped else None)
+        try:
+            rec.model, state, info = run_sync_round_stacked(
+                rec.model, strategy, state, cids, stacked_updates,
+                metrics_list,
+                round_idx=coll.round_idx, vg_size=rec.config.vg_size,
+                secure_cfg=rec.config.secure_agg, dp_cfg=rec.config.dp,
+                cohort=list(coll.cohort) if coll.dropped else None)
+        except AggregationRefused:
+            self._void_round(rec, coll)
+            return True
         self._strategy_state[task_id] = state
         for cid in cids:
             self.selection.mark(rec, cid, "done")
@@ -365,14 +415,30 @@ class ManagementService:
         self._collectors[task_id] = _RoundCollector(rec.round_idx, cohort)
         return rec.round_idx, cohort
 
+    def _void_round(self, rec: TaskRecord, coll: _RoundCollector):
+        """Close the round WITHOUT aggregating: either nobody survived, or
+        secure aggregation REFUSED the survivor set (every virtual group
+        fell below ``min_survivors_per_vg`` — releasing such an aggregate
+        would hand bare updates to the aggregator). The round index is not
+        consumed; the next ``begin_round`` re-selects."""
+        self._collectors.pop(rec.task_id, None)
+        self.metrics.log(rec.task_id, rec.round_idx, round_voided=1,
+                         n_selected=len(coll.cohort),
+                         n_survived=len(coll.results),
+                         n_dropped=len(coll.dropped))
+
     def _run_sync_aggregation(self, rec: TaskRecord, coll: _RoundCollector):
         strategy = self._strategies[rec.task_id]
         state = self._strategy_state[rec.task_id]
-        rec.model, state, info = run_sync_round(
-            rec.model, strategy, state, coll.results,
-            round_idx=coll.round_idx, vg_size=rec.config.vg_size,
-            secure_cfg=rec.config.secure_agg, dp_cfg=rec.config.dp,
-            cohort=list(coll.cohort) if coll.dropped else None)
+        try:
+            rec.model, state, info = run_sync_round(
+                rec.model, strategy, state, coll.results,
+                round_idx=coll.round_idx, vg_size=rec.config.vg_size,
+                secure_cfg=rec.config.secure_agg, dp_cfg=rec.config.dp,
+                cohort=list(coll.cohort) if coll.dropped else None)
+        except AggregationRefused:
+            self._void_round(rec, coll)
+            return
         self._strategy_state[rec.task_id] = state
         # the round is closed — drop the collector so a straggling retry
         # (a late duplicate submit after a dropout report completed the
@@ -401,5 +467,41 @@ class ManagementService:
                         else metrics.get("n", rec.config.clients_per_round))
             acc.q = min(1.0, per_step / pool)
             acc.step()
-        if rec.round_idx >= rec.config.n_rounds:
-            rec.status = TaskStatus.COMPLETED
+        self.check_stop(rec.task_id)
+
+    def check_stop(self, task_id: int):
+        """Evaluate the task's stop criteria; on the first one met,
+        COMPLETE the task, record the reason and publish the final model
+        (+ config, history, realized epsilon) to the model registry.
+        Returns the stop reason, or None while still running. Called after
+        every round; simulators may also call it after logging eval
+        metrics (a ``target_metric`` may be an eval-time series)."""
+        rec = self._tasks[task_id]
+        if rec.status is TaskStatus.COMPLETED:
+            return rec.stop_reason
+        if rec.status is not TaskStatus.RUNNING:
+            return None
+        cfg = rec.config
+        reason = None
+        if rec.round_idx >= cfg.n_rounds:
+            reason = "n_rounds"
+        if reason is None and cfg.epsilon_budget is not None:
+            eps = self.epsilon(task_id)
+            if eps is not None and eps >= cfg.epsilon_budget:
+                reason = "epsilon_budget"
+        if reason is None and cfg.target_metric is not None \
+                and cfg.target_value is not None:
+            v = self.metrics.latest(task_id, cfg.target_metric)
+            if v is not None and (v >= cfg.target_value
+                                  if cfg.target_mode == "max"
+                                  else v <= cfg.target_value):
+                reason = "target_metric"
+        if reason is None:
+            return None
+        rec.status = TaskStatus.COMPLETED
+        rec.stop_reason = reason
+        # free any leftover leases/round state: a completed task must not
+        # pin devices other tasks could use
+        self._abort_round(task_id)
+        self.registry.publish(rec, epsilon=self.epsilon(task_id))
+        return reason

@@ -450,6 +450,300 @@ def run_async_simulation(service: ManagementService, task_id: int,
     return SimResult(durations, history, clock, len(durations))
 
 
+@dataclass
+class MultiTaskResult:
+    """Outcome of :func:`run_multi_task_simulation`."""
+    per_task: dict                # task_id -> SimResult
+    total_time: float             # global virtual clock at exit
+    lease_seconds: dict           # task_id -> device-seconds consumed
+    rounds_granted: dict          # task_id -> scheduler grants
+    fairness: dict                # ControlPlane.fairness() snapshot
+    lease_overlaps: list          # DeviceDirectory.overlap_violations()
+
+
+@dataclass
+class _TaskRun:
+    """Per-task simulator state (the fields every single-task driver kept
+    as locals, one bundle per concurrent task)."""
+    rng: object                   # np.random.RandomState — durations/hazard
+    churn: bool = False
+    registered: list = field(default_factory=list)
+    durations: list = field(default_factory=list)
+    history: list = field(default_factory=list)
+    clock: float = 0.0            # this task's own end-of-activity time
+    steps: int = 0                # sync rounds that aggregated
+    dropped_total: int = 0
+    voided: int = 0               # consecutive voided rounds (stall guard)
+    idle: int = 0                 # consecutive empty-cohort probes
+    stalled: bool = False
+    store: object = None          # async: _SnapshotStore
+    last_step_t: float = 0.0      # async: previous server-step time
+
+
+def run_multi_task_simulation(plane, clients: dict[str, SimClient],
+                              server_agg_s: float = 0.05, seed: int = 0,
+                              eval_fns: dict | None = None,
+                              engines: dict | None = None,
+                              trainers: dict | None = None,
+                              churn: dict | None = None,
+                              on_round: Callable | None = None,
+                              max_virtual_s: float = 1e9
+                              ) -> MultiTaskResult:
+    """Drive EVERY deployed task of a :class:`~repro.fl.scheduler
+    .ControlPlane` concurrently over ONE shared client fleet under a
+    single virtual clock — the paper's FLaaS scenario.
+
+    Sync rounds are scheduler-granted (``plane.grant_round`` picks the
+    next task by priority + weighted lease-seconds fairness; selection
+    leases the cohort's devices so concurrent sync cohorts never share a
+    device) and complete as events on the global clock; async tasks step
+    whenever their FedBuff buffer fills, event-driven exactly like
+    ``run_async_simulation``, without leasing. Per-task knobs are dicts
+    keyed by task_id: ``eval_fns`` (model -> metric), ``engines``
+    (CohortEngine sync fast path), ``trainers`` (``fn(cid, blob, round)``
+    overriding ``SimClient.trainer`` — for tasks whose model structure
+    differs from the fleet default), ``churn`` (force the churn posture;
+    default auto per task, like ``run_sync_simulation``).
+
+    Parity contract (tested): with exactly ONE task, per-round durations,
+    history, metrics and the final model are bit-identical to
+    ``run_sync_simulation`` / ``run_async_simulation`` on a plain service
+    — per-task duration RNGs are seeded ``seed + task position`` so the
+    first task draws the same stream a single-task run would.
+    """
+    from repro.checkpoint import deserialize_pytree
+    service = plane.service
+    eval_fns = eval_fns or {}
+    engines = engines or {}
+    trainers = trainers or {}
+    churn = churn or {}
+
+    task_ids = sorted(t.task_id for t in service.list_tasks()
+                      if t.status.value in ("running", "paused"))
+    runs: dict[int, _TaskRun] = {}
+    certs: dict[str, dict] = {}
+    for pos, tid in enumerate(task_ids):
+        rec = service.get_task(tid)
+        tr = _TaskRun(rng=np.random.RandomState(seed + pos))
+        auto_churn = any(sc.profile is not None
+                         for sc in clients.values()) \
+            or rec.config.overprovision > 1.0
+        tr.churn = bool(churn.get(tid, auto_churn))
+        for cid, sc in clients.items():
+            if cid not in certs:
+                sdk = FederatedLearningClient.get_instance(
+                    cid, device_info=sc.device_info)
+                certs[cid] = sdk._authority.issue(
+                    cid, os=sc.device_info.get("os", "linux"))
+            if service.register_client(tid, cid, sc.device_info,
+                                       certs[cid], profile=sc.profile):
+                tr.registered.append(cid)
+        runs[tid] = tr
+
+    def _train(tid, cid, blob, round_idx):
+        fn = trainers.get(tid)
+        out = fn(cid, blob, round_idx) if fn is not None \
+            else clients[cid].trainer(blob, round_idx)
+        return _normalize_trainer_output(out)
+
+    q: list = []      # (time, seq, payload) — seq breaks time ties FIFO
+    seq = 0
+
+    # async tasks: every registered client trains continuously from t=0
+    for tid in task_ids:
+        rec, tr = service.get_task(tid), runs[tid]
+        if rec.config.mode != "async":
+            continue
+        tr.store = _SnapshotStore()
+        tr.store.put(0, service.model_snapshot(tid))
+        for cid in tr.registered:
+            heapq.heappush(q, (clients[cid].duration(tr.rng), seq,
+                               ("async", tid, cid, 0)))
+            tr.store.ref(0)
+            seq += 1
+
+    def _stall(tid, tr):
+        tr.stalled = True
+        plane.defer(tid, float("inf"))   # never grant again
+
+    def _schedule_sync(grant, clock):
+        """A freshly granted round: probe/backfill (churn), draw member
+        durations + dropouts NOW (the physical timeline is decided at
+        round start) and push the round-end event."""
+        nonlocal seq
+        tid = grant.task_id
+        rec, tr = service.get_task(tid), runs[tid]
+        deadline = rec.config.round_timeout_s
+        cohort = list(grant.cohort)
+        if tr.churn:
+            unavailable = [c for c in cohort
+                           if not clients[c].available_at(clock)]
+            if unavailable:
+                cohort = service.backfill_round(
+                    tid, unavailable,
+                    available=lambda cid: clients[cid].available_at(clock))
+            if not cohort:
+                # nobody reachable at this instant: release and retry one
+                # deadline later (bounded — a fleet that is NEVER inside
+                # its windows stalls the task, mirroring the single-task
+                # driver's idle cap)
+                plane.complete_round(tid, now=clock)
+                tr.idle += 1
+                tr.clock = clock + deadline
+                if tr.idle >= 64:
+                    _stall(tid, tr)
+                else:
+                    plane.defer(tid, clock + deadline)
+                return
+        tr.idle = 0
+        dur = {cid: clients[cid].duration(tr.rng) for cid in cohort}
+        if tr.churn:
+            dropped = {cid for cid in cohort
+                       if dur[cid] > deadline
+                       or clients[cid].drops_during(
+                           min(dur[cid], deadline), tr.rng)}
+        else:
+            dropped = set()
+        survivors = [c for c in cohort if c not in dropped]
+        if survivors:
+            round_wall = (deadline if dropped
+                          else max(dur[c] for c in survivors))
+            round_wall += server_agg_s
+        else:
+            round_wall = deadline     # voided: no aggregation wall time
+        heapq.heappush(q, (clock + round_wall, seq,
+                           ("sync", tid, grant, cohort, survivors,
+                            sorted(dropped), round_wall)))
+        seq += 1
+
+    def _finish_sync(t_end, tid, grant, cohort, survivors, dropped,
+                     round_wall):
+        rec, tr = service.get_task(tid), runs[tid]
+        if plane.active_grant(tid) is not grant:
+            return   # round was aborted (pause/cancel) mid-flight
+        round_idx = grant.round_idx
+        tr.dropped_total += len(dropped)
+        for cid in dropped:
+            service.report_dropout(tid, cid)
+        if not survivors:
+            tr.voided += 1
+            tr.durations.append(round_wall)
+            tr.history.append({"round_voided": 1})
+            tr.clock = t_end
+            plane.complete_round(tid, now=t_end)
+            if tr.voided >= 64:
+                _stall(tid, tr)
+            return
+        tr.voided = 0
+        blob = service.model_snapshot(tid)
+        engine = engines.get(tid)
+        if engine is not None:
+            if engine.template is None:
+                raise ValueError(
+                    "CohortEngine.template must be the model pytree "
+                    "structure to use the simulator fast path")
+            params = deserialize_pytree(blob, like=engine.template)
+            stacked, losses, n_samples = engine.run_cohort_stacked(
+                params, survivors, round_idx)
+            losses = np.asarray(losses)
+            if not service.submit_cohort(
+                    tid, survivors, stacked, n_samples,
+                    [{"loss": float(l)} for l in losses]):
+                raise RuntimeError(
+                    f"bulk submission rejected for task {tid} round "
+                    f"{round_idx} (survivors {survivors})")
+        else:
+            for cid in survivors:
+                update, n_samples, metrics = _train(tid, cid, blob,
+                                                    round_idx)
+                service.submit_update(tid, cid, update, n_samples, metrics)
+        aggregated = rec.round_idx > round_idx   # False: privacy refusal
+        plane.complete_round(tid, now=t_end)
+        tr.steps += int(aggregated)
+        tr.durations.append(round_wall)
+        tr.clock = t_end
+        row = dict(rec.history[-1]) if rec.history else {}
+        eval_fn = eval_fns.get(tid)
+        if eval_fn is not None:
+            row["eval_accuracy"] = float(eval_fn(rec.model))
+            service.metrics.log(tid, round_idx + 1,
+                                eval_accuracy=row["eval_accuracy"],
+                                round_duration_s=round_wall)
+            service.check_stop(tid)   # target_metric may be eval-time
+        tr.history.append(row)
+        if on_round is not None:
+            on_round(tid, round_idx, t_end)
+
+    def _handle_async(t, tid, cid, version):
+        nonlocal seq
+        rec, tr = service.get_task(tid), runs[tid]
+        if rec.status.value != "running":
+            return
+        blob, served = tr.store.serve(
+            version, rec.round_idx,
+            lambda: service.model_snapshot(tid))
+        update, n_samples, metrics = _train(tid, cid, blob, served)
+        stepped = service.submit_update(tid, cid, update, n_samples,
+                                        metrics, update_version=served)
+        t_eff = t
+        if stepped:
+            t_eff = t + server_agg_s
+            tr.durations.append(t_eff - tr.last_step_t)
+            tr.last_step_t = t_eff
+            tr.store.put(rec.round_idx, service.model_snapshot(tid))
+            row = {}
+            eval_fn = eval_fns.get(tid)
+            if eval_fn is not None:
+                row["eval_accuracy"] = float(eval_fn(rec.model))
+                service.metrics.log(tid, rec.round_idx,
+                                    eval_accuracy=row["eval_accuracy"],
+                                    round_duration_s=tr.durations[-1])
+                service.check_stop(tid)
+            tr.history.append(row)
+        tr.clock = t_eff
+        if rec.status.value == "running":
+            heapq.heappush(q, (t_eff + clients[cid].duration(tr.rng), seq,
+                               ("async", tid, cid, rec.round_idx)))
+            tr.store.ref(rec.round_idx)
+            seq += 1
+
+    clock = 0.0
+    while clock <= max_virtual_s:
+        plane.directory.now = clock
+        while True:
+            grant = plane.grant_round(now=clock)
+            if grant is None:
+                break
+            _schedule_sync(grant, clock)
+        if not q:
+            nxt = plane.next_deferred(clock)
+            if nxt is None:
+                break                 # nothing pending, nothing deferred
+            clock = nxt
+            continue
+        t, _, payload = heapq.heappop(q)
+        clock = max(clock, t)
+        plane.directory.now = clock
+        if payload[0] == "sync":
+            _finish_sync(clock, *payload[1:])
+        else:
+            _handle_async(clock, *payload[1:])
+
+    per_task = {}
+    for tid in task_ids:
+        rec, tr = service.get_task(tid), runs[tid]
+        steps = (len(tr.durations) if rec.config.mode == "async"
+                 else tr.steps)
+        per_task[tid] = SimResult(tr.durations, tr.history, tr.clock,
+                                  steps, n_dropped_total=tr.dropped_total)
+    return MultiTaskResult(
+        per_task=per_task, total_time=clock,
+        lease_seconds=dict(plane.directory.lease_seconds),
+        rounds_granted=dict(plane.rounds_granted),
+        fairness=plane.fairness(),
+        lease_overlaps=plane.directory.overlap_violations())
+
+
 def make_heterogeneous_clients(n: int, trainer_factory, seed: int = 0,
                                base_train_s: float = 1.0,
                                straggler_frac: float = 0.1):

@@ -69,8 +69,24 @@ class TaskConfig:
                                             # the target under churn
     permissions: tuple = ()                 # user ids allowed to manage
     owner: str = "default-user"
+    # -- stop criteria beyond n_rounds (control-plane lifecycle) --------
+    target_metric: Optional[str] = None     # e.g. "eval_accuracy" / "loss"
+    target_value: Optional[float] = None    # threshold that completes the task
+    target_mode: str = "max"                # "max": metric >= value stops;
+                                            # "min": metric <= value stops
+    epsilon_budget: Optional[float] = None  # complete when the task's RDP
+                                            # accountant reaches this epsilon
+    # -- scheduling policy (read by fl.scheduler.ControlPlane) ----------
+    priority: int = 0                       # higher tier is granted first
+    weight: float = 1.0                     # fair share within a tier
+                                            # (lease-seconds are normalized
+                                            # by this weight)
 
 
+# Fallback id source for records built outside a ManagementService. The
+# service derives ids from its own task store (max + 1) instead: this
+# module-global counter resets in every fresh process, so a reloaded CLI
+# session would hand out ids that collide with persisted tasks.
 _task_counter = itertools.count(1)
 
 
@@ -83,6 +99,9 @@ class TaskRecord:
     round_idx: int = 0
     created_at: float = field(default_factory=time.time)
     history: list = field(default_factory=list)   # RoundInfo-like dicts
+    stop_reason: Optional[str] = None       # why the task COMPLETED:
+                                            # n_rounds | target_metric |
+                                            # epsilon_budget
 
     def can_manage(self, user: str) -> bool:
         return user == self.config.owner or user in self.config.permissions

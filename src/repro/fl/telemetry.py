@@ -50,5 +50,23 @@ class MetricsStore:
             "rounds_voided": int(sum(voided)),
         }
 
+    def fleet_summary(self, task_ids=None) -> dict:
+        """Cross-task fleet view: per-task round/churn totals plus the
+        fleet-wide aggregate — what a FLaaS operator watches across every
+        tenant, not one task's series."""
+        ids = sorted(self._rows) if task_ids is None else list(task_ids)
+        per_task = {tid: self.churn_summary(tid) for tid in ids}
+        total = {k: 0 for k in ("rounds", "selected", "survived", "dropped",
+                                "rounds_voided")}
+        recovery = 0.0
+        for s in per_task.values():
+            for k in total:
+                total[k] += s[k]
+            recovery += s["recovery_s"]
+        total["recovery_s"] = recovery
+        total["dropout_rate"] = (total["dropped"] / total["selected"]
+                                 if total["selected"] else 0.0)
+        return {"tasks": len(ids), "per_task": per_task, "fleet": total}
+
     def to_json(self, task_id: int) -> str:
         return json.dumps(self._rows[task_id])

@@ -265,7 +265,10 @@ class TestRecoveryCore:
         dropped = {cohort[j] for j in drop}
         seed = jnp.asarray([11, 4], jnp.uint32)
         key = jax.random.PRNGKey(n)
-        scfg = sa.SecureAggConfig(bits=bits)
+        # min_survivors_per_vg=1: this test pins the exact-recovery math
+        # for ANY survivor pattern (down to a single survivor), so the
+        # privacy floor's group-voiding must be out of the way
+        scfg = sa.SecureAggConfig(bits=bits, min_survivors_per_vg=1)
         dcfg = dp_mod.DPConfig(mechanism=mech, clip_norm=0.5,
                                noise_multiplier=noise)
         ser, vec = _churn_both_paths(updates, cohort, plan, dropped, seed,
@@ -359,7 +362,8 @@ class TestChurnRounds:
                     params, strat, strat.init_state(params),
                     self._results(updates, survivors),
                     round_idx=2, vg_size=4, cohort=cohort, dp_cfg=dcfg,
-                    secure_cfg=sa.SecureAggConfig(vectorized=vect))
+                    secure_cfg=sa.SecureAggConfig(
+                        vectorized=vect, min_survivors_per_vg=1))
                 outs[vect] = np.asarray(p["w"])
                 assert info.n_selected == 11
                 assert info.n_dropped == 3
@@ -467,7 +471,12 @@ class TestServiceChurn:
         """A dropout report closes the round; a survivor's duplicate
         upload arriving after that must be rejected, not re-run the whole
         aggregation (double model step + double accountant count)."""
-        svc, tid = _mk_service_task(n_rounds=2, cpr=2, n_clients=4)
+        # min_survivors_per_vg=1: the round must CLOSE via a 1-survivor
+        # aggregation (under the default floor it would be voided instead,
+        # which exercises a different path)
+        svc, tid = _mk_service_task(
+            n_rounds=2, cpr=2, n_clients=4,
+            secure_agg=sa.SecureAggConfig(min_survivors_per_vg=1))
         _, cohort = svc.begin_round(tid)
         assert not svc.submit_update(tid, cohort[0],
                                      {"w": jnp.ones(8) * 0.1}, 10)

@@ -43,7 +43,9 @@ def test_recovered_aggregate_bit_identical(n, vg_size, bits, size, mech,
     survivors = [c for c in cohort if c not in dropped]
     round_seed = jnp.asarray(rng.randint(0, 2**31, 2), jnp.uint32)
     key = jax.random.PRNGKey(seed)
-    scfg = sa.SecureAggConfig(bits=bits)
+    # the property quantifies over ALL drop patterns (incl. single-survivor
+    # groups), so the min_survivors_per_vg privacy floor is disabled here
+    scfg = sa.SecureAggConfig(bits=bits, min_survivors_per_vg=1)
     dcfg = dp_mod.DPConfig(mechanism=mech, clip_norm=0.5,
                            noise_multiplier=noise)
 

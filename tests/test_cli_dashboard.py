@@ -51,3 +51,55 @@ def test_cli_session_round_trip(tmp_path):
     assert svc.list_tasks()[0].status.value == "paused"
     cli.main(["--session", session, "list"])
     cli.main(["--session", session, "show", str(tasks[0].task_id)])
+
+
+def test_cli_session_reload_never_reuses_task_ids(tmp_path):
+    """Regression: task ids must be derived from the service's task
+    store, not a process-global counter — a create in a FRESH process
+    against a reloaded session used to collide with (and clobber) the
+    task created before the save."""
+    from repro.fl import cli
+    session = str(tmp_path / "s.pkl")
+    cli.main(["--session", session, "create", "--task-name", "first",
+              "--app-name", "a", "--workflow", "w",
+              "--clients-per-round", "2", "--rounds", "2"])
+    # a fresh python process has a fresh module counter; simulate it by
+    # resetting the fallback counter before the reloaded create
+    import repro.fl.task as task_mod
+    task_mod._task_counter = 0
+    cli.main(["--session", session, "create", "--task-name", "second",
+              "--app-name", "a", "--workflow", "w",
+              "--clients-per-round", "2", "--rounds", "2"])
+    svc = cli.load_service(session)
+    tasks = svc.list_tasks()
+    assert len(tasks) == 2
+    names = {t.config.task_name for t in tasks}
+    assert names == {"first", "second"}
+    ids = [t.task_id for t in tasks]
+    assert len(set(ids)) == 2
+
+
+def test_cli_deploy_and_registry(tmp_path, capsys):
+    from repro.fl import cli
+    session = str(tmp_path / "s.pkl")
+    cli.main(["--session", session, "create", "--task-name", "t1",
+              "--app-name", "a", "--workflow", "w",
+              "--clients-per-round", "2", "--rounds", "2", "--no-deploy"])
+    svc = cli.load_service(session)
+    assert svc.list_tasks()[0].status.value == "created"
+    tid = svc.list_tasks()[0].task_id
+    cli.main(["--session", session, "deploy", str(tid)])
+    svc = cli.load_service(session)
+    assert svc.list_tasks()[0].status.value == "running"
+    cli.main(["--session", session, "registry"])
+    assert "no published models" in capsys.readouterr().out
+    cli.main(["--session", session, "fleet"])
+    assert "fleet:" in capsys.readouterr().out
+
+
+def test_fleet_render():
+    from repro.fl.dashboard import render_fleet
+    from repro.fl.scheduler import ControlPlane
+    svc, tid = _svc_with_task()
+    out = render_fleet(ControlPlane(svc))
+    assert "spam-demo" in out and "registry: 0" in out

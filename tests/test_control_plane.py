@@ -1,0 +1,571 @@
+"""Multi-tenant control plane: shared device directory (leases +
+no-overlap audit), fair round scheduler, task lifecycle -> model
+registry, the min-survivor refusal path, and the acceptance invariants —
+single-task-through-scheduler bit-parity and the multi-task e2e over one
+shared population."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dp as dp_mod
+from repro.core import privacy_engine as pe
+from repro.core import secure_agg as sa
+from repro.core.secure_agg import AggregationRefused
+from repro.core.virtual_groups import make_virtual_groups
+from repro.fl import (AttestationAuthority, ControlPlane, DeviceDirectory,
+                      LeaseConflict, ManagementService, ModelRegistry,
+                      PopulationConfig, TaskConfig, TaskStatus,
+                      make_population_clients, run_async_simulation,
+                      run_multi_task_simulation, run_sync_simulation,
+                      sample_population)
+from repro.fl.simulator import make_heterogeneous_clients
+
+MODEL0 = {"w": np.zeros(8, np.float32)}
+
+
+def _trainer_factory(i):
+    def trainer(blob, round_idx):
+        return {"w": np.full(8, 0.01, np.float32)}, 10, {"loss": 1.0}
+    return trainer
+
+
+def _register_all(svc, tid, n, prefix="c"):
+    auth = AttestationAuthority()
+    for i in range(n):
+        cid = f"{prefix}{i}"
+        assert svc.register_client(
+            tid, cid, {"os": "linux", "n_samples": 10, "battery": 0.9},
+            auth.issue(cid))
+
+
+# ---------------------------------------------------------------------------
+# device directory
+# ---------------------------------------------------------------------------
+
+class TestDeviceDirectory:
+    def test_register_idempotent_and_enrollment(self):
+        d = DeviceDirectory()
+        d.register("a", {"os": "linux"}, task_id=1)
+        d.register("a", {"battery": 0.5}, task_id=2)
+        assert len(d) == 1 and "a" in d
+        e = d._devices["a"]
+        assert e.device_info == {"os": "linux", "battery": 0.5}
+        assert d.enrolled(1) == ["a"] and d.enrolled(2) == ["a"]
+
+    def test_lease_exclusivity_and_conflict(self):
+        d = DeviceDirectory()
+        for cid in "abc":
+            d.register(cid)
+        d.acquire(1, ["a", "b"])
+        assert d.leased_by("a") == 1 and d.leasable("a", 1)
+        assert not d.leasable("a", 2)
+        with pytest.raises(LeaseConflict):
+            d.acquire(2, ["c", "a"])        # atomic: c must NOT be leased
+        assert d.leased_by("c") is None
+        d.acquire(2, ["c"])
+        assert d.leased(2) == ["c"]
+
+    def test_release_charges_lease_seconds(self):
+        d = DeviceDirectory()
+        d.register("a"), d.register("b")
+        d.now = 10.0
+        d.acquire(1, ["a", "b"])
+        d.now = 16.0
+        assert d.release(1, ["a"]) == pytest.approx(6.0)
+        d.now = 20.0
+        d.release_all(1)
+        assert d.lease_seconds[1] == pytest.approx(6.0 + 10.0)
+        assert d.leased() == []
+        assert len(d.lease_log) == 2
+
+    def test_overlap_audit(self):
+        d = DeviceDirectory(log_leases=True)
+        d.register("a")
+        d.now = 0.0
+        d.acquire(1, ["a"])
+        d.now = 5.0
+        d.release_all(1)
+        d.acquire(2, ["a"])                # starts exactly at t=5: half-open
+        d.now = 9.0
+        d.release_all(2)
+        assert d.overlap_violations() == []
+        # forge an overlapping interval: the audit must catch it
+        d.lease_log.append(("a", 3, 4.0, 6.0))
+        assert d.overlap_violations()
+
+    def test_availability_from_profile(self):
+        pop = sample_population(
+            4, seed=0, cfg=PopulationConfig(avail_duty=0.5, avail_period=10))
+        d = DeviceDirectory()
+        for p in pop:
+            d.register(p.client_id, profile=p)
+        p0 = pop[0]
+        t_in = next(t * 0.37 for t in range(400)
+                    if p0.available_at(t * 0.37))
+        t_out = next(t * 0.37 for t in range(400)
+                     if not p0.available_at(t * 0.37))
+        assert d.available_at(p0.client_id, t_in)
+        assert not d.available_at(p0.client_id, t_out)
+        d.register("noprofile")
+        assert d.available_at("noprofile", 123.0)   # no profile => always
+
+    def test_selection_is_a_directory_view(self):
+        """Two services sharing one directory cannot co-select a device."""
+        directory = DeviceDirectory()
+        svc = ManagementService(directory=directory)
+        t1 = svc.create_task(TaskConfig("t1", "a", "w", clients_per_round=3,
+                                        n_rounds=2, vg_size=2), MODEL0)
+        t2 = svc.create_task(TaskConfig("t2", "a", "w", clients_per_round=3,
+                                        n_rounds=2, vg_size=2), MODEL0)
+        _register_all(svc, t1, 6)
+        _register_all(svc, t2, 6)
+        _, cohort1 = svc.begin_round(t1)
+        _, cohort2 = svc.begin_round(t2)
+        assert not set(cohort1) & set(cohort2)
+        assert sorted(directory.leased()) == sorted(cohort1 + cohort2)
+
+
+# ---------------------------------------------------------------------------
+# lifecycle -> registry
+# ---------------------------------------------------------------------------
+
+class TestLifecycle:
+    def test_created_deploy_running(self):
+        svc = ManagementService()
+        tid = svc.create_task(TaskConfig("t", "a", "w", clients_per_round=2,
+                                         n_rounds=1, vg_size=2), MODEL0,
+                              deploy=False)
+        assert svc.get_task(tid).status is TaskStatus.CREATED
+        _register_all(svc, tid, 2)
+        ri, cohort = svc.begin_round(tid)
+        assert cohort == []                 # CREATED tasks get no cohort
+        svc.deploy_task(tid)
+        assert svc.get_task(tid).status is TaskStatus.RUNNING
+        with pytest.raises(ValueError, match="only CREATED"):
+            svc.deploy_task(tid)
+
+    def test_n_rounds_stop_publishes_registry(self):
+        svc = ManagementService()
+        tid = svc.create_task(TaskConfig("t", "a", "w", clients_per_round=2,
+                                         n_rounds=2, vg_size=2), MODEL0)
+        _register_all(svc, tid, 4)
+        for _ in range(2):
+            _, cohort = svc.begin_round(tid)
+            for cid in cohort:
+                svc.submit_update(tid, cid, {"w": jnp.ones(8) * 0.1}, 10)
+        rec = svc.get_task(tid)
+        assert rec.status is TaskStatus.COMPLETED
+        assert rec.stop_reason == "n_rounds"
+        assert tid in svc.registry
+        entry = svc.registry.get(tid)
+        assert entry.rounds_run == 2 and entry.stop_reason == "n_rounds"
+        np.testing.assert_array_equal(
+            entry.model(like=MODEL0)["w"], np.asarray(rec.model["w"]))
+        assert entry.config["secure_agg"]["min_survivors_per_vg"] == 2
+
+    def test_epsilon_budget_stop(self):
+        dp = dp_mod.DPConfig(mechanism="local", clip_norm=0.5,
+                             noise_multiplier=1.0)
+        svc = ManagementService()
+        tid = svc.create_task(
+            TaskConfig("t", "a", "w", clients_per_round=4, n_rounds=50,
+                       vg_size=2, dp=dp, epsilon_budget=1e-6), MODEL0)
+        _register_all(svc, tid, 4)
+        _, cohort = svc.begin_round(tid)
+        for cid in cohort:
+            svc.submit_update(tid, cid, {"w": jnp.ones(8) * 0.1}, 10)
+        rec = svc.get_task(tid)
+        assert rec.status is TaskStatus.COMPLETED
+        assert rec.stop_reason == "epsilon_budget"
+        assert svc.registry.get(tid).epsilon >= 1e-6
+        assert rec.round_idx == 1           # stopped long before n_rounds
+
+    def test_target_metric_stop_max_and_min(self):
+        for mode, target, hit, miss in (("max", 0.8, 0.9, 0.5),
+                                        ("min", 0.2, 0.1, 0.5)):
+            svc = ManagementService()
+            tid = svc.create_task(
+                TaskConfig("t", "a", "w", clients_per_round=2, n_rounds=50,
+                           vg_size=2, target_metric="eval_accuracy",
+                           target_value=target, target_mode=mode), MODEL0)
+            _register_all(svc, tid, 2)
+            svc.metrics.log(tid, 1, eval_accuracy=miss)
+            assert svc.check_stop(tid) is None
+            svc.metrics.log(tid, 2, eval_accuracy=hit)
+            assert svc.check_stop(tid) == "target_metric"
+            assert svc.get_task(tid).status is TaskStatus.COMPLETED
+
+    def test_registry_save_load_round_trip(self, tmp_path):
+        svc = ManagementService()
+        tid = svc.create_task(TaskConfig("t", "a", "w", clients_per_round=2,
+                                         n_rounds=1, vg_size=2), MODEL0)
+        _register_all(svc, tid, 2)
+        _, cohort = svc.begin_round(tid)
+        for cid in cohort:
+            svc.submit_update(tid, cid, {"w": jnp.ones(8) * 0.1}, 10)
+        paths = svc.registry.save(str(tmp_path))
+        assert len(paths) == 2
+        reg2 = ModelRegistry.load(str(tmp_path))
+        assert len(reg2) == 1 and tid in reg2
+        e1, e2 = svc.registry.get(tid), reg2.get(tid)
+        assert e1.model_blob == e2.model_blob       # byte-for-byte
+        assert e2.stop_reason == "n_rounds"
+        assert e2.history == e1.history
+
+    def test_pause_aborts_inflight_round_and_frees_leases(self):
+        svc = ManagementService()
+        tid = svc.create_task(TaskConfig("t", "a", "w", clients_per_round=3,
+                                         n_rounds=3, vg_size=2), MODEL0)
+        _register_all(svc, tid, 6)
+        _, cohort = svc.begin_round(tid)
+        assert svc.directory.leased(tid) == sorted(cohort)
+        svc.pause_task(tid)
+        assert svc.directory.leased(tid) == []
+        # the late upload of the aborted round is a no-op
+        svc.resume_task(tid)
+        assert not svc.submit_update(tid, cohort[0],
+                                     {"w": jnp.ones(8) * 0.1}, 10)
+        assert svc.get_task(tid).round_idx == 0
+
+
+# ---------------------------------------------------------------------------
+# min-survivors-per-VG refusal path (satellite: trust-model floor)
+# ---------------------------------------------------------------------------
+
+class TestMinSurvivorsPerVG:
+    def _updates(self, n, size=16, seed=0):
+        rng = np.random.RandomState(seed)
+        return {f"c{i:03d}": jnp.asarray(
+            rng.uniform(-1, 1, size).astype(np.float32)) for i in range(n)}
+
+    def test_subthreshold_group_voided_equals_fully_dropped_group(self):
+        """A group cut to 1 survivor contributes NOTHING: serial result
+        == the same round with that survivor also dropped."""
+        updates = self._updates(8)
+        cohort = sorted(updates)
+        plan = make_virtual_groups(cohort, 4, seed=1)
+        grp = plan.groups[0].members
+        seed = jnp.asarray([3, 9], jnp.uint32)
+        # group 0 loses all but one member
+        surv_floor = {c: updates[c] for c in cohort
+                      if c not in set(grp[1:])}
+        out_floor = sa.secure_aggregate_survivors(
+            surv_floor, plan, seed,
+            cfg=sa.SecureAggConfig(min_survivors_per_vg=2))
+        # reference: the lone survivor also dropped, floor disabled
+        surv_none = {c: updates[c] for c in cohort if c not in set(grp)}
+        out_none = sa.secure_aggregate_survivors(
+            surv_none, plan, seed,
+            cfg=sa.SecureAggConfig(min_survivors_per_vg=1))
+        np.testing.assert_array_equal(np.asarray(out_floor),
+                                      np.asarray(out_none))
+
+    def test_vectorized_voiding_matches_serial_and_counts(self):
+        updates = self._updates(8)
+        cohort = sorted(updates)
+        plan = make_virtual_groups(cohort, 4, seed=1)
+        grp = set(plan.groups[0].members[1:])
+        dropped = grp
+        scfg = sa.SecureAggConfig(min_survivors_per_vg=2)
+        dcfg = dp_mod.DPConfig()
+        key = jax.random.PRNGKey(0)
+        seed = jnp.asarray([3, 9], jnp.uint32)
+        serial = sa.secure_aggregate_survivors(
+            {c: updates[c] for c in cohort if c not in dropped}, plan,
+            seed, cfg=scfg)
+        alive = np.asarray([c not in dropped for c in cohort])
+        flat = jnp.stack([updates[c] for c in cohort])
+        stats = {}
+        vect = pe.aggregate_flat(flat, plan, cohort, seed, secure_cfg=scfg,
+                                 dp_cfg=dcfg, key=key, alive=alive,
+                                 stats=stats)
+        np.testing.assert_array_equal(np.asarray(serial), np.asarray(vect))
+        assert stats["n_voided_groups"] == 1
+        # the voided group's lone survivor counts as dropped downstream
+        assert stats["n_dropped"] == len(dropped) + 1
+
+    def test_whole_round_refused_when_all_groups_below_floor(self):
+        updates = self._updates(4)
+        cohort = sorted(updates)
+        plan = make_virtual_groups(cohort, 2, seed=0)
+        seed = jnp.asarray([1, 2], jnp.uint32)
+        # one survivor per 2-group: every group below the floor of 2
+        survivors = {plan.groups[0].members[0]:
+                     updates[plan.groups[0].members[0]],
+                     plan.groups[1].members[0]:
+                     updates[plan.groups[1].members[0]]}
+        with pytest.raises(AggregationRefused, match="min_survivors"):
+            sa.secure_aggregate_survivors(survivors, plan, seed)
+        alive = np.asarray([c in survivors for c in cohort])
+        with pytest.raises(AggregationRefused, match="refused"):
+            pe.aggregate_flat(jnp.stack([updates[c] for c in cohort]),
+                              plan, cohort, seed, alive=alive)
+        assert issubclass(AggregationRefused, ValueError)
+
+    def test_service_voids_refused_round(self):
+        """cpr=2, vg=2: one dropout leaves a 1-survivor group -> the
+        service voids the round instead of crashing or aggregating."""
+        svc = ManagementService()
+        tid = svc.create_task(TaskConfig("t", "a", "w", clients_per_round=2,
+                                         n_rounds=2, vg_size=2), MODEL0)
+        _register_all(svc, tid, 4)
+        ri, cohort = svc.begin_round(tid)
+        assert not svc.report_dropout(tid, cohort[0])
+        assert svc.submit_update(tid, cohort[1],
+                                 {"w": jnp.ones(8) * 0.1}, 10)
+        rec = svc.get_task(tid)
+        assert rec.round_idx == ri          # round NOT consumed
+        assert rec.status is TaskStatus.RUNNING
+        np.testing.assert_array_equal(np.asarray(rec.model["w"]), 0.0)
+        assert svc.metrics.latest(tid, "round_voided") == 1.0
+        # next round with full survival completes normally
+        _, cohort2 = svc.begin_round(tid)
+        for cid in cohort2:
+            svc.submit_update(tid, cid, {"w": jnp.ones(8) * 0.1}, 10)
+        assert svc.get_task(tid).round_idx == ri + 1
+
+
+# ---------------------------------------------------------------------------
+# scheduler: fairness + single-task bit-parity (acceptance)
+# ---------------------------------------------------------------------------
+
+class TestScheduler:
+    def _plane_with(self, n_sync, cpr=4, n_rounds=3, **kw):
+        plane = ControlPlane(seed=0)
+        tids = [plane.create_task(
+            TaskConfig(f"t{i}", "a", "w", clients_per_round=cpr,
+                       n_rounds=n_rounds, vg_size=2, **kw), MODEL0)
+            for i in range(n_sync)]
+        for t in tids:
+            plane.deploy(t)
+        return plane, tids
+
+    def test_priority_tier_wins(self):
+        plane, (t1, t2) = self._plane_with(2)
+        plane.service.get_task(t2).config.priority = 5
+        for t in (t1, t2):
+            _register_all(plane.service, t, 8)
+        assert plane.next_task(0.0) == t2
+
+    def test_deficit_round_robin_alternates(self):
+        plane, (t1, t2) = self._plane_with(2, n_rounds=4)
+        svc = plane.service
+        for t in (t1, t2):
+            _register_all(svc, t, 8)
+        order = []
+        for _ in range(4):
+            grant = plane.grant_round(now=plane.directory.now)
+            assert grant is not None
+            order.append(grant.task_id)
+            for cid in grant.cohort:
+                svc.submit_update(grant.task_id, cid,
+                                  {"w": jnp.ones(8) * 0.1}, 10)
+            plane.directory.now += 1.0
+            plane.complete_round(grant.task_id)
+        # equal weights, equal cohorts: strict alternation
+        assert order == [t1, t2, t1, t2]
+
+    def test_weighted_share(self):
+        """weight=3 task gets ~3x the lease-seconds of weight=1."""
+        plane, (t1, t2) = self._plane_with(2, n_rounds=40)
+        svc = plane.service
+        svc.get_task(t2).config.weight = 3.0
+        for t in (t1, t2):
+            _register_all(svc, t, 4)   # 4 devices each, cpr=4: serialized
+        for _ in range(24):
+            grant = plane.grant_round(now=plane.directory.now)
+            if grant is None:
+                break
+            for cid in grant.cohort:
+                svc.submit_update(grant.task_id, cid,
+                                  {"w": jnp.ones(8) * 0.1}, 10)
+            plane.directory.now += 1.0
+            plane.complete_round(grant.task_id)
+        fair = plane.fairness()
+        ratio = fair[t2]["lease_seconds"] / fair[t1]["lease_seconds"]
+        assert 2.0 < ratio < 4.0, fair
+
+    def test_single_task_sync_parity_with_direct_path(self):
+        """Acceptance: one task through grant/complete == direct
+        run_sync_simulation, bit for bit (durations, clock, model)."""
+        svc_a = ManagementService(seed=0)
+        ta = svc_a.create_task(
+            TaskConfig("p", "a", "w", clients_per_round=4, n_rounds=3,
+                       vg_size=2), MODEL0)
+        ra = run_sync_simulation(
+            svc_a, ta, make_heterogeneous_clients(8, _trainer_factory),
+            seed=0)
+        plane = ControlPlane(seed=0)
+        tb = plane.create_task(
+            TaskConfig("p", "a", "w", clients_per_round=4, n_rounds=3,
+                       vg_size=2), MODEL0)
+        plane.deploy(tb)
+        rb = run_multi_task_simulation(
+            plane, make_heterogeneous_clients(8, _trainer_factory), seed=0)
+        assert ra.round_durations == rb.per_task[tb].round_durations
+        assert ra.total_time == rb.per_task[tb].total_time
+        np.testing.assert_array_equal(
+            np.asarray(svc_a.get_task(ta).model["w"]),
+            np.asarray(plane.service.get_task(tb).model["w"]))
+
+    def test_single_task_async_parity_with_direct_path(self):
+        svc_a = ManagementService(seed=0)
+        ta = svc_a.create_task(
+            TaskConfig("q", "a", "w", clients_per_round=4, n_rounds=3,
+                       mode="async", buffer_size=4), MODEL0)
+        ra = run_async_simulation(
+            svc_a, ta, make_heterogeneous_clients(8, _trainer_factory),
+            seed=0)
+        plane = ControlPlane(seed=0)
+        tb = plane.create_task(
+            TaskConfig("q", "a", "w", clients_per_round=4, n_rounds=3,
+                       mode="async", buffer_size=4), MODEL0)
+        plane.deploy(tb)
+        rb = run_multi_task_simulation(
+            plane, make_heterogeneous_clients(8, _trainer_factory), seed=0)
+        assert ra.round_durations == rb.per_task[tb].round_durations
+        assert ra.total_time == rb.per_task[tb].total_time
+        np.testing.assert_array_equal(
+            np.asarray(svc_a.get_task(ta).model["w"]),
+            np.asarray(plane.service.get_task(tb).model["w"]))
+
+
+# ---------------------------------------------------------------------------
+# concurrent multi-task simulation (acceptance)
+# ---------------------------------------------------------------------------
+
+class TestMultiTask:
+    def _mixed_plane(self, dp_on_first=False):
+        plane = ControlPlane(seed=0)
+        dp = dp_mod.DPConfig(mechanism="local", clip_norm=0.5,
+                             noise_multiplier=1.0) if dp_on_first \
+            else dp_mod.DPConfig()
+        t1 = plane.create_task(
+            TaskConfig("s1", "a", "w", clients_per_round=4, n_rounds=3,
+                       vg_size=2, dp=dp), MODEL0)
+        t2 = plane.create_task(
+            TaskConfig("s2", "a", "w", clients_per_round=4, n_rounds=3,
+                       vg_size=2), MODEL0)
+        t3 = plane.create_task(
+            TaskConfig("a1", "a", "w", clients_per_round=4, n_rounds=3,
+                       mode="async", buffer_size=4), MODEL0)
+        for t in (t1, t2, t3):
+            plane.deploy(t)
+        return plane, (t1, t2, t3)
+
+    def test_two_sync_one_async_interleave_no_overlap(self):
+        plane, (t1, t2, t3) = self._mixed_plane(dp_on_first=True)
+        clients = make_heterogeneous_clients(12, _trainer_factory)
+        res = run_multi_task_simulation(plane, clients, seed=0)
+        svc = plane.service
+        for t in (t1, t2, t3):
+            assert svc.get_task(t).status is TaskStatus.COMPLETED
+            assert svc.get_task(t).stop_reason == "n_rounds"
+            assert t in plane.registry
+        assert res.lease_overlaps == []
+        # async tasks hold no leases
+        assert t3 not in res.lease_seconds
+        assert res.lease_seconds[t1] > 0 and res.lease_seconds[t2] > 0
+        # accountants are isolated: only the DP task spends epsilon
+        assert svc.epsilon(t1) is not None and svc.epsilon(t1) > 0
+        assert svc.epsilon(t2) is None and svc.epsilon(t3) is None
+        # metrics are isolated per task
+        for t in (t1, t2):
+            s = svc.metrics.churn_summary(t)
+            assert s["rounds"] == 3 and s["selected"] == 12
+        fleet = svc.metrics.fleet_summary([t1, t2, t3])
+        assert fleet["fleet"]["selected"] == 24      # async logs no cohorts
+        assert fleet["tasks"] == 3
+
+    def test_pause_and_cancel_never_stall_the_fleet(self):
+        plane, (t1, t2, t3) = self._mixed_plane()
+        paused = []
+
+        def on_round(tid, round_idx, t_end):
+            if not paused and tid == t1:
+                plane.pause(t1)
+                plane.cancel(t3)
+                paused.append(tid)
+
+        clients = make_heterogeneous_clients(12, _trainer_factory)
+        res = run_multi_task_simulation(plane, clients, seed=0,
+                                        on_round=on_round)
+        svc = plane.service
+        assert svc.get_task(t2).status is TaskStatus.COMPLETED
+        assert svc.get_task(t1).status is TaskStatus.PAUSED
+        assert svc.get_task(t3).status is TaskStatus.CANCELLED
+        assert res.lease_overlaps == []
+        assert plane.directory.leased() == []   # nothing pinned
+        assert len(res.per_task[t1].round_durations) < 3
+
+    def test_fairness_telemetry_populated(self):
+        plane, tids = self._mixed_plane()
+        clients = make_heterogeneous_clients(12, _trainer_factory)
+        res = run_multi_task_simulation(plane, clients, seed=0)
+        for t in tids[:2]:
+            f = res.fairness[t]
+            assert f["rounds_granted"] == 3
+            assert f["normalized"] == pytest.approx(
+                f["lease_seconds"] / f["weight"])
+
+    def test_shared_population_with_churn_profiles(self):
+        """Mixed tasks over a PROFILED population (availability windows +
+        hazards): still completes, still zero lease overlaps."""
+        pop = sample_population(
+            20, seed=7, cfg=PopulationConfig(mean_hazard=0.02,
+                                             avail_duty=0.8,
+                                             avail_period=16.0))
+        clients = make_population_clients(pop, _trainer_factory)
+        plane = ControlPlane(seed=0)
+        tids = [plane.create_task(
+            TaskConfig(f"t{i}", "a", "w", clients_per_round=4, n_rounds=3,
+                       vg_size=2, overprovision=1.5, round_timeout_s=30.0),
+            MODEL0) for i in range(2)]
+        tids.append(plane.create_task(
+            TaskConfig("a0", "a", "w", clients_per_round=4, n_rounds=3,
+                       mode="async", buffer_size=4), MODEL0))
+        for t in tids:
+            plane.deploy(t)
+        res = run_multi_task_simulation(plane, clients, seed=0)
+        assert res.lease_overlaps == []
+        done = [t for t in tids
+                if plane.service.get_task(t).status is TaskStatus.COMPLETED]
+        assert len(done) == 3, plane.fairness()
+
+
+def test_e2e_three_tenants_over_10k_device_fleet():
+    """ISSUE acceptance: >= 3 concurrent tasks (mixed sync/async) over ONE
+    shared 10k-device population, all completing to their stop criteria,
+    zero overlapping sync leases, fairness measurable."""
+    pop = sample_population(10_000, seed=1,
+                            cfg=PopulationConfig(mean_hazard=0.005,
+                                                 avail_duty=0.9,
+                                                 avail_period=48.0))
+    clients = make_population_clients(pop, _trainer_factory)
+    plane = ControlPlane(seed=0)
+    t1 = plane.create_task(
+        TaskConfig("tenant-a", "a", "w", clients_per_round=64, n_rounds=3,
+                   vg_size=8, overprovision=1.25, round_timeout_s=60.0),
+        MODEL0)
+    t2 = plane.create_task(
+        TaskConfig("tenant-b", "b", "w", clients_per_round=32, n_rounds=4,
+                   vg_size=8, weight=2.0, overprovision=1.25,
+                   round_timeout_s=60.0), MODEL0)
+    t3 = plane.create_task(
+        TaskConfig("tenant-c", "c", "w", clients_per_round=32, n_rounds=4,
+                   mode="async", buffer_size=32), MODEL0)
+    for t in (t1, t2, t3):
+        plane.deploy(t)
+    res = run_multi_task_simulation(plane, clients, seed=0)
+    svc = plane.service
+    for t in (t1, t2, t3):
+        rec = svc.get_task(t)
+        assert rec.status is TaskStatus.COMPLETED, (t, rec.status)
+        assert rec.stop_reason == "n_rounds"
+        assert t in plane.registry
+    assert res.lease_overlaps == []
+    assert plane.directory.overlap_violations() == []
+    fair = res.fairness
+    assert fair[t1]["lease_seconds"] > 0 and fair[t2]["lease_seconds"] > 0
+    assert len(plane.directory) == 10_000

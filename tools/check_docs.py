@@ -80,8 +80,36 @@ def check_verify_commands() -> list:
     return errors
 
 
+_PY_TOKEN = re.compile(r"`([\w./-]+\.py)`")
+# bare module names in the README must exist under one of these trees
+_CODE_DIRS = ("src", "tools", "benchmarks", "examples")
+
+
+def check_module_map() -> list:
+    """Every backtick-quoted ``*.py`` token in README.md must reference a
+    real file: path-qualified tokens resolve from the repo root; bare
+    names must exist somewhere under the code trees. Keeps the module-map
+    table honest when files are renamed or split."""
+    errors = []
+    readme = ROOT / "README.md"
+    bare_index = None
+    for token in sorted(set(_PY_TOKEN.findall(readme.read_text()))):
+        if "/" in token:
+            if not (ROOT / token).exists():
+                errors.append(f"README.md: module-map references missing "
+                              f"file `{token}`")
+            continue
+        if bare_index is None:
+            bare_index = {p.name for d in _CODE_DIRS
+                          for p in (ROOT / d).rglob("*.py")}
+        if token not in bare_index:
+            errors.append(f"README.md: `{token}` not found under any of "
+                          f"{'/'.join(_CODE_DIRS)}")
+    return errors
+
+
 def main() -> int:
-    errors = check_links() + check_verify_commands()
+    errors = check_links() + check_verify_commands() + check_module_map()
     docs = ", ".join(str(f.relative_to(ROOT)) for f in doc_files())
     if errors:
         print(f"docs-check FAILED ({docs}):")
