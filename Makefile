@@ -6,14 +6,20 @@
 # (dropout recovery) are exercised end to end.
 PY ?= python
 
-.PHONY: verify test deps docs-check bench-cohort bench-secureagg-smoke \
-	bench-async-smoke bench-dropout-smoke bench-multitask-smoke
+.PHONY: verify test deps docs-check bench bench-cohort \
+	bench-secureagg-smoke bench-async-smoke bench-dropout-smoke \
+	bench-multitask-smoke bench-fleet-smoke
 
 deps:
 	$(PY) -m pip install -r requirements-dev.txt
 
 verify: deps test docs-check bench-secureagg-smoke bench-async-smoke \
-	bench-dropout-smoke bench-multitask-smoke
+	bench-dropout-smoke bench-multitask-smoke bench-fleet-smoke
+
+# the full suite: every figure/claim bench, results persisted to
+# benchmarks/results/BENCH_<suite>.json (host info + git rev included)
+bench:
+	PYTHONPATH=src $(PY) -m benchmarks.run
 
 docs-check:
 	$(PY) tools/check_docs.py
@@ -35,3 +41,6 @@ bench-dropout-smoke:
 
 bench-multitask-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.bench_multitask --quick
+
+bench-fleet-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.bench_fleet --quick

@@ -1,0 +1,223 @@
+"""Million-device fleet: what the array-backed control plane costs.
+
+The fleet-scale ISSUE acceptance, measured end to end:
+
+1. **Register** — bulk-enroll a ``PopulationArrays`` fleet (10^6 devices
+   in the full run) into a task through ``ManagementService.
+   register_fleet``: one vectorized pass instead of 10^6 SDK calls.
+2. **Select** — cohort selection at growing sizes (1k/4k/16k) against the
+   full fleet, including the whole-fleet ``available_mask`` filter; plus
+   a head-to-head against an inline reconstruction of the legacy
+   dict+sorted-comprehension pool at 10^5 devices (the full run asserts
+   the >= 10x speedup the ISSUE requires).
+3. **Round** — one complete sync round (begin_round -> synthetic stacked
+   updates -> submit_cohort) with a 16,384-client cohort streamed through
+   4096-wide compiled waves (``SecureAggConfig.wave_clients``).
+4. **Wave parity** — the streamed aggregate at cohort 4096 / wave 1024 is
+   asserted BIT-IDENTICAL to the single-dispatch aggregate.
+
+Run: ``PYTHONPATH=src python -m benchmarks.bench_fleet [--quick]``.
+"""
+from __future__ import annotations
+
+import argparse
+import random
+import time
+
+import numpy as np
+
+from repro.fl import ManagementService, PopulationArrays, TaskConfig
+from repro.fl.task import SelectionCriteria
+
+MODEL_DIM = 256
+
+# the bulk enrollment path matches criteria once against the fleet
+# template; attestation is per-device by design, so the bench opts out
+_CRIT = SelectionCriteria(require_attestation=False)
+
+
+def _model0():
+    return {"w": np.zeros(MODEL_DIM, np.float32)}
+
+
+def _legacy_pool_select(regs: dict, leases: dict, task_id: int, k: int,
+                        rng) -> list:
+    """The pre-refactor selectable-pool computation, verbatim in shape
+    (see the old ``SelectionService.available``): a sorted comprehension
+    over the per-task registration dict, with a per-device status
+    attribute check AND a per-device ``directory.leasable`` lease-dict
+    probe, then ``random.Random.sample`` over the materialized list. This
+    is the baseline the array path must beat 10x at 10^5 devices."""
+    pool = sorted(cid for cid, reg in regs.items()
+                  if reg.status == "registered"
+                  and (leases.get(cid) is None
+                       or leases[cid].task_id == task_id))
+    return sorted(rng.sample(pool, min(k, len(pool))))
+
+
+def bench_register(svc, task_id, pop) -> float:
+    t0 = time.perf_counter()
+    n = svc.register_fleet(task_id, pop)
+    dt = time.perf_counter() - t0
+    assert n == len(pop), (n, len(pop))
+    return dt
+
+
+def bench_select(svc, rec, pop, cohort_sizes, repeat=3):
+    """Per-cohort-size mean select+reset seconds against the full fleet,
+    with the vectorized availability mask in the loop (the realistic
+    selection-time filter)."""
+    out = []
+    for k in cohort_sizes:
+        rec.config.clients_per_round = k
+        times = []
+        for r in range(repeat):
+            avail = pop.available_mask(float(r))
+            t0 = time.perf_counter()
+            cohort = svc.selection.select_cohort(rec, available=avail)
+            times.append(time.perf_counter() - t0)
+            assert len(cohort) == k, (len(cohort), k)
+            svc.selection.reset_round(rec)
+        out.append((k, sum(times) / len(times)))
+    return out
+
+
+def bench_select_vs_legacy(n_devices: int, k: int, repeat=3):
+    """Array select vs the legacy dict-pool reference at the same fleet
+    size, same draw target. Returns (array_s, legacy_s)."""
+    svc = ManagementService(seed=0)
+    tid = svc.create_task(
+        TaskConfig("fleet-legacy", "bench", "wf", clients_per_round=k,
+                   n_rounds=1, vg_size=8, selection=_CRIT), _model0())
+    rec = svc.get_task(tid)
+    pop = PopulationArrays.sample(n_devices, seed=1)
+    svc.register_fleet(tid, pop)
+    arr_t = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        svc.selection.select_cohort(rec)
+        arr_t.append(time.perf_counter() - t0)
+        svc.selection.reset_round(rec)
+    from repro.fl.selection import Registration
+    regs = {cid: Registration(cid, {}) for cid in pop.ids}
+    leases: dict = {}
+    rng = random.Random(0)
+    leg_t = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        picks = _legacy_pool_select(regs, leases, tid, k, rng)
+        leg_t.append(time.perf_counter() - t0)
+        assert len(picks) == k
+    return min(arr_t), min(leg_t)
+
+
+def bench_round(svc, rec, cohort_size: int, wave: int) -> dict:
+    """One full sync round at ``cohort_size`` with the privacy pipeline
+    streaming ``wave``-client compiled waves; synthetic stacked updates
+    stand in for training (this measures the CONTROL+AGGREGATION plane)."""
+    from dataclasses import replace
+    rec.config.clients_per_round = cohort_size
+    rec.config.secure_agg = replace(rec.config.secure_agg,
+                                    wave_clients=wave)
+    t0 = time.perf_counter()
+    round_idx, cohort = svc.begin_round(rec.task_id)
+    select_s = time.perf_counter() - t0
+    assert len(cohort) == cohort_size
+    rng = np.random.RandomState(round_idx)
+    stacked = {"w": rng.standard_normal(
+        (len(cohort), MODEL_DIM)).astype(np.float32) * 0.01}
+    t0 = time.perf_counter()
+    ok = svc.submit_cohort(rec.task_id, cohort, stacked, n_samples=10)
+    agg_s = time.perf_counter() - t0
+    assert ok, "round did not complete"
+    return {"select_s": select_s, "agg_s": agg_s,
+            "round_idx": rec.round_idx}
+
+
+def wave_parity(cohort=4096, wave=1024, dim=64, vg=8) -> bool:
+    """Streamed-wave aggregate == single-dispatch aggregate, bit for bit
+    (the acceptance shape: cohort 4096, wave 1024)."""
+    import jax.numpy as jnp
+    from repro.core import privacy_engine as pe
+    from repro.core.secure_agg import SecureAggConfig
+    from repro.core.virtual_groups import make_virtual_groups
+    cids = [f"c{i:05d}" for i in range(cohort)]
+    plan = make_virtual_groups(cids, vg, seed=3)
+    flat = jnp.asarray(np.random.RandomState(7).standard_normal(
+        (cohort, dim)).astype(np.float32) * 0.02)
+    seed = (11, 13)
+    one = pe.aggregate_flat(flat, plan, cids, seed,
+                            secure_cfg=SecureAggConfig())
+    waved = pe.aggregate_flat(flat, plan, cids, seed,
+                              secure_cfg=SecureAggConfig(wave_clients=wave))
+    return bool(np.array_equal(np.asarray(one), np.asarray(waved)))
+
+
+def main(quick=False):
+    if quick:
+        fleet, cohorts = 20_000, [256, 1024]
+        legacy_n, legacy_k = 5_000, 128
+        round_cohort, round_wave = 1024, 256
+        parity_kw = dict(cohort=512, wave=128)
+    else:
+        fleet, cohorts = 1_000_000, [1024, 4096, 16384]
+        legacy_n, legacy_k = 100_000, 256
+        round_cohort, round_wave = 16384, 4096
+        parity_kw = dict(cohort=4096, wave=1024)
+    rows = []
+    print(f"# fleet-scale control plane: {fleet} devices")
+    pop = PopulationArrays.sample(fleet, seed=0)
+    svc = ManagementService(seed=0)
+    tid = svc.create_task(
+        TaskConfig("fleet", "bench", "wf", clients_per_round=cohorts[0],
+                   n_rounds=10**6, vg_size=8, selection=_CRIT), _model0())
+    rec = svc.get_task(tid)
+
+    reg_s = bench_register(svc, tid, pop)
+    print(f"#   register_fleet: {fleet} devices in {reg_s:.3f}s "
+          f"({fleet / reg_s / 1e6:.2f} M dev/s)")
+    rows.append((f"fleet{fleet}_register_s", reg_s,
+                 f"bulk enroll, {fleet / reg_s / 1e6:.2f} M devices/s"))
+
+    for k, sel_s in bench_select(svc, rec, pop, cohorts):
+        print(f"#   select cohort {k:6d}: {sel_s * 1e3:.1f} ms")
+        rows.append((f"fleet{fleet}_select{k}_ms", sel_s * 1e3,
+                     "select_cohort + availability mask + reset, mean of 3"))
+
+    arr_s, leg_s = bench_select_vs_legacy(legacy_n, legacy_k)
+    speedup = leg_s / arr_s
+    print(f"#   select @ {legacy_n} devices: array {arr_s * 1e3:.1f} ms vs "
+          f"legacy dict pool {leg_s * 1e3:.1f} ms -> {speedup:.1f}x")
+    rows.append((f"select{legacy_n}_speedup_x", speedup,
+                 f"array {arr_s * 1e3:.2f} ms vs legacy sorted-dict "
+                 f"{leg_s * 1e3:.2f} ms at cohort {legacy_k}"))
+    if not quick:
+        assert speedup >= 10.0, f"array select only {speedup:.1f}x faster"
+
+    r = bench_round(svc, rec, round_cohort, round_wave)
+    print(f"#   round @ cohort {round_cohort} (wave {round_wave}): "
+          f"select {r['select_s']:.2f}s, secure-agg {r['agg_s']:.2f}s")
+    rows.append((f"fleet{fleet}_round{round_cohort}_agg_s", r["agg_s"],
+                 f"submit_cohort w/ wave_clients={round_wave}, "
+                 f"select={r['select_s']:.2f}s"))
+
+    ok = wave_parity(**parity_kw)
+    assert ok, "waved aggregate diverged from single dispatch"
+    print(f"#   wave parity (cohort {parity_kw['cohort']}, wave "
+          f"{parity_kw['wave']}): bit-identical")
+    rows.append(("wave_parity_bitident", 1.0,
+                 f"cohort {parity_kw['cohort']} / wave {parity_kw['wave']} "
+                 "streamed == single dispatch"))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small fleet — the CI / make-verify smoke run")
+    args = ap.parse_args()
+    rows = main(quick=args.quick)
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    from benchmarks.common import write_bench_json
+    print(f"# wrote {write_bench_json('fleet', rows, quick=args.quick)}")

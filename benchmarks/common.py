@@ -6,6 +6,8 @@ from __future__ import annotations
 
 import json
 import os
+import platform
+import subprocess
 import time
 import zlib
 
@@ -15,6 +17,32 @@ import numpy as np
 
 RESULTS_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                            "results")
+
+
+def _git_rev() -> str:
+    """Short commit hash of the tree the bench ran in ('unknown' outside a
+    checkout) — the provenance stamp for every BENCH_*.json."""
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except OSError:
+        return "unknown"
+
+
+def host_info() -> dict:
+    """Machine fingerprint persisted with every bench run — perf numbers
+    without the box they ran on are not comparable across the trajectory."""
+    return {
+        "platform": platform.platform(),
+        "machine": platform.machine(),
+        "python": platform.python_version(),
+        "cpu_count": os.cpu_count(),
+        "jax": jax.__version__,
+        "jax_backend": jax.default_backend(),
+    }
 
 
 def write_bench_json(bench: str, rows, quick=False, out_dir=None) -> str:
@@ -53,7 +81,8 @@ def write_bench_json(bench: str, rows, quick=False, out_dir=None) -> str:
         out_rows.append(row)
     with open(path, "w") as f:
         json.dump({"bench": bench, "quick": bool(quick),
-                   "unix_time": time.time(), "rows": out_rows}, f, indent=1)
+                   "unix_time": time.time(), "git_rev": _git_rev(),
+                   "host": host_info(), "rows": out_rows}, f, indent=1)
         f.write("\n")
     return path
 

@@ -2,13 +2,16 @@
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig11_left,...]
 
-Prints ``name,us_per_call,derived`` CSV rows (plus '#' commentary lines).
+Prints ``name,us_per_call,derived`` CSV rows (plus '#' commentary lines)
+and persists every suite's rows to ``benchmarks/results/BENCH_<suite>.json``
+(host info + git rev + delta vs the previous committed run).
 
   bench_spam      -> Fig. 11 left   (FL vs FL+DP accuracy, epsilon)
   bench_async     -> Fig. 11 center (sync vs async vs over-participation)
   bench_scaling   -> Fig. 11 right  (duration vs concurrent clients)
   bench_secureagg -> §3.1.2 VG cost model (O(n^2) -> O(n*g))
   bench_kernels   -> kernel microbenchmarks
+  bench_fleet     -> fleet-scale control plane (10^6 devices, wave agg)
 """
 from __future__ import annotations
 
@@ -16,8 +19,10 @@ import argparse
 import sys
 import time
 
-from benchmarks import (bench_async, bench_cohort, bench_kernels,
-                        bench_scaling, bench_secureagg, bench_spam)
+from benchmarks import (bench_async, bench_cohort, bench_fleet,
+                        bench_kernels, bench_scaling, bench_secureagg,
+                        bench_spam)
+from benchmarks.common import write_bench_json
 
 SUITES = [
     ("fig11_left", bench_spam),
@@ -26,6 +31,7 @@ SUITES = [
     ("secureagg_vg", bench_secureagg),
     ("kernels", bench_kernels),
     ("cohort_engine", bench_cohort),
+    ("fleet", bench_fleet),
 ]
 
 
@@ -46,6 +52,7 @@ def main() -> None:
             rows = mod.main(quick=args.quick)
             for r in rows:
                 print(",".join(str(x) for x in r))
+            print(f"# wrote {write_bench_json(name, rows, args.quick)}")
             print(f"# suite {name} done in {time.time() - t0:.1f}s")
         except Exception as e:  # noqa: BLE001
             failures += 1

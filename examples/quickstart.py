@@ -41,9 +41,9 @@ def main():
     def eval_and_report(model):
         acc = world.test_accuracy(model)
         task = svc.get_task(task_id)
-        regs = svc.selection._registrations[task_id]
+        statuses = svc.selection.statuses(task)
         for cid in sorted(clients):
-            st = regs[cid].status if cid in regs else "idle"
+            st = statuses.get(cid, "idle")
             print(pane_line(cid, st, f"round={task.round_idx} "
                                      f"acc={acc:.3f}"))
         print("+" + "-" * 49 + "+")

@@ -167,12 +167,21 @@ class CohortEngine:
     """
 
     def __init__(self, spec: LocalTrainSpec, batch_fn: Callable,
-                 template_params=None, *, mesh=None, axis: str = "data"):
+                 template_params=None, *, mesh=None, axis: str = "data",
+                 wave_size: int | None = None):
+        # wave_size: stream cohorts LARGER than this through fixed-width
+        # compiled waves (the last wave pads by repeating its final member
+        # and the pad rows are dropped) — one compiled shape serves any
+        # cohort size, bounding both compile count and device memory at
+        # 10^4-10^5-client cohorts. Per-client outputs are bit-identical
+        # to the single-dispatch path (vmap width does not change per-row
+        # float bits — the serial/vmap parity property). None/0 = off.
         self.spec = spec
         self.batch_fn = batch_fn
         self.template = template_params
         self.mesh = mesh
         self.axis = axis
+        self.wave_size = wave_size
         self._local = jax.jit(make_local_update(spec))
         self._fns: dict = {}
 
@@ -203,12 +212,43 @@ class CohortEngine:
         vectorized privacy pipeline (``privacy_engine.aggregate_stacked`` /
         ``ManagementService.submit_cohort``) without the unstack-to-host
         round trip that ``run_cohort`` pays."""
+        w = self.wave_size
+        if w and len(client_ids) > w:
+            return self._run_waves(params, list(client_ids), round_idx, w)
         batches = stack_trees([self.batch_fn(cid, round_idx)
                                for cid in client_ids])
         if self.mesh is not None:
             self._check_divisible(len(client_ids))
         deltas, losses = self._cohort_fn(False)(params, batches)
         return deltas, losses, self._n_samples(batches, stacked=True)
+
+    def _run_waves(self, params, client_ids, round_idx: int, w: int):
+        """Stream an oversized cohort through fixed-width ``w``-client
+        waves of the shared-params executable. Each wave's outputs are
+        pulled to host before the next dispatches, so device memory holds
+        ONE wave regardless of cohort size; the short last wave pads by
+        repeating its final member (pad rows dropped on host), so a single
+        compiled shape serves every cohort size."""
+        if self.mesh is not None:
+            self._check_divisible(w)
+        fn = self._cohort_fn(False)
+        delta_parts, loss_parts, n_samples = [], [], None
+        for s in range(0, len(client_ids), w):
+            chunk = client_ids[s:s + w]
+            n_real = len(chunk)
+            if n_real < w:
+                chunk = chunk + [chunk[-1]] * (w - n_real)
+            batches = stack_trees([self.batch_fn(cid, round_idx)
+                                   for cid in chunk])
+            deltas, losses = fn(params, batches)
+            if n_samples is None:
+                n_samples = self._n_samples(batches, stacked=True)
+            host = jax.tree.map(np.asarray, deltas)
+            delta_parts.append(jax.tree.map(lambda a: a[:n_real], host))
+            loss_parts.append(np.asarray(losses)[:n_real])
+        stacked = jax.tree.map(lambda *xs: np.concatenate(xs, axis=0),
+                               *delta_parts)
+        return stacked, jnp.asarray(np.concatenate(loss_parts)), n_samples
 
     def run_cohort_personalized(self, params_list, client_ids, round_idxs):
         """Per-client params (clustered FL branches, async mixed-version

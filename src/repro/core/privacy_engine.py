@@ -59,7 +59,9 @@ from repro.core import dp as dp_mod
 from repro.core import masking
 from repro.core import raveling
 from repro.core.kdf import U32
-from repro.core.quantize import check_headroom, quantize, shard_limb_states
+from repro.core.quantize import (check_headroom, check_master_headroom,
+                                 check_shard_headroom, interim_limb_state,
+                                 quantize, shard_limb_states)
 from repro.core.secure_agg import (AggregationRefused, SecureAggConfig,
                                    _shard_limbs_jit, combine_limb_states,
                                    group_seed, resolve_master_shards)
@@ -196,6 +198,83 @@ def _cohort_interims_churn(flat, round_seed, key, rows_t, vgs_t, alive, *,
                           bucket_shapes, secure_cfg, dp_cfg)
 
 
+@partial(jax.jit, static_argnames=("g", "secure_cfg", "dp_cfg"))
+def _wave_limb_state(wave_flat, row_ids, round_seed, key, vgs, real, *,
+                     g, secure_cfg, dp_cfg):
+    """One streaming wave: a fixed-width chunk of whole virtual groups ->
+    its exact stage-2 limb state. The wave scheduler's compiled unit.
+
+    ``wave_flat``: (m*g, size) f32 — the wave's rows gathered group-major
+    on the host; ``row_ids``: (m*g,) uint32 GLOBAL stack rows — the DP key
+    folds at the same ``fold_in(key, row)`` values as the single-dispatch
+    ``_interims_body``, so a client's noised row is bit-identical in any
+    wave; ``vgs``: (m,) uint32 plan group ids; ``real``: (m,) bool — the
+    last wave pads to the fixed width by repeating its final group, and
+    pad groups' interims are zeroed before the limb fold (zero rows are
+    exact no-ops in the integer sums), so one compiled shape serves every
+    wave. The per-stage math is the ``_interims_body`` chain verbatim;
+    limb digits are shard-layout independent, so stacking wave states and
+    merging through the shared executables is bit-identical to the
+    whole-cohort dispatch."""
+    m = vgs.shape[0]
+    flat = wave_flat.astype(jnp.float32)
+    if dp_cfg.mechanism == "local":
+        sigma = float(dp_cfg.noise_multiplier * dp_cfg.clip_norm) \
+            if dp_cfg.noise_multiplier > 0 else 0.0
+        keys = jax.vmap(lambda j: jax.random.fold_in(key, j))(row_ids)
+        flat = jax.vmap(partial(dp_mod.flat_local_dp,
+                                clip_norm=float(dp_cfg.clip_norm),
+                                sigma=sigma))(flat, keys)
+    elif dp_cfg.mechanism == "global":
+        flat = jax.vmap(partial(dp_mod.flat_clip,
+                                clip_norm=float(dp_cfg.clip_norm)))(flat)
+    qs = quantize(flat, secure_cfg.clip, secure_cfg.bits)
+    gseeds = jnp.repeat(
+        jax.vmap(lambda v: group_seed(round_seed, v))(vgs), g, axis=0)
+    idxs = jnp.tile(jnp.arange(g, dtype=U32), m)
+    if secure_cfg.use_kernels:
+        from repro.kernels import ops
+        masked = ops.mask_apply_cohort(qs, idxs, gseeds, g)
+    else:
+        masked = masking.protect_cohort_grouped(qs, idxs, gseeds, g)
+    interims = masking.vg_sums(masked, g)                   # (m, size)
+    interims = jnp.where(real[:, None], interims, jnp.zeros((), U32))
+    return interim_limb_state(interims, secure_cfg.limbs)
+
+
+def _waved_states(flat, buckets, round_seed, key, wave, secure_cfg, dp_cfg):
+    """Stream the cohort through ~``wave``-client compiled waves of whole
+    virtual groups -> (n_waves, n_limbs, size) exact per-wave limb states.
+
+    ``flat`` stays on the HOST; only one wave's rows transfer per dispatch
+    — the OOM posture that lets a 65k-client cohort run through a
+    4096-wide executable. At most one compiled shape per bucket (two per
+    plan, like the single-dispatch path)."""
+    flat = np.asarray(flat, np.float32)
+    states = []
+    for b in buckets:
+        m_w = max(1, wave // b.g)          # whole groups per wave
+        check_master_headroom(m_w)
+        rows = np.asarray(b.rows, np.int64).reshape(b.n_groups, b.g)
+        vgs = np.asarray(b.vg_ids, np.uint32)
+        for s in range(0, b.n_groups, m_w):
+            chunk = rows[s:s + m_w]
+            cv = vgs[s:s + m_w]
+            m_real = chunk.shape[0]
+            if m_real < m_w:               # pad to the fixed wave shape
+                pad = m_w - m_real
+                chunk = np.concatenate([chunk,
+                                        np.repeat(chunk[-1:], pad, axis=0)])
+                cv = np.concatenate([cv, np.repeat(cv[-1:], pad)])
+            states.append(_wave_limb_state(
+                jnp.asarray(flat[chunk.ravel()]),
+                jnp.asarray(chunk.ravel().astype(np.uint32)),
+                round_seed, key, jnp.asarray(cv),
+                jnp.asarray(np.arange(m_w) < m_real),
+                g=b.g, secure_cfg=secure_cfg, dp_cfg=dp_cfg))
+    return jnp.stack(states)
+
+
 @jax.jit
 def ravel_rows(stacked_updates):
     """Stacked pytree (leaves (n, ...)) -> (n, size) f32, in-jit (the fused
@@ -259,6 +338,16 @@ def aggregate_flat(flat, plan, client_order, round_seed, *,
     vgs_t = tuple(jnp.asarray(b.vg_ids, U32) for b in buckets)
     bucket_shapes = tuple((b.g, b.n_groups) for b in buckets)
     if alive is None:
+        wave = int(getattr(secure_cfg, "wave_clients", 0))
+        if 0 < wave < n:
+            # streaming-wave route: same per-row math, fixed-width
+            # compiled waves, exact partial limb folds (bit-identical —
+            # limb digits are layout-independent and the float tail is
+            # the same shared executable)
+            states = _waved_states(flat, buckets, round_seed, key, wave,
+                                   secure_cfg, dp_cfg)
+            check_shard_headroom(states.shape[0])
+            return combine_limb_states(states, n, secure_cfg)
         states = _cohort_interims(
             jnp.asarray(flat), round_seed, key, rows_t, vgs_t,
             bucket_shapes=bucket_shapes, n_shards=n_shards,

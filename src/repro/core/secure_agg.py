@@ -54,6 +54,12 @@ class SecureAggConfig:
                                 # ~2^32 VGs) or 4 (adds the 2^48 lane —
                                 # headroom for > 2^32-VG plans; bit-identical
                                 # to 3 within the 3-limb bound)
+    wave_clients: int = 0       # stream cohorts larger than this through
+                                # fixed-width compiled waves of ~this many
+                                # clients (privacy_engine): one compiled
+                                # shape serves any cohort size, partial
+                                # VG/limb sums fold exactly (bit-identical
+                                # to the single-dispatch path). 0 = off.
     min_survivors_per_vg: int = 2   # dropout recovery refuses (VOIDS) any
                                     # group left with fewer survivors: after
                                     # the server reconstructs the dropped

@@ -8,7 +8,8 @@ from repro.fl.client import (ConsoleLogger, FederatedLearningClient,
                              load_model_snapshot)
 from repro.fl.directory import DeviceDirectory, DeviceEntry, LeaseConflict
 from repro.fl.population import (DEFAULT_TIERS, DeviceProfile, DeviceTier,
-                                 PopulationConfig, enroll_fleet,
+                                 PopulationArrays, PopulationConfig,
+                                 client_id, client_ids, enroll_fleet,
                                  make_population_clients,
                                  population_summary, sample_population)
 from repro.fl.registry import ModelRegistry, RegistryEntry

@@ -25,14 +25,29 @@ physical, not per-task). The :class:`DeviceDirectory` fixes the model:
   — the scheduler/simulator), the currency the ``ControlPlane``'s
   deficit-weighted round-robin schedules against.
 
+Array-backed since the fleet-scale refactor: device state is
+struct-of-arrays (index-based membership, lease bitmaps, vectorized
+availability windows), so a 10^6-device fleet registers in one bulk call
+(:meth:`register_fleet`) and pool/lease queries are O(fleet) numpy ops
+instead of O(fleet) python dict scans. The per-device object surface is
+preserved as a lazy VIEW: ``directory._devices[cid]`` still materializes a
+:class:`DeviceEntry`, ``register``/``acquire``/``release`` keep their
+semantics bit-for-bit, and ``lease_seconds``/``lease_log`` remain the
+plain dict/list the scheduler and audits consume.
+
 The lease log (on by default) records every ``(client_id, task_id, t0,
 t1)`` interval so tests and audits can prove the no-overlap invariant via
 :meth:`overlap_violations`.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import Optional
+
+import numpy as np
+
+from repro.fl.population import DeviceProfile
 
 
 class LeaseConflict(RuntimeError):
@@ -41,22 +56,83 @@ class LeaseConflict(RuntimeError):
 
 @dataclass
 class DeviceEntry:
+    """Materialized per-device view (``device_info`` is the LIVE dict —
+    mutations through the entry are mutations of the directory state;
+    ``tasks`` is a snapshot of the enrollment masks)."""
     client_id: str
     device_info: dict = field(default_factory=dict)
     profile: object = None          # optional population.DeviceProfile
     tasks: set = field(default_factory=set)   # task_ids enrolled with
 
 
-@dataclass
-class _Lease:
-    task_id: int
-    t_start: float
+_FREE = -1          # lease sentinel: no task holds the device
+
+
+class _DeviceView:
+    """Lazy mapping over the array-backed registry: the ``_devices`` dict
+    the pre-refactor directory exposed, without 10^6 live objects."""
+
+    def __init__(self, directory: "DeviceDirectory"):
+        self._d = directory
+
+    def __getitem__(self, client_id: str) -> DeviceEntry:
+        d = self._d
+        idx = d._index[client_id]
+        return DeviceEntry(client_id, d._info_dict(idx),
+                           d.profile_of(client_id), d._task_set(idx))
+
+    def __contains__(self, client_id) -> bool:
+        return client_id in self._d._index
+
+    def __len__(self) -> int:
+        return len(self._d._index)
+
+    def __iter__(self):
+        return iter(self._d._index)
+
+    def get(self, client_id, default=None):
+        return self[client_id] if client_id in self else default
+
+    def keys(self):
+        return self._d._index.keys()
+
+    def values(self):
+        return (self[c] for c in self._d._index)
+
+    def items(self):
+        return ((c, self[c]) for c in self._d._index)
+
+
+_DEFAULT_INFO = {"os": "linux", "n_samples": 100, "battery": 1.0}
 
 
 class DeviceDirectory:
     def __init__(self, log_leases: bool = True):
-        self._devices: dict[str, DeviceEntry] = {}
-        self._leases: dict[str, _Lease] = {}
+        # identity: row index <-> client id (rows never move or vanish)
+        self._index: dict[str, int] = {}
+        self._ids: list[str] = []
+        # per-device object state (python lists, lazily filled)
+        self._info: list = []           # dict | None (None: materialize
+        self._info_base: list = []      #   from the bulk template + tier)
+        self._profiles: list = []       # DeviceProfile | None (lazy for bulk)
+        # struct-of-arrays numeric state, capacity >= n (geometric growth)
+        self._cap = 0
+        self._n = 0
+        self._lease_task = np.full(0, _FREE, np.int64)
+        self._lease_t0 = np.zeros(0)
+        self._speed = np.ones(0)
+        self._base_train_s = np.ones(0)
+        self._hazard = np.zeros(0)
+        self._offset = np.zeros(0)
+        self._period = np.ones(0)
+        self._duty = np.ones(0)
+        self._windowed = np.zeros(0, bool)   # has availability-window data
+        self._tier_code = np.full(0, -1, np.int16)
+        self._tier_names: list[str] = []
+        # task_id -> capacity-sized enrollment bitmap
+        self._task_members: dict[int, np.ndarray] = {}
+        # cached lexicographic argsort of _ids (invalidated on register)
+        self._perm: Optional[np.ndarray] = None
         # task_id -> accumulated lease-seconds over released leases (the
         # fairness currency; active leases charge on release)
         self.lease_seconds: dict[int, float] = {}
@@ -66,102 +142,325 @@ class DeviceDirectory:
         # intervals are measured in the same time base as round walls
         self.now: float = 0.0
 
+    # -- storage ----------------------------------------------------------
+    def _grow(self, need: int):
+        if need <= self._cap:
+            return
+        cap = max(need, 2 * self._cap, 256)
+
+        def g(a, fill, dtype=None):
+            new = np.full(cap, fill, dtype or a.dtype)
+            new[:self._n] = a[:self._n]
+            return new
+
+        self._lease_task = g(self._lease_task, _FREE)
+        self._lease_t0 = g(self._lease_t0, 0.0)
+        self._speed = g(self._speed, 1.0)
+        self._base_train_s = g(self._base_train_s, 1.0)
+        self._hazard = g(self._hazard, 0.0)
+        self._offset = g(self._offset, 0.0)
+        self._period = g(self._period, 1.0)
+        self._duty = g(self._duty, 1.0)
+        self._windowed = g(self._windowed, False)
+        self._tier_code = g(self._tier_code, -1)
+        for tid in self._task_members:
+            self._task_members[tid] = g(self._task_members[tid], False)
+        self._cap = cap
+
+    def _add(self, client_id: str) -> int:
+        idx = self._n
+        self._grow(idx + 1)
+        self._n = idx + 1
+        self._index[client_id] = idx
+        self._ids.append(client_id)
+        self._info.append(None)
+        self._info_base.append(None)
+        self._profiles.append(None)
+        self._perm = None
+        return idx
+
+    def _tier_of(self, name: str) -> int:
+        try:
+            return self._tier_names.index(name)
+        except ValueError:
+            self._tier_names.append(name)
+            return len(self._tier_names) - 1
+
+    def _info_dict(self, idx: int) -> dict:
+        info = self._info[idx]
+        if info is None:            # bulk-registered: materialize + cache
+            info = dict(self._info_base[idx] or {})
+            code = self._tier_code[idx]
+            if code >= 0 and "tier" not in info:
+                info["tier"] = self._tier_names[code]
+            self._info[idx] = info
+        return info
+
+    def _task_set(self, idx: int) -> set:
+        return {tid for tid, m in self._task_members.items() if m[idx]}
+
+    def _enroll_mask(self, task_id: int) -> np.ndarray:
+        m = self._task_members.get(task_id)
+        if m is None:
+            m = np.zeros(max(self._cap, 1), bool)
+            self._task_members[task_id] = m
+        return m
+
+    def _set_profile(self, idx: int, p):
+        self._profiles[idx] = p
+        self._speed[idx] = p.speed
+        self._base_train_s[idx] = p.base_train_s
+        self._hazard[idx] = p.dropout_hazard
+        self._offset[idx] = p.avail_offset
+        self._period[idx] = p.avail_period
+        self._duty[idx] = p.avail_duty
+        self._windowed[idx] = True
+        self._tier_code[idx] = self._tier_of(p.tier)
+
+    @property
+    def _devices(self) -> _DeviceView:
+        return _DeviceView(self)
+
+    def index_of(self, client_id: str) -> int:
+        """Stable row index of a registered device (KeyError if unknown)."""
+        return self._index[client_id]
+
+    def sorted_perm(self) -> np.ndarray:
+        """Cached argsort of the id axis: ``ids[perm]`` is the fleet in
+        lexicographic order (numpy '<U' compare == python str compare), so
+        every sorted-pool query is one O(fleet) fancy-index instead of an
+        O(pool log pool) python sort."""
+        if self._perm is None or len(self._perm) != self._n:
+            self._perm = np.argsort(np.array(self._ids)) if self._n \
+                else np.zeros(0, np.int64)
+        return self._perm
+
     # -- fleet ------------------------------------------------------------
     def register(self, client_id: str, device_info: dict | None = None,
                  profile=None, task_id: int | None = None) -> DeviceEntry:
         """Physical registration (idempotent). ``task_id`` additionally
         records per-task enrollment; a later call may attach the profile a
         first registration omitted."""
-        entry = self._devices.get(client_id)
-        if entry is None:
-            entry = DeviceEntry(client_id, dict(device_info or {}), profile)
-            self._devices[client_id] = entry
-        else:
-            if device_info:
-                entry.device_info.update(device_info)
-            if profile is not None:
-                entry.profile = profile
+        idx = self._index.get(client_id)
+        if idx is None:
+            idx = self._add(client_id)
+            self._info[idx] = dict(device_info or {})
+        elif device_info:
+            self._info_dict(idx).update(device_info)
+        if profile is not None:
+            self._set_profile(idx, profile)
         if task_id is not None:
-            entry.tasks.add(task_id)
-        return entry
+            self._enroll_mask(task_id)[idx] = True
+        return self._devices[client_id]
+
+    def register_fleet(self, population, device_info: dict | None = None,
+                       task_id: int | None = None) -> np.ndarray:
+        """Bulk physical registration of a :class:`~repro.fl.population.
+        PopulationArrays` fleet — one array copy per field instead of n
+        ``register`` calls. ``device_info`` is the shared info template
+        (per-device dicts materialize lazily, with the device's tier).
+        Idempotent per fleet: if every id is already registered, the call
+        only adds the ``task_id`` enrollment. Returns the fleet's row
+        indices (population order)."""
+        ids = list(population.ids)
+        n_new = len(ids)
+        if self._n and all(c in self._index for c in ids):
+            idx = np.fromiter((self._index[c] for c in ids), np.int64,
+                              count=n_new)
+        elif self._n and any(c in self._index for c in ids):
+            # mixed old/new: correctness fallback through the scalar path
+            idx = np.empty(n_new, np.int64)
+            for j in range(n_new):
+                self.register(ids[j], device_info,
+                              profile=population.profile(j))
+                idx[j] = self._index[ids[j]]
+        else:
+            start = self._n
+            self._grow(start + n_new)
+            self._index.update(zip(ids, range(start, start + n_new)))
+            self._ids.extend(ids)
+            self._info.extend([None] * n_new)
+            base = dict(device_info if device_info is not None
+                        else _DEFAULT_INFO)
+            self._info_base.extend([base] * n_new)
+            self._profiles.extend([None] * n_new)
+            sl = slice(start, start + n_new)
+            self._speed[sl] = population.speed
+            self._base_train_s[sl] = population.base_train_s
+            self._hazard[sl] = population.dropout_hazard
+            self._offset[sl] = population.avail_offset
+            self._period[sl] = population.avail_period
+            self._duty[sl] = population.avail_duty
+            self._windowed[sl] = True
+            remap = np.asarray([self._tier_of(t)
+                                for t in population.tier_names], np.int16)
+            self._tier_code[sl] = remap[population.tier_code]
+            self._n = start + n_new
+            self._perm = None
+            idx = np.arange(start, start + n_new, dtype=np.int64)
+        if task_id is not None:
+            self._enroll_mask(task_id)[idx] = True
+        return idx
 
     def __contains__(self, client_id: str) -> bool:
-        return client_id in self._devices
+        return client_id in self._index
 
     def __len__(self) -> int:
-        return len(self._devices)
+        return self._n
 
     def devices(self) -> list:
-        return sorted(self._devices)
+        perm = self.sorted_perm()
+        return [self._ids[i] for i in perm]
 
     def profile_of(self, client_id: str):
-        entry = self._devices.get(client_id)
-        return entry.profile if entry else None
+        idx = self._index.get(client_id)
+        if idx is None:
+            return None
+        p = self._profiles[idx]
+        if p is None and self._windowed[idx]:
+            # bulk-registered: materialize (and cache) the frozen view
+            code = self._tier_code[idx]
+            p = DeviceProfile(
+                client_id=client_id,
+                tier=self._tier_names[code] if code >= 0 else "",
+                speed=float(self._speed[idx]),
+                base_train_s=float(self._base_train_s[idx]),
+                dropout_hazard=float(self._hazard[idx]),
+                avail_offset=float(self._offset[idx]),
+                avail_period=float(self._period[idx]),
+                avail_duty=float(self._duty[idx]))
+            self._profiles[idx] = p
+        return p
 
     def available_at(self, client_id: str, t: float | None = None) -> bool:
         """Availability-window check at virtual time ``t`` (default: the
         directory clock). Devices without a profile are always inside
         their window — the profile-less simulator contract."""
-        p = self.profile_of(client_id)
-        return p is None or p.available_at(self.now if t is None else t)
+        idx = self._index.get(client_id)
+        if idx is None or not self._windowed[idx]:
+            return True
+        t = self.now if t is None else t
+        duty = float(self._duty[idx])
+        if duty >= 1.0:
+            return True
+        period = float(self._period[idx])
+        return math.fmod(t + float(self._offset[idx]), period) < duty * period
+
+    def available_mask(self, t: float | None = None) -> np.ndarray:
+        """Whole-fleet availability at ``t`` as one (n,) bool array —
+        elementwise identical to :meth:`available_at` (np.fmod == math.fmod
+        on finite doubles)."""
+        t = self.now if t is None else t
+        n = self._n
+        duty = self._duty[:n]
+        period = self._period[:n]
+        phase = np.fmod(t + self._offset[:n], np.where(period > 0,
+                                                       period, 1.0))
+        return ~self._windowed[:n] | (duty >= 1.0) | (phase < duty * period)
 
     def enrolled(self, task_id: int) -> list:
-        return sorted(cid for cid, e in self._devices.items()
-                      if task_id in e.tasks)
+        m = self._task_members.get(task_id)
+        if m is None:
+            return []
+        perm = self.sorted_perm()
+        return [self._ids[i] for i in perm[m[:self._n][perm]]]
+
+    def enrolled_mask(self, task_id: int) -> np.ndarray:
+        """(n,) bool enrollment bitmap (a copy-free view; do not mutate)."""
+        m = self._task_members.get(task_id)
+        if m is None:
+            return np.zeros(self._n, bool)
+        return m[:self._n]
 
     # -- leases -----------------------------------------------------------
     def leased_by(self, client_id: str) -> Optional[int]:
-        lease = self._leases.get(client_id)
-        return lease.task_id if lease else None
+        idx = self._index.get(client_id)
+        if idx is None:
+            return None
+        t = self._lease_task[idx]
+        return int(t) if t != _FREE else None
 
     def leasable(self, client_id: str, task_id: int) -> bool:
         """Free, or already held by the SAME task (re-acquire is a no-op
         so a task's own cohort never blocks its backfill)."""
-        lease = self._leases.get(client_id)
-        return lease is None or lease.task_id == task_id
+        idx = self._index.get(client_id)
+        if idx is None:
+            return True
+        t = self._lease_task[idx]
+        return t == _FREE or t == task_id
 
-    def acquire(self, task_id: int, client_ids) -> None:
+    def leasable_mask(self, task_id: int) -> np.ndarray:
+        """(n,) bool: free-or-held-by-this-task, the vectorized pool
+        filter array-backed selection uses."""
+        lt = self._lease_task[:self._n]
+        return (lt == _FREE) | (lt == task_id)
+
+    def _idx_of(self, client_ids) -> np.ndarray:
+        # acquire may see ids never registered (legacy leases were a
+        # side dict); auto-register keeps the semantics total
+        out = np.empty(len(client_ids), np.int64)
+        for j, cid in enumerate(client_ids):
+            idx = self._index.get(cid)
+            out[j] = self._add(cid) if idx is None else idx
+        return out
+
+    def acquire(self, task_id: int, client_ids, idx=None) -> None:
         """Lease every id for ``task_id`` (atomic: conflict leaves no
         partial acquisition). Selection filters on :meth:`leasable`, so a
         conflict here means two tasks raced the same device — a scheduler
-        bug worth failing loudly on."""
+        bug worth failing loudly on. ``idx``: the ids' directory rows when
+        the caller already holds them (array-backed selection), skipping
+        the per-id index lookups."""
         ids = list(client_ids)
-        for cid in ids:
-            if not self.leasable(cid, task_id):
-                raise LeaseConflict(
-                    f"device {cid!r} is leased by task "
-                    f"{self._leases[cid].task_id}, wanted by {task_id}")
-        for cid in ids:
-            if cid not in self._leases:          # re-acquire keeps t_start
-                self._leases[cid] = _Lease(task_id, self.now)
+        if not ids:
+            return
+        idx = self._idx_of(ids) if idx is None else np.asarray(idx, np.int64)
+        held = self._lease_task[idx]
+        conflict = (held != _FREE) & (held != task_id)
+        if conflict.any():
+            j = int(np.argmax(conflict))
+            raise LeaseConflict(
+                f"device {ids[j]!r} is leased by task "
+                f"{int(held[j])}, wanted by {task_id}")
+        fresh = idx[held == _FREE]           # re-acquire keeps t_start
+        self._lease_task[fresh] = task_id
+        self._lease_t0[fresh] = self.now
 
     def release(self, task_id: int, client_ids) -> float:
         """Release this task's leases on ``client_ids`` (ids it does not
         hold are ignored). Returns the lease-seconds charged."""
-        charged = 0.0
-        for cid in client_ids:
-            lease = self._leases.get(cid)
-            if lease is None or lease.task_id != task_id:
-                continue
-            del self._leases[cid]
-            held = max(0.0, self.now - lease.t_start)
-            charged += held
-            self.lease_seconds[task_id] = \
-                self.lease_seconds.get(task_id, 0.0) + held
-            if self.log_leases:
-                self.lease_log.append((cid, task_id, lease.t_start,
-                                       self.now))
+        ids = [cid for cid in client_ids if cid in self._index]
+        if not ids:
+            return 0.0
+        idx = np.fromiter((self._index[c] for c in ids), np.int64,
+                          count=len(ids))
+        _, first = np.unique(idx, return_index=True)   # dedupe, keep order
+        idx = idx[np.sort(first)]
+        mine = self._lease_task[idx] == task_id
+        idx = idx[mine]
+        if not idx.size:
+            return 0.0
+        t0 = self._lease_t0[idx]
+        held = np.maximum(0.0, self.now - t0)
+        charged = float(held.sum())
+        self.lease_seconds[task_id] = \
+            self.lease_seconds.get(task_id, 0.0) + charged
+        if self.log_leases:
+            self.lease_log.extend(
+                (self._ids[i], task_id, float(s), self.now)
+                for i, s in zip(idx, t0))
+        self._lease_task[idx] = _FREE
         return charged
 
     def release_all(self, task_id: int) -> float:
-        return self.release(task_id,
-                            [cid for cid, lease in self._leases.items()
-                             if lease.task_id == task_id])
+        idx = np.nonzero(self._lease_task[:self._n] == task_id)[0]
+        return self.release(task_id, [self._ids[i] for i in idx])
 
     def leased(self, task_id: int | None = None) -> list:
         """Currently-leased device ids (optionally for one task)."""
-        return sorted(cid for cid, lease in self._leases.items()
-                      if task_id is None or lease.task_id == task_id)
+        lt = self._lease_task[:self._n]
+        m = lt != _FREE if task_id is None else lt == task_id
+        return sorted(self._ids[i] for i in np.nonzero(m)[0])
 
     # -- audit / telemetry ------------------------------------------------
     def overlap_violations(self) -> list:
@@ -172,9 +471,10 @@ class DeviceDirectory:
         by_dev: dict[str, list] = {}
         for cid, tid, t0, t1 in self.lease_log:
             by_dev.setdefault(cid, []).append((t0, t1, tid))
-        for cid, lease in self._leases.items():
-            by_dev.setdefault(cid, []).append(
-                (lease.t_start, self.now, lease.task_id))
+        for i in np.nonzero(self._lease_task[:self._n] != _FREE)[0]:
+            by_dev.setdefault(self._ids[i], []).append(
+                (float(self._lease_t0[i]), self.now,
+                 int(self._lease_task[i])))
         bad = []
         for cid, spans in by_dev.items():
             spans.sort()
@@ -186,9 +486,9 @@ class DeviceDirectory:
     def fleet_summary(self) -> dict:
         """Cross-task fleet view numbers for the dashboard/telemetry."""
         return {
-            "devices": len(self._devices),
-            "leased_now": len(self._leases),
+            "devices": self._n,
+            "leased_now": int((self._lease_task[:self._n] != _FREE).sum()),
             "lease_seconds": dict(sorted(self.lease_seconds.items())),
-            "tasks_enrolled": len({t for e in self._devices.values()
-                                   for t in e.tasks}),
+            "tasks_enrolled": len([t for t, m in self._task_members.items()
+                                   if m.any()]),
         }

@@ -30,6 +30,35 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+# -- client-id padding ------------------------------------------------------
+# The original ids were f"client-{i:04d}", which breaks lexicographic-sort
+# determinism past i=9999: "client-10000" < "client-2000" as strings, so
+# every sorted pool (selection, VG protocol order) silently reorders. The
+# fix must be a UNIFORM pad width per population — mixing 4- and 7-digit ids
+# in one fleet would itself break the order ("client-0010000" < "client-2000")
+# — so the width is a function of the population size: the legacy 4 while
+# every index fits it (existing <= 10^4-device seeds keep their ids
+# bit-for-bit), else a fixed 7 (numeric == lexicographic up to 10^7 devices).
+ID_PAD_LEGACY = 4
+ID_PAD_WIDE = 7
+
+
+def client_id_width(n: int) -> int:
+    """Zero-pad width for a population of ``n`` devices (uniform per
+    population — see the compat note above)."""
+    return ID_PAD_LEGACY if n <= 10 ** ID_PAD_LEGACY else ID_PAD_WIDE
+
+
+def client_id(i: int, n: int) -> str:
+    """The canonical id of device ``i`` in a population of ``n``."""
+    return f"client-{i:0{client_id_width(n)}d}"
+
+
+def client_ids(n: int) -> list:
+    """All ``n`` canonical ids, index order (== lexicographic order)."""
+    w = client_id_width(n)
+    return [f"client-{i:0{w}d}" for i in range(n)]
+
 
 @dataclass(frozen=True)
 class DeviceTier:
@@ -112,7 +141,7 @@ def sample_population(n: int, seed: int = 0,
             cfg.avail_duty + rng.uniform(-cfg.duty_jitter, cfg.duty_jitter),
             0.05, 1.0))
         profiles.append(DeviceProfile(
-            client_id=f"client-{i:04d}",
+            client_id=client_id(i, n),
             tier=tier.name,
             speed=speed,
             base_train_s=cfg.base_train_s,
@@ -122,6 +151,126 @@ def sample_population(n: int, seed: int = 0,
             avail_duty=duty,
         ))
     return profiles
+
+
+@dataclass
+class PopulationArrays:
+    """Struct-of-arrays population: the fleet-scale twin of
+    ``sample_population``'s profile list.
+
+    One vectorized RNG pass draws every device's tier / speed / hazard /
+    availability window at once (a 10^6-device fleet samples in ~100 ms
+    instead of the per-device loop's minutes), and the whole-fleet
+    :meth:`available_mask` answers "who is inside their window at t" as one
+    boolean array — what array-backed selection filters on. ``sample`` is
+    its own deterministic stream (vectorized draw ORDER differs from the
+    legacy loop, so it is NOT value-identical to ``sample_population`` at
+    the same seed); :meth:`from_profiles` converts a legacy-sampled
+    population losslessly when bit-compat with old seeds matters.
+
+    ``ids`` follow :func:`client_id` (uniform pad width — the > 10^4
+    populations that were previously lex-sort-broken get 7-digit ids)."""
+    ids: list                      # n python strs, index == lex order
+    tier_names: tuple              # tier code -> name
+    tier_code: np.ndarray          # (n,) int16
+    speed: np.ndarray              # (n,) f64
+    base_train_s: np.ndarray       # (n,) f64
+    dropout_hazard: np.ndarray     # (n,) f64
+    avail_offset: np.ndarray       # (n,) f64
+    avail_period: np.ndarray       # (n,) f64
+    avail_duty: np.ndarray         # (n,) f64
+
+    def __len__(self) -> int:
+        return len(self.ids)
+
+    @classmethod
+    def sample(cls, n: int, seed: int = 0,
+               cfg: PopulationConfig = PopulationConfig()
+               ) -> "PopulationArrays":
+        """One vectorized RNG pass over the same distributions as
+        :func:`sample_population` (same marginals, distinct stream)."""
+        rng = np.random.RandomState(seed)
+        weights = np.asarray([t.weight for t in cfg.tiers], np.float64)
+        weights = weights / weights.sum()
+        code = rng.choice(len(cfg.tiers), size=n, p=weights).astype(np.int16)
+        med = np.asarray([t.speed for t in cfg.tiers])[code]
+        sig = np.asarray([t.speed_sigma for t in cfg.tiers])[code]
+        speed = med * np.exp(sig * rng.standard_normal(n))
+        hazard = rng.exponential(cfg.mean_hazard, size=n) \
+            if cfg.mean_hazard > 0 else np.zeros(n)
+        duty = np.clip(
+            cfg.avail_duty + rng.uniform(-cfg.duty_jitter, cfg.duty_jitter, n),
+            0.05, 1.0)
+        return cls(
+            ids=client_ids(n),
+            tier_names=tuple(t.name for t in cfg.tiers),
+            tier_code=code,
+            speed=speed,
+            base_train_s=np.full(n, cfg.base_train_s),
+            dropout_hazard=hazard,
+            avail_offset=rng.uniform(0.0, cfg.avail_period, n),
+            avail_period=np.full(n, cfg.avail_period),
+            avail_duty=duty,
+        )
+
+    @classmethod
+    def from_profiles(cls, profiles) -> "PopulationArrays":
+        """Lossless conversion of a legacy profile list (ids and every
+        sampled value preserved bit-for-bit)."""
+        names = []
+        for p in profiles:
+            if p.tier not in names:
+                names.append(p.tier)
+        code = {t: i for i, t in enumerate(names)}
+        return cls(
+            ids=[p.client_id for p in profiles],
+            tier_names=tuple(names),
+            tier_code=np.asarray([code[p.tier] for p in profiles], np.int16),
+            speed=np.asarray([p.speed for p in profiles]),
+            base_train_s=np.asarray([p.base_train_s for p in profiles]),
+            dropout_hazard=np.asarray([p.dropout_hazard for p in profiles]),
+            avail_offset=np.asarray([p.avail_offset for p in profiles]),
+            avail_period=np.asarray([p.avail_period for p in profiles]),
+            avail_duty=np.asarray([p.avail_duty for p in profiles]),
+        )
+
+    def available_mask(self, t: float) -> np.ndarray:
+        """(n,) bool — ``DeviceProfile.available_at(t)`` for the whole
+        fleet in one pass (np.fmod == math.fmod on finite doubles, so each
+        element matches the scalar check exactly)."""
+        period = np.where(self.avail_period > 0, self.avail_period, 1.0)
+        phase = np.fmod(t + self.avail_offset, period)
+        return (self.avail_duty >= 1.0) | \
+            (phase < self.avail_duty * self.avail_period)
+
+    def profile(self, i: int) -> DeviceProfile:
+        """Materialize one device's frozen profile view."""
+        return DeviceProfile(
+            client_id=self.ids[i],
+            tier=self.tier_names[self.tier_code[i]],
+            speed=float(self.speed[i]),
+            base_train_s=float(self.base_train_s[i]),
+            dropout_hazard=float(self.dropout_hazard[i]),
+            avail_offset=float(self.avail_offset[i]),
+            avail_period=float(self.avail_period[i]),
+            avail_duty=float(self.avail_duty[i]),
+        )
+
+    def profiles(self) -> list:
+        """Materialize the full profile list (small-n convenience; at
+        fleet scale keep the arrays and use the bulk directory path)."""
+        return [self.profile(i) for i in range(len(self.ids))]
+
+    def summary(self) -> dict:
+        tiers = {self.tier_names[c]: int(k) for c, k in
+                 zip(*np.unique(self.tier_code, return_counts=True))}
+        return {
+            "n": len(self.ids),
+            "tiers": tiers,
+            "speed_min": float(self.speed.min()),
+            "speed_max": float(self.speed.max()),
+            "mean_hazard": float(self.dropout_hazard.mean()),
+        }
 
 
 def make_population_clients(profiles, trainer_factory=None):

@@ -107,14 +107,16 @@ class ControlPlane:
             return False
         if now < self._deferred.get(rec.task_id, float("-inf")):
             return False
-        pool = self.service.selection.available(rec)
+        # counts, not materialized id lists — at fleet scale this readiness
+        # probe runs per grant attempt and must stay O(fleet) numpy work
+        n_pool = self.service.selection.n_available(rec)
         # under-provisioned tasks (fewer enrolled devices than the cohort
         # target) run short cohorts, exactly like the direct path — the
         # wait is only for devices leased AWAY, never for devices the task
         # never had
         need = min(rec.config.clients_per_round,
-                   len(self.service.selection.registered(rec)))
-        return need > 0 and len(pool) >= need
+                   self.service.selection.n_registered(rec))
+        return need > 0 and n_pool >= need
 
     def next_task(self, now: float | None = None):
         """The task the fairness policy grants next, or None if no sync

@@ -20,14 +20,26 @@ state (criteria matching, round status) stays here; physical state
 cohort ACQUIRES a per-device lease and the round lifecycle releases it
 (``reset_round`` / ``release`` / ``drop``), so with many tasks sharing one
 fleet no device can sit in two overlapping sync cohorts — ``available``
-filters leased-elsewhere devices out of the pool. With a single task the
-pool and the RNG draw sequence are bit-identical to the pre-directory
-service."""
+filters leased-elsewhere devices out of the pool.
+
+Array-backed since the fleet-scale refactor: per-task enrollment and round
+status are int8/bool arrays indexed by the directory's device rows, and
+the selectable pool is the directory's cached lexicographic permutation
+fancy-indexed by one boolean mask — O(fleet) numpy work per selection
+instead of an O(pool log pool) python sorted-dict comprehension. The RNG
+DRAW SEQUENCE IS BIT-IDENTICAL to the dict-based service:
+``random.Random.sample`` consumes randomness as a function of ``(len(pool),
+k)`` only and reads members by index, so feeding it a lazy sequence view
+over the pool's index array reproduces the legacy cohorts element for
+element (property-tested in tests/test_fleet_scale.py)."""
 from __future__ import annotations
 
 import math
 import random
-from dataclasses import dataclass, field
+from collections.abc import Sequence
+from dataclasses import dataclass
+
+import numpy as np
 
 from repro.fl.auth import AuthenticationService
 from repro.fl.directory import DeviceDirectory
@@ -36,9 +48,54 @@ from repro.fl.task import TaskRecord
 
 @dataclass
 class Registration:
+    """Compat record shape (the array-backed service no longer stores
+    these per client; ``statuses`` reconstructs the same mapping)."""
     client_id: str
     device_info: dict
     status: str = "registered"   # registered | selected | training | done | dropped
+
+STATUS_CODES = ("registered", "selected", "training", "done", "dropped")
+_CODE = {s: i for i, s in enumerate(STATUS_CODES)}
+_REGISTERED = _CODE["registered"]
+_SELECTED = _CODE["selected"]
+_DONE = _CODE["done"]
+_DROPPED = _CODE["dropped"]
+
+
+class _PoolView(Sequence):
+    """Lazy sorted-pool view: ``pool[j]`` materializes only the drawn
+    member's id. ``random.Random.sample`` over this view consumes the RNG
+    exactly like the legacy list-of-str pool of the same length."""
+    __slots__ = ("_ids", "_idx")
+
+    def __init__(self, ids: list, idx: np.ndarray):
+        self._ids = ids
+        self._idx = idx
+
+    def __len__(self) -> int:
+        return len(self._idx)
+
+    def __getitem__(self, j):
+        return self._ids[self._idx[j]]
+
+
+class _IdxView(Sequence):
+    """Index twin of :class:`_PoolView`: ``pool[j]`` is the drawn member's
+    DIRECTORY ROW. ``random.Random.sample`` consumes randomness purely as
+    a function of ``(len, k)`` and touches members only by position, so
+    sampling rows here and mapping to ids after is bit-identical to
+    sampling the id view — while leaving the draw's status/lease writes
+    fully vectorized."""
+    __slots__ = ("_idx",)
+
+    def __init__(self, idx: np.ndarray):
+        self._idx = idx
+
+    def __len__(self) -> int:
+        return len(self._idx)
+
+    def __getitem__(self, j):
+        return self._idx[j]
 
 
 class SelectionService:
@@ -50,10 +107,37 @@ class SelectionService:
         # private one so single-task behaviour needs no wiring
         self.directory = directory if directory is not None \
             else DeviceDirectory()
-        # task_id -> {client_id -> Registration}
-        self._registrations: dict = {}
+        # task_id -> (n,)-capacity int8 round-status codes (meaningful
+        # where the directory's enrollment bitmap is set)
+        self._status: dict[int, np.ndarray] = {}
         # task_id -> deadline (seconds) of the current round, if any
         self._deadlines: dict = {}
+
+    # -- per-task arrays ---------------------------------------------------
+    def _status_arr(self, task_id: int) -> np.ndarray:
+        n = len(self.directory)
+        arr = self._status.get(task_id)
+        if arr is None or len(arr) < n:
+            new = np.full(max(n, 256), _REGISTERED, np.int8)
+            if arr is not None:
+                new[:len(arr)] = arr
+            self._status[task_id] = arr = new
+        return arr
+
+    def _pool_mask(self, task: TaskRecord) -> np.ndarray:
+        """(n,) bool — enrolled, status 'registered', lease-free (or held
+        by this task): the selectable pool as one vectorized filter."""
+        d = self.directory
+        n = len(d)
+        enrolled = d.enrolled_mask(task.task_id)
+        status = self._status_arr(task.task_id)[:n]
+        return enrolled & (status == _REGISTERED) \
+            & d.leasable_mask(task.task_id)
+
+    def _sorted_ids(self, mask: np.ndarray) -> list:
+        perm = self.directory.sorted_perm()
+        ids = self.directory._ids
+        return [ids[i] for i in perm[mask[perm]]]
 
     # -- client side -------------------------------------------------------
     def advertise(self, tasks: list[TaskRecord], app_name: str,
@@ -72,31 +156,87 @@ class SelectionService:
                 return False
         if not crit.matches(device_info):
             return False
-        self._registrations.setdefault(task.task_id, {})[client_id] = \
-            Registration(client_id, device_info)
-        # per-task enrollment above; physical registration (identity,
-        # availability profile, leases) in the shared directory
+        # physical registration (identity, availability profile, leases)
+        # in the shared directory; per-task round status here
         self.directory.register(client_id, device_info, profile=profile,
                                 task_id=task.task_id)
+        idx = self.directory.index_of(client_id)
+        self._status_arr(task.task_id)[idx] = _REGISTERED
         return True
+
+    def register_fleet(self, task: TaskRecord, population,
+                       device_info: dict | None = None) -> int:
+        """Bulk enrollment of a :class:`~repro.fl.population.
+        PopulationArrays` fleet into one task — the 10^6-device path (one
+        array pass instead of n ``register`` calls). The selection
+        criteria are evaluated ONCE against the shared ``device_info``
+        template (a uniform fleet; attestation is not supported on the
+        bulk path — enroll per-device when it is required). Returns the
+        number of devices enrolled."""
+        crit = task.config.selection
+        if crit.require_attestation:
+            raise ValueError("register_fleet cannot attest devices; "
+                             "use per-device register() or a criteria "
+                             "config with require_attestation=False")
+        info = dict(device_info
+                    or {"os": "linux", "n_samples": 100, "battery": 1.0})
+        if not crit.matches(info):
+            return 0
+        idx = self.directory.register_fleet(population, device_info=info,
+                                            task_id=task.task_id)
+        self._status_arr(task.task_id)[idx] = _REGISTERED
+        return len(idx)
 
     # -- server side -------------------------------------------------------
     def registered(self, task: TaskRecord) -> list[str]:
         """Every client the task knows about, regardless of round status."""
-        return sorted(self._registrations.get(task.task_id, {}))
+        return self._sorted_ids(self.directory.enrolled_mask(task.task_id))
+
+    def n_registered(self, task: TaskRecord) -> int:
+        return int(self.directory.enrolled_mask(task.task_id).sum())
 
     def available(self, task: TaskRecord) -> list[str]:
         """The selectable pool: clients currently in status 'registered'
         (not mid-round, not dropped-this-round) whose device is not leased
         to ANOTHER task (with one task this filter is a no-op, keeping the
         pool — and hence the RNG sequence — bit-identical)."""
-        return sorted(cid for cid, reg in
-                      self._registrations.get(task.task_id, {}).items()
-                      if reg.status == "registered"
-                      and self.directory.leasable(cid, task.task_id))
+        return self._sorted_ids(self._pool_mask(task))
+
+    def n_available(self, task: TaskRecord) -> int:
+        """``len(available(task))`` without materializing the id list —
+        what fleet-scale readiness checks (scheduler ``_ready``) poll."""
+        return int(self._pool_mask(task).sum())
 
     def ready(self, task: TaskRecord) -> bool:
-        return len(self.available(task)) >= task.config.clients_per_round
+        return self.n_available(task) >= task.config.clients_per_round
+
+    def _draw(self, task: TaskRecord, k_target: int, available) -> list:
+        """Sorted-pool draw shared by select_cohort/backfill. ``available``
+        is None, a ``cid -> bool`` predicate (legacy; applied to the
+        sorted pool in order), or an (n,)-indexed bool array (the
+        vectorized fast path — same pool, no python per-id calls)."""
+        mask = self._pool_mask(task)
+        if isinstance(available, np.ndarray):
+            mask = mask & available[:len(mask)]
+            available = None
+        perm = self.directory.sorted_perm()
+        pool_idx = perm[mask[perm]]
+        ids = self.directory._ids
+        status = self._status_arr(task.task_id)
+        if available is not None:
+            pool = [cid for cid in _PoolView(ids, pool_idx)
+                    if available(cid)]
+            picks = self._rng.sample(pool, min(k_target, len(pool)))
+            idx = np.fromiter((self.directory.index_of(c) for c in picks),
+                              np.int64, count=len(picks))
+        else:
+            pool = _IdxView(pool_idx)
+            idx = np.asarray(
+                self._rng.sample(pool, min(k_target, len(pool))), np.int64)
+            picks = [ids[i] for i in idx]
+        status[idx] = _SELECTED
+        self.directory.acquire(task.task_id, picks, idx=idx)
+        return picks
 
     def select_cohort(self, task: TaskRecord, overprovision: float = 1.0,
                       deadline: float | None = None,
@@ -108,19 +248,13 @@ class SelectionService:
         target cohort under expected dropout — the deadline-based churn
         posture. ``deadline``: recorded for the round (stragglers past it
         get dropped by the caller; see :meth:`round_deadline`).
-        ``available``: optional ``cid -> bool`` predicate (device
-        availability windows at selection time)."""
-        pool = self.available(task)
-        if available is not None:
-            pool = [cid for cid in pool if available(cid)]
+        ``available``: optional ``cid -> bool`` predicate, or an
+        (n,)-indexed bool array (``DeviceDirectory.available_mask``) for
+        the vectorized filter (device availability windows at selection
+        time)."""
         target = max(1, math.ceil(task.config.clients_per_round
                                   * max(1.0, overprovision)))
-        k = min(target, len(pool))
-        cohort = self._rng.sample(pool, k)
-        regs = self._registrations[task.task_id]
-        for cid in cohort:
-            regs[cid].status = "selected"
-        self.directory.acquire(task.task_id, cohort)
+        cohort = self._draw(task, target, available)
         self._deadlines[task.task_id] = deadline
         return sorted(cohort)
 
@@ -128,22 +262,18 @@ class SelectionService:
         """Draw up to ``n`` replacement members from the selectable pool
         (mid-lifecycle top-up for cohort members found unavailable before
         training started). Marks them 'selected'; returns the new ids."""
-        pool = self.available(task)
-        if available is not None:
-            pool = [cid for cid in pool if available(cid)]
-        picks = self._rng.sample(pool, min(n, len(pool)))
-        regs = self._registrations[task.task_id]
-        for cid in picks:
-            regs[cid].status = "selected"
-        self.directory.acquire(task.task_id, picks)
-        return sorted(picks)
+        return sorted(self._draw(task, n, available))
 
     def round_deadline(self, task: TaskRecord):
         """Deadline recorded by the current round's ``select_cohort``."""
         return self._deadlines.get(task.task_id)
 
     def mark(self, task: TaskRecord, client_id: str, status: str):
-        self._registrations[task.task_id][client_id].status = status
+        if not self.directory.enrolled_mask(task.task_id)[
+                self.directory.index_of(client_id)]:
+            raise KeyError(client_id)
+        self._status_arr(task.task_id)[
+            self.directory.index_of(client_id)] = _CODE[status]
 
     def release(self, task: TaskRecord, client_id: str):
         """Return a member to the selectable pool without it counting as a
@@ -157,15 +287,22 @@ class SelectionService:
         return to the registered pool. (Without this, cohort members
         stayed 'selected' forever and dropped devices could never
         re-register for later rounds.)"""
-        for reg in self._registrations.get(task.task_id, {}).values():
-            if reg.status in ("selected", "done", "dropped"):
-                reg.status = "registered"
+        n = len(self.directory)
+        enrolled = self.directory.enrolled_mask(task.task_id)
+        status = self._status_arr(task.task_id)
+        s = status[:n]
+        done = enrolled & ((s == _SELECTED) | (s == _DONE) | (s == _DROPPED))
+        s[done] = _REGISTERED
         self.directory.release_all(task.task_id)
         self._deadlines.pop(task.task_id, None)
 
     def statuses(self, task: TaskRecord) -> dict:
-        return {cid: reg.status for cid, reg in
-                self._registrations.get(task.task_id, {}).items()}
+        n = len(self.directory)
+        enrolled = self.directory.enrolled_mask(task.task_id)
+        status = self._status_arr(task.task_id)[:n]
+        ids = self.directory._ids
+        return {ids[i]: STATUS_CODES[status[i]]
+                for i in np.nonzero(enrolled)[0]}
 
     def drop(self, task: TaskRecord, client_id: str):
         """Mid-round dropout: the member leaves the round (its group's

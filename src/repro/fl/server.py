@@ -180,6 +180,16 @@ class ManagementService:
                                        device_info, certificate,
                                        profile=profile)
 
+    def register_fleet(self, task_id: int, population,
+                       device_info: dict | None = None) -> int:
+        """Bulk-enroll a ``population.PopulationArrays`` fleet into a task
+        — the 10^6-device registration path (criteria evaluated once
+        against the shared ``device_info`` template; see
+        ``SelectionService.register_fleet``). Returns the enrolled count."""
+        return self.selection.register_fleet(self._tasks[task_id],
+                                             population,
+                                             device_info=device_info)
+
     def model_snapshot(self, task_id: int) -> bytes:
         return serialize_pytree(self._tasks[task_id].model)
 

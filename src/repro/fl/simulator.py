@@ -748,13 +748,14 @@ def make_heterogeneous_clients(n: int, trainer_factory, seed: int = 0,
                                base_train_s: float = 1.0,
                                straggler_frac: float = 0.1):
     """n clients with log-normal speeds; ``straggler_frac`` get 4x slower."""
+    from repro.fl.population import client_id
     rng = np.random.RandomState(seed)
     clients = {}
     for i in range(n):
         speed = float(rng.lognormal(0.0, 0.3))
         if rng.rand() < straggler_frac:
             speed /= 4.0
-        cid = f"client-{i:04d}"
+        cid = client_id(i, n)
         clients[cid] = SimClient(cid, trainer_factory(i), speed=speed,
                                  base_train_s=base_train_s)
     return clients

@@ -2,7 +2,17 @@ import numpy as np
 import pytest
 
 # NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests
-# and benches must see 1 device; only launch/dryrun.py overrides it.
+# and benches must see 1 device; only launch/dryrun.py overrides it, and
+# tests that need a multi-device host (the multihost emulation lane) must
+# isolate themselves in a subprocess with XLA_FLAGS set in its env.
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "multihost: subprocess-isolated multi-device host emulation "
+        "(spawns python with XLA_FLAGS=--xla_force_host_platform_"
+        "device_count=8; slower than the in-process suite)")
 
 
 @pytest.fixture
