@@ -6,15 +6,20 @@
 # (dropout recovery) are exercised end to end.
 PY ?= python
 
-.PHONY: verify test deps docs-check bench bench-cohort \
+.PHONY: verify test test-cov deps docs-check bench bench-cohort \
 	bench-secureagg-smoke bench-async-smoke bench-dropout-smoke \
-	bench-multitask-smoke bench-fleet-smoke
+	bench-multitask-smoke bench-fleet-smoke bench-compression-smoke
+
+# Ratcheted line-coverage floor for the privacy-critical core
+# (src/repro/core/). Raise it as coverage grows; never lower it.
+COV_FLOOR ?= 80
 
 deps:
 	$(PY) -m pip install -r requirements-dev.txt
 
-verify: deps test docs-check bench-secureagg-smoke bench-async-smoke \
-	bench-dropout-smoke bench-multitask-smoke bench-fleet-smoke
+verify: deps test-cov docs-check bench-secureagg-smoke bench-async-smoke \
+	bench-dropout-smoke bench-multitask-smoke bench-fleet-smoke \
+	bench-compression-smoke
 
 # the full suite: every figure/claim bench, results persisted to
 # benchmarks/results/BENCH_<suite>.json (host info + git rev included)
@@ -26,6 +31,19 @@ docs-check:
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
+
+# the suite under coverage, gated on the core/ floor; degrades to the
+# plain run when pytest-cov isn't installed (`make deps` installs it)
+test-cov:
+	@if $(PY) -c "import importlib.util, sys; \
+	    sys.exit(0 if importlib.util.find_spec('pytest_cov') else 1)"; then \
+	  PYTHONPATH=src $(PY) -m pytest -x -q --cov=repro.core \
+	    --cov-report=term-missing:skip-covered \
+	    --cov-fail-under=$(COV_FLOOR); \
+	else \
+	  echo "pytest-cov not installed; running without coverage gate"; \
+	  PYTHONPATH=src $(PY) -m pytest -x -q; \
+	fi
 
 bench-cohort:
 	PYTHONPATH=src $(PY) -m benchmarks.bench_cohort
@@ -44,3 +62,6 @@ bench-multitask-smoke:
 
 bench-fleet-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.bench_fleet --quick
+
+bench-compression-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.bench_compression --quick

@@ -1,0 +1,246 @@
+"""Sub-1% rounds: federated LoRA + top-k under bit-exact secure agg.
+
+The ISSUE 9 acceptance, measured end to end:
+
+1. **<1% on a real config** — rank-2 attention-only LoRA over the real
+   whisper-medium shapes (759M params, 3.0 GB f32): the per-client
+   upload fraction is computed from the ACTUAL param tree (abstract
+   ShapeDtypeStructs in quick mode — no 3 GB init) and asserted < 1%.
+2. **LoRA e2e (quickstart)** — a federated LoRA round on the spam task
+   through CohortEngine + ManagementService: adapters train, the bytes
+   entering secure aggregation are the measured flat adapter delta.
+3. **Top-k e2e** — a compressed sync round through the real service path
+   with the measured ``upload_bytes_per_client`` telemetry asserted
+   < 1% of the dense model bytes.
+4. **Full mode only: whisper-medium LoRA finetune** — materialize the
+   real 3 GB model, train rank-2 attention adapters on 4 clients, run
+   the actual secure-agg round over the adapter deltas, and assert the
+   MEASURED bytes per client entering the chain (the raveled payload
+   rows) are < 1% of the dense model size — optionally composed with
+   top-k for another ~4x.
+
+Run: ``PYTHONPATH=src python -m benchmarks.bench_compression [--quick]``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lora
+from repro.core import privacy_engine as pe
+from repro.core.sparse import SparseConfig, TopKCompressor
+from repro.fl import ManagementService, TaskConfig
+from repro.fl.task import CompressionConfig, SelectionCriteria
+
+_CRIT = SelectionCriteria(require_attestation=False)
+_WHISPER_LORA = lora.LoRAConfig(rank=2, alpha=4.0, include=("attn",))
+
+
+def bench_whisper_fraction(rows) -> float:
+    """The <1% acceptance against the real config's shapes — computed
+    from the abstract param tree, so it measures exactly what the full
+    run materializes."""
+    from repro.configs import get_config
+    from repro.launch.input_specs import abstract_params
+
+    params = abstract_params(get_config("whisper-medium"))
+    dense = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    frac = lora.upload_fraction(_WHISPER_LORA, params)
+    print(f"#   whisper-medium: {dense / 1e6:.0f}M params "
+          f"({dense * 4 / 1e9:.2f} GB f32), rank-2 attn LoRA upload "
+          f"fraction {frac * 100:.3f}%")
+    assert frac < 0.01, f"LoRA upload {frac:.4f} >= 1% of dense"
+    rows.append(("whisper_lora_upload_pct", frac * 100,
+                 "rank-2 attn-only adapters / 759M dense params"))
+    return frac
+
+
+def bench_lora_quickstart(rows):
+    """Federated LoRA on the spam quickstart: adapters-as-model through
+    the unchanged service + secure agg; upload = measured raveled delta."""
+    from benchmarks.common import SpamWorld
+    from repro.core.cohort_engine import CohortEngine
+    from repro.models import classify_loss
+    from repro.optim import adamw
+
+    world = SpamWorld(vocab=256, d_model=32, seq_len=8, n_train=1000,
+                      n_splits=10, batch_size=2, d_ff=64, head_dim=16)
+    lcfg = lora.LoRAConfig(rank=2, alpha=4.0, min_dim=8)
+    adapters0 = lora.init_adapters(lcfg, world.model0,
+                                   jax.random.PRNGKey(1))
+    spec = lora.lora_spec(
+        lcfg, world.model0,
+        lambda m, b: classify_loss(world.cfg, m["trunk"], m["head"], b),
+        adamw(lr=5e-3), local_steps=2)
+    engine = CohortEngine(spec, world.engine_batch_fn(2, 2),
+                          template_params=adapters0)
+    svc = ManagementService(seed=0)
+    tid = svc.create_task(
+        TaskConfig("lora", "bench", "wf", clients_per_round=6, n_rounds=4,
+                   vg_size=3, selection=_CRIT), adapters0)
+    for i in range(6):
+        svc.register_client(tid, f"client-{i:04d}",
+                            {"os": "linux", "n_samples": 10})
+    t0, losses, upload = time.perf_counter(), [], 0
+    for r in range(3):
+        _, cohort = svc.begin_round(tid)
+        deltas, l_r, n = engine.run_cohort_stacked(
+            svc.get_task(tid).model, sorted(cohort), r)
+        upload = int(pe.ravel_rows(deltas).shape[1]) * 4
+        svc.submit_cohort(tid, sorted(cohort), deltas, n)
+        losses.append(float(np.mean(np.asarray(l_r))))
+    dt = time.perf_counter() - t0
+    dense = lora.n_params(world.model0) * 4
+    assert losses[-1] < losses[0], losses
+    print(f"#   quickstart LoRA: 3 rounds in {dt:.2f}s, loss "
+          f"{losses[0]:.3f} -> {losses[-1]:.3f}, upload {upload} B "
+          f"vs dense {dense} B ({upload / dense * 100:.1f}%)")
+    rows.append(("quickstart_lora_round_s", dt / 3,
+                 f"loss {losses[0]:.3f}->{losses[-1]:.3f}, "
+                 f"upload {upload / dense * 100:.1f}% of dense"))
+
+
+def bench_topk_service(rows):
+    """A compressed sync round through the real service path; the
+    telemetry's measured upload is asserted < 1% of dense bytes."""
+    dim = 320
+    model = {"w": jnp.zeros((dim, dim), jnp.float32)}
+    dense_bytes = dim * dim * 4
+    svc = ManagementService(seed=0)
+    tid = svc.create_task(
+        TaskConfig("topk", "bench", "wf", clients_per_round=8, n_rounds=4,
+                   vg_size=4, selection=_CRIT,
+                   compression=CompressionConfig(kind="topk", frac=0.005)),
+        model)
+    for i in range(8):
+        svc.register_client(tid, f"c{i}", {"os": "linux", "n_samples": 10})
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    for r in range(3):
+        _, cohort = svc.begin_round(tid)
+        for cid in sorted(cohort):
+            svc.submit_update(
+                tid, cid,
+                {"w": jnp.asarray(rng.normal(size=(dim, dim)),
+                                  jnp.float32)}, n_samples=10)
+    dt = time.perf_counter() - t0
+    up = svc.get_task(tid).history[-1]["upload_bytes_per_client"]
+    frac = up / dense_bytes
+    assert frac < 0.01, f"top-k upload {frac:.4f} >= 1% of dense"
+    print(f"#   top-k service round: {up} B/client vs dense "
+          f"{dense_bytes} B ({frac * 100:.2f}%), {dt / 3:.2f}s/round")
+    rows.append(("topk_upload_pct", frac * 100,
+                 f"frac=0.005 over {dim * dim} coords, secure-agg path"))
+
+
+def bench_whisper_lora_e2e(rows):
+    """Full mode: the real 3 GB whisper-medium, rank-2 attention
+    adapters, 4 clients, one real secure-agg round over the adapter
+    deltas — the MEASURED payload row entering the chain < 1% of dense."""
+    from repro.configs import get_config
+    from repro.core.cohort_engine import make_local_update
+    from repro.core.orchestrator import run_sync_round_stacked
+    from repro.core.strategies import make_strategy
+    from repro.models import init_params, loss_fn
+    from repro.optim import sgd
+
+    cfg = get_config("whisper-medium")
+    t0 = time.perf_counter()
+    base = init_params(cfg, jax.random.PRNGKey(0))
+    dense_bytes = lora.n_params(base) * 4
+    print(f"#   whisper-medium materialized: {dense_bytes / 1e9:.2f} GB "
+          f"in {time.perf_counter() - t0:.1f}s")
+    adapters0 = lora.init_adapters(_WHISPER_LORA, base,
+                                   jax.random.PRNGKey(1))
+    spec = lora.lora_spec(_WHISPER_LORA, base,
+                          lambda p, b: loss_fn(cfg, p, b),
+                          sgd(1e-3), local_steps=1)
+    local_update = make_local_update(spec)
+
+    b, s, sd = 2, 8, 16
+
+    def client_batch(seed):
+        r = np.random.RandomState(seed)
+        return {
+            "frames": jnp.asarray(r.randn(1, b, s, cfg.d_model) * 0.02,
+                                  jnp.float32),
+            "tokens": jnp.asarray(r.randint(0, cfg.vocab_size, (1, b, sd)),
+                                  jnp.int32),
+            "targets": jnp.asarray(r.randint(0, cfg.vocab_size,
+                                             (1, b, sd)), jnp.int32),
+            "mask": jnp.ones((1, b, sd), jnp.float32),
+        }
+
+    t0 = time.perf_counter()
+    deltas, losses = [], []
+    for i in range(4):      # serial: one 3 GB merge live at a time
+        delta, loss = local_update(adapters0, client_batch(100 + i))
+        deltas.append(jax.tree.map(np.asarray, delta))
+        losses.append(float(loss))
+    train_s = time.perf_counter() - t0
+    assert all(np.isfinite(losses)), losses
+
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *deltas)
+    upload = int(pe.ravel_rows(stacked).shape[1]) * 4   # measured payload
+    frac = upload / dense_bytes
+    assert frac < 0.01, f"measured upload {frac:.4f} >= 1% of dense"
+
+    cids = [f"c{i}" for i in range(4)]
+    strategy = make_strategy("fedavg")
+    t0 = time.perf_counter()
+    new_adapters, _, info = run_sync_round_stacked(
+        adapters0, strategy, strategy.init_state(adapters0), cids, stacked,
+        round_idx=0, vg_size=4)
+    agg_s = time.perf_counter() - t0
+    moved = any(not np.array_equal(np.asarray(a), np.asarray(b))
+                for a, b in zip(jax.tree.leaves(adapters0),
+                                jax.tree.leaves(new_adapters)))
+    assert moved, "round did not move the adapters"
+    print(f"#   whisper LoRA round: train {train_s:.1f}s (4 clients), "
+          f"secure-agg {agg_s:.2f}s, upload {upload / 1e6:.1f} MB/client "
+          f"vs dense {dense_bytes / 1e9:.2f} GB ({frac * 100:.3f}%)")
+    rows.append(("whisper_lora_e2e_upload_pct", frac * 100,
+                 f"measured payload {upload / 1e6:.1f} MB vs "
+                 f"{dense_bytes / 1e9:.2f} GB dense; "
+                 f"agg {agg_s:.2f}s, loss[0]={losses[0]:.2f}"))
+
+    # compose with top-k on the adapter vector: another ~4x
+    size = upload // 4
+    comp = TopKCompressor(SparseConfig(k=max(1, size // 4)), size)
+    payload = comp.compress_rows(cids, np.asarray(pe.ravel_rows(stacked)),
+                                 0)
+    topk_frac = payload.shape[1] * 4 / dense_bytes
+    print(f"#   + top-k 25% on the adapter delta: "
+          f"{payload.shape[1] * 4 / 1e6:.1f} MB/client "
+          f"({topk_frac * 100:.4f}% of dense)")
+    rows.append(("whisper_lora_topk_upload_pct", topk_frac * 100,
+                 "rank-2 attn LoRA + top-k 25% of adapter coords"))
+
+
+def main(quick=False):
+    rows = []
+    print("# update compression: sub-1% rounds under secure aggregation")
+    bench_whisper_fraction(rows)
+    bench_lora_quickstart(rows)
+    bench_topk_service(rows)
+    if not quick:
+        bench_whisper_lora_e2e(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the 3 GB whisper materialization — the "
+                         "CI / make-verify smoke run")
+    args = ap.parse_args()
+    rows = main(quick=args.quick)
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    from benchmarks.common import write_bench_json
+    out = write_bench_json("compression", rows, quick=args.quick)
+    print(f"# wrote {out}")

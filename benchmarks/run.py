@@ -12,6 +12,7 @@ and persists every suite's rows to ``benchmarks/results/BENCH_<suite>.json``
   bench_secureagg -> §3.1.2 VG cost model (O(n^2) -> O(n*g))
   bench_kernels   -> kernel microbenchmarks
   bench_fleet     -> fleet-scale control plane (10^6 devices, wave agg)
+  bench_compression -> LoRA + top-k sub-1% rounds under secure agg
 """
 from __future__ import annotations
 
@@ -19,9 +20,9 @@ import argparse
 import sys
 import time
 
-from benchmarks import (bench_async, bench_cohort, bench_fleet,
-                        bench_kernels, bench_scaling, bench_secureagg,
-                        bench_spam)
+from benchmarks import (bench_async, bench_cohort, bench_compression,
+                        bench_fleet, bench_kernels, bench_scaling,
+                        bench_secureagg, bench_spam)
 from benchmarks.common import write_bench_json
 
 SUITES = [
@@ -32,6 +33,7 @@ SUITES = [
     ("kernels", bench_kernels),
     ("cohort_engine", bench_cohort),
     ("fleet", bench_fleet),
+    ("compression", bench_compression),
 ]
 
 

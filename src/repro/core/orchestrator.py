@@ -47,6 +47,9 @@ class RoundInfo:
     n_selected: int = 0          # set to n_participants when nobody drops
     n_dropped: int = 0
     recovery_s: float = 0.0
+    # compressed rounds: bytes per client entering secure aggregation (the
+    # measured upload the ROADMAP <1%-of-model acceptance reads); 0 = dense
+    upload_bytes: int = 0
 
 
 @dataclass
@@ -100,12 +103,73 @@ def _secure_mean_survivors(updates_sorted: dict, plan, round_seed, key,
                                          secure_cfg)
 
 
+def _compressed_secure_mean(compressor, flat_rows, cids_sorted,
+                            protocol_order, plan, round_idx, round_seed,
+                            key, secure_cfg, dp_cfg, n_shards, stats):
+    """Sparse sync round core: compress the survivors' flat rows onto the
+    round's shared support, run the UNCHANGED §4 chain on the (n, k)
+    payload, then noise (global DP) and scatter the aggregated k-vector
+    back to the dense domain.
+
+    Compression precedes the privacy chain — DP clip/noise apply to the
+    transmitted k-vector, the quantity that actually leaves the device —
+    and is pure host numpy, so the serial reference and the vectorized /
+    wave / churn engines consume bit-identical payload rows. Returns the
+    dense (size,) f32 mean delta."""
+    payload = compressor.compress_rows(cids_sorted,
+                                       np.asarray(flat_rows, np.float32),
+                                       round_idx)
+    if stats is not None:
+        stats["upload_bytes"] = compressor.payload_bytes()
+    if list(protocol_order) == list(cids_sorted):
+        if secure_cfg.vectorized:
+            mean_k = pe.aggregate_flat(
+                jnp.asarray(payload), plan, cids_sorted, round_seed,
+                secure_cfg=secure_cfg, dp_cfg=dp_cfg, key=key,
+                n_shards=n_shards, stats=stats)
+        else:
+            mean_k = _secure_mean_serial(
+                {cid: jnp.asarray(payload[j])
+                 for j, cid in enumerate(cids_sorted)}, plan, round_seed,
+                key, secure_cfg, dp_cfg)
+    elif secure_cfg.vectorized:
+        # churn: scatter survivor payload rows into their selection-time
+        # cohort rows; recovery then runs over the SPARSE interims (the
+        # chain is size-agnostic — k is just a small `size`)
+        pos_of = {cid: j for j, cid in enumerate(protocol_order)}
+        alive = np.zeros(len(protocol_order), bool)
+        full = np.zeros((len(protocol_order), payload.shape[1]),
+                        np.float32)
+        for j, cid in enumerate(cids_sorted):
+            full[pos_of[cid]] = payload[j]
+            alive[pos_of[cid]] = True
+        mean_k = pe.aggregate_flat(
+            jnp.asarray(full), plan, list(protocol_order), round_seed,
+            secure_cfg=secure_cfg, dp_cfg=dp_cfg, key=key,
+            n_shards=n_shards, alive=alive, stats=stats)
+    else:
+        fold_of = {cid: j for j, cid in enumerate(protocol_order)}
+        mean_k = _secure_mean_survivors(
+            {cid: jnp.asarray(payload[j])
+             for j, cid in enumerate(cids_sorted)}, plan, round_seed, key,
+            secure_cfg, dp_cfg, fold_of)
+    if dp_cfg.mechanism == "global":
+        # noise the aggregated k-vector (the released quantity) BEFORE
+        # scattering — off-support coordinates carry no signal and get
+        # no noise
+        mean_k = dp_mod.global_dp(mean_k, dp_cfg, len(cids_sorted),
+                                  jax.random.fold_in(key, 10_000))
+    return jnp.asarray(compressor.decompress(np.asarray(mean_k),
+                                             round_idx))
+
+
 def run_sync_round(params, strategy, strategy_state,
                    client_results: dict,
                    *, round_idx: int, vg_size: int,
                    secure_cfg: sa.SecureAggConfig = sa.SecureAggConfig(),
                    dp_cfg: dp_mod.DPConfig = dp_mod.DPConfig(),
-                   key=None, round_seed=None, cohort=None):
+                   key=None, round_seed=None, cohort=None,
+                   compressor=None):
     """One synchronous FL round over a cohort of client results.
 
     ``secure_cfg.vectorized`` (default) runs the whole privacy pipeline —
@@ -122,7 +186,13 @@ def run_sync_round(params, strategy, strategy_state,
     the full cohort (clients masked/noised before drops were known), the
     dropped residual is recovered (``repro.core.dropout``), and the round
     aggregates exactly the survivor mean — no abort, bit-identical to a
-    clean round over the survivors."""
+    clean round over the survivors.
+
+    ``compressor``: optional ``repro.core.sparse.TopKCompressor`` — the
+    round's payload becomes the (n, k) shared-support compression of the
+    survivors' flat updates (error feedback carried across rounds), fed
+    through the same chain; the aggregated k-vector is noised (global DP)
+    then scattered back to the dense domain before the strategy."""
     key, round_seed = _round_randomness(key, round_seed, round_idx)
 
     cids = sorted(client_results)
@@ -134,7 +204,13 @@ def run_sync_round(params, strategy, strategy_state,
     n_shards = sa.resolve_master_shards(len(plan.groups), secure_cfg)
     stats: dict = {}
 
-    if not dropped:
+    if compressor is not None:
+        flat, unflatten = pe.stack_flat_updates(
+            [client_results[c].update for c in cids])
+        delta = unflatten(_compressed_secure_mean(
+            compressor, flat, cids, protocol_order, plan, round_idx,
+            round_seed, key, secure_cfg, dp_cfg, n_shards, stats))
+    elif not dropped:
         if secure_cfg.vectorized:
             flat, unflatten = pe.stack_flat_updates(
                 [client_results[c].update for c in cids])
@@ -163,7 +239,9 @@ def run_sync_round(params, strategy, strategy_state,
             {cid: client_results[cid].update for cid in cids}, plan,
             round_seed, key, secure_cfg, dp_cfg, fold_of)
 
-    if dp_cfg.mechanism == "global":
+    if dp_cfg.mechanism == "global" and compressor is None:
+        # (compressed rounds noise the aggregated k-vector inside
+        # _compressed_secure_mean, before the scatter)
         delta = dp_mod.global_dp(delta, dp_cfg, len(cids),
                                  jax.random.fold_in(key, 10_000))
 
@@ -180,7 +258,8 @@ def run_sync_round(params, strategy, strategy_state,
                      n_shards=n_shards,
                      n_selected=len(protocol_order),
                      n_dropped=len(dropped),
-                     recovery_s=stats.get("recovery_s", 0.0))
+                     recovery_s=stats.get("recovery_s", 0.0),
+                     upload_bytes=stats.get("upload_bytes", 0))
     return params, strategy_state, info
 
 
@@ -190,7 +269,8 @@ def run_sync_round_stacked(params, strategy, strategy_state,
                            secure_cfg: sa.SecureAggConfig
                            = sa.SecureAggConfig(),
                            dp_cfg: dp_mod.DPConfig = dp_mod.DPConfig(),
-                           key=None, round_seed=None, cohort=None):
+                           key=None, round_seed=None, cohort=None,
+                           compressor=None):
     """Fused sync round: cohort updates arrive ALREADY STACKED (pytree
     leaves (n_clients, ...)) straight from ``CohortEngine.run_cohort_
     stacked`` — no unstack-to-host, no per-client dict round-trip. Produces
@@ -219,13 +299,23 @@ def run_sync_round_stacked(params, strategy, strategy_state,
     n_shards = sa.resolve_master_shards(len(plan.groups), secure_cfg)
     stats: dict = {}
 
-    delta = pe.aggregate_stacked(
-        stacked_updates, plan, cids_sorted, round_seed,
-        secure_cfg=secure_cfg, dp_cfg=dp_cfg, key=key,
-        cohort_order=protocol_order if n_dropped else None, stats=stats)
-    if dp_cfg.mechanism == "global":
-        delta = dp_mod.global_dp(delta, dp_cfg, len(cids),
-                                 jax.random.fold_in(key, 10_000))
+    if compressor is not None:
+        flat = pe.ravel_rows(stacked_updates)
+        template = jax.tree.map(lambda a: a[0], stacked_updates)
+        _, unflatten = raveling.cached_unflatten(template)
+        delta = unflatten(_compressed_secure_mean(
+            compressor, flat, cids_sorted, protocol_order, plan,
+            round_idx, round_seed, key, secure_cfg, dp_cfg, n_shards,
+            stats))
+    else:
+        delta = pe.aggregate_stacked(
+            stacked_updates, plan, cids_sorted, round_seed,
+            secure_cfg=secure_cfg, dp_cfg=dp_cfg, key=key,
+            cohort_order=protocol_order if n_dropped else None,
+            stats=stats)
+        if dp_cfg.mechanism == "global":
+            delta = dp_mod.global_dp(delta, dp_cfg, len(cids),
+                                     jax.random.fold_in(key, 10_000))
 
     metrics = _avg_metric_dicts(metrics_list or [])
     delta = strategy.combine([delta], [1.0], [metrics])
@@ -233,7 +323,8 @@ def run_sync_round_stacked(params, strategy, strategy_state,
     info = RoundInfo(round_idx, len(cids), len(plan.groups), metrics=metrics,
                      n_shards=n_shards,
                      n_selected=len(protocol_order), n_dropped=n_dropped,
-                     recovery_s=stats.get("recovery_s", 0.0))
+                     recovery_s=stats.get("recovery_s", 0.0),
+                     upload_bytes=stats.get("upload_bytes", 0))
     return params, strategy_state, info
 
 

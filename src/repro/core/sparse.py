@@ -1,0 +1,233 @@
+"""Top-k sparse updates under secure aggregation (paper §7 names update
+compression under secure aggregation as an open problem; ROADMAP
+"Compressed updates at LLM scale").
+
+The obstacle: pairwise masks only cancel when every member of a virtual
+group masks the SAME coordinates. Naive per-client top-k gives each client
+its own support set, so either the server learns every client's support
+(an information leak — the largest-magnitude coordinates of a private
+update) or the masks don't cancel. This module resolves it with a
+round-common index domain:
+
+  shared-index draw   Each round r draws ``k`` coordinates of the flat
+                      update domain from a seeded host-side PCG64 stream —
+                      a function of (seed, round, size, k) only, so every
+                      client and the server derive the identical support
+                      without communicating it. The wire payload is the
+                      update restricted to those k coordinates: DENSE in k,
+                      identical support across the whole cohort, so the
+                      quantize -> mask -> VG-sum -> limb-combine chain runs
+                      unchanged on a (k,)-vector and masking never leaks
+                      which coordinates any client cared about.
+
+  error feedback      What makes the shared draw behave like top-k over
+                      time: each client keeps a residual — the part of its
+                      accumulated update NOT yet transmitted. Per round the
+                      client compresses ``update + residual``; transmitted
+                      coordinates are zeroed out of the residual, the rest
+                      carries to the next round. Every coordinate's mass is
+                      eventually delivered (the draw revisits all of the
+                      domain in expectation), which is the standard EF
+                      convergence argument (Stich et al. 2018; SCAFFOLD-
+                      style memory) — pinned empirically by the quickstart
+                      convergence test.
+
+  true top-k          The async path aggregates inside a trusted boundary
+                      (paper §4.3) with NO masks, so per-client supports
+                      leak nothing the aggregator doesn't already see:
+                      ``compress_topk`` sends genuine per-client top-k
+                      magnitudes as (indices, values) pairs, scattered back
+                      to dense before the FedBuff buffer write (the buffer
+                      math is support-agnostic).
+
+Bit-exactness: compression happens BEFORE the §4 privacy chain, entirely
+in host numpy — the serial reference and the vectorized/wave engines
+consume the same (n, k) payload rows, so the existing bit-parity contract
+extends to sparse rounds for free (tested in tests/test_compression.py).
+
+DP composition: local/global DP clip and noise the TRANSMITTED k-vector —
+the quantity that actually leaves the device — so sensitivity analysis is
+unchanged (clip_norm bounds the payload's L2 norm).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class SparseConfig:
+    """Round-common top-k sparsification knobs.
+
+    ``k``: coordinates per round (the shared index domain's size).
+    ``error_feedback``: carry untransmitted mass in per-client residuals
+    (off = plain rand-k, which discards it — only right for diagnostics).
+    ``seed``: domain-separates the shared draw from every other RNG.
+    """
+    k: int
+    error_feedback: bool = True
+    seed: int = 0
+
+
+def resolve_k(size: int, *, k: int = 0, frac: float = 0.0) -> int:
+    """Coordinates per round: explicit ``k`` wins, else ``ceil(size *
+    frac)``; always clamped to [1, size]."""
+    if k <= 0:
+        k = int(np.ceil(size * frac)) if frac > 0 else size
+    return max(1, min(int(k), int(size)))
+
+
+def shared_indices(size: int, k: int, round_idx: int,
+                   seed: int = 0) -> np.ndarray:
+    """The round-common support: ``k`` distinct coordinates of
+    ``[0, size)``, sorted, drawn from PCG64 seeded by (seed, round, size,
+    k) — identical on every party that knows the round index, never
+    transmitted.
+
+    Host-side numpy on purpose: the draw must be platform-deterministic
+    (device PRNGs vary by backend) and it is O(k), off the compiled path.
+    """
+    if not 0 < k <= size:
+        raise ValueError(f"k={k} outside [1, {size}]")
+    rng = np.random.Generator(np.random.PCG64(
+        np.random.SeedSequence((int(seed), int(round_idx), int(size),
+                                int(k)))))
+    if k == size:
+        return np.arange(size, dtype=np.int64)
+    if k * 2 >= size:                       # dense regime: permute once
+        idx = rng.permutation(size)[:k].astype(np.int64)
+        idx.sort()
+        return idx
+    # sparse regime: rejection-free top-up — collisions are rare for
+    # k << size, so a couple of O(k) draws suffice
+    idx = np.unique(rng.integers(0, size, size=k + k // 4 + 16,
+                                 dtype=np.int64))
+    while idx.size < k:
+        idx = np.unique(np.concatenate(
+            [idx, rng.integers(0, size, size=k, dtype=np.int64)]))
+    if idx.size > k:
+        # drop the surplus uniformly (slicing the sorted array would bias
+        # the support toward small coordinates)
+        idx = idx[np.sort(rng.permutation(idx.size)[:k])]
+    return idx
+
+
+def topk_indices(flat: np.ndarray, k: int) -> np.ndarray:
+    """Sorted indices of the ``k`` largest-|.| coordinates (ties broken by
+    index via argpartition's deterministic introselect)."""
+    flat = np.asarray(flat)
+    if k >= flat.size:
+        return np.arange(flat.size, dtype=np.int64)
+    idx = np.argpartition(np.abs(flat), flat.size - k)[flat.size - k:]
+    idx.sort()
+    return idx.astype(np.int64)
+
+
+def scatter(values, indices, size: int) -> np.ndarray:
+    """(k,) values at (k,) indices -> dense (size,) f32."""
+    out = np.zeros(size, np.float32)
+    out[np.asarray(indices)] = np.asarray(values, np.float32)
+    return out
+
+
+class TopKCompressor:
+    """Per-task compressor: the shared-index draw plus every client's
+    error-feedback residual (server-simulated — in production each device
+    keeps only its own row).
+
+    ``compress_rows`` / ``decompress`` are the sync secure-agg pair
+    (round-common support, dense-in-k payloads); ``compress_topk`` is the
+    async trusted-boundary entry (true per-client top-k as index/value
+    pairs). Residuals are consumed AT transmission: a round the server
+    later voids loses the transmitted component, exactly like a real
+    client that cannot know the round's server-side fate.
+    """
+
+    def __init__(self, cfg: SparseConfig, size: int):
+        if not 0 < cfg.k <= size:
+            raise ValueError(f"k={cfg.k} outside [1, {size}]")
+        self.cfg = cfg
+        self.size = int(size)
+        self._residuals: dict = {}          # cid -> (size,) np.float32
+
+    @property
+    def k(self) -> int:
+        return int(self.cfg.k)
+
+    def payload_bytes(self, *, with_indices: bool = False) -> int:
+        """Upload bytes per client per round: k f32 values; the sync path
+        never ships indices (the support is derived, not transmitted),
+        the async top-k path ships k int32 indices too."""
+        return self.k * (8 if with_indices else 4)
+
+    def round_indices(self, round_idx: int) -> np.ndarray:
+        return shared_indices(self.size, self.k, round_idx, self.cfg.seed)
+
+    def residual(self, cid) -> np.ndarray:
+        r = self._residuals.get(cid)
+        if r is None:
+            r = np.zeros(self.size, np.float32)
+            self._residuals[cid] = r
+        return r
+
+    # -- sync secure-agg pair ---------------------------------------------
+
+    def compress_rows(self, client_ids, rows, round_idx: int) -> np.ndarray:
+        """(n, size) per-client flat updates -> (n, k) dense-in-k payload
+        rows on the round's shared support, row order preserved.
+
+        Each row is compressed from ``update + residual``; transmitted
+        coordinates leave the residual, the rest carries to next round.
+        Call once per (client, round) — compression is the client's wire
+        transmission, so repeating it double-counts the residual."""
+        rows = np.asarray(rows, np.float32)
+        if rows.ndim != 2 or rows.shape[0] != len(list(client_ids)):
+            raise ValueError(f"expected ({len(list(client_ids))}, "
+                             f"{self.size}) rows, got {rows.shape}")
+        if rows.shape[1] != self.size:
+            raise ValueError(f"rows have {rows.shape[1]} coordinates, "
+                             f"compressor built for {self.size}")
+        idx = self.round_indices(round_idx)
+        if not self.cfg.error_feedback:
+            return rows[:, idx].copy()
+        out = np.empty((rows.shape[0], self.k), np.float32)
+        for j, cid in enumerate(client_ids):
+            r = self.residual(cid)
+            v = rows[j] + r
+            out[j] = v[idx]
+            v[idx] = 0.0
+            self._residuals[cid] = v
+        return out
+
+    def decompress(self, mean_k, round_idx: int) -> np.ndarray:
+        """Aggregated (k,) mean on the round's shared support -> dense
+        (size,) f32 server delta (zeros off-support)."""
+        mean_k = np.asarray(mean_k, np.float32)
+        if mean_k.shape != (self.k,):
+            raise ValueError(f"expected ({self.k},) aggregate, got "
+                             f"{mean_k.shape}")
+        return scatter(mean_k, self.round_indices(round_idx), self.size)
+
+    # -- async trusted-boundary entry -------------------------------------
+
+    def compress_topk(self, cid, flat):
+        """One client's TRUE top-k transmission -> (indices (k,) int64,
+        values (k,) f32, dense (size,) f32 reconstruction).
+
+        The dense reconstruction is what enters the FedBuff buffer (its
+        math is support-agnostic); the (indices, values) pair is what the
+        wire would carry — ``payload_bytes(with_indices=True)``."""
+        v = np.asarray(flat, np.float32)
+        if v.shape != (self.size,):
+            raise ValueError(f"expected ({self.size},) update, got "
+                             f"{v.shape}")
+        if self.cfg.error_feedback:
+            v = v + self.residual(cid)
+        idx = topk_indices(v, self.k)
+        vals = v[idx].copy()
+        if self.cfg.error_feedback:
+            r = v.copy()
+            r[idx] = 0.0
+            self._residuals[cid] = r
+        return idx, vals, scatter(vals, idx, self.size)

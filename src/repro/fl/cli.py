@@ -34,7 +34,7 @@ from repro.fl.dashboard import (render_fleet, render_metrics,
                                 render_task_list, render_task_view)
 from repro.fl.scheduler import ControlPlane
 from repro.fl.server import ManagementService
-from repro.fl.task import TaskConfig
+from repro.fl.task import CompressionConfig, TaskConfig
 
 DEFAULT_SESSION = os.environ.get("FLORIDA_SESSION",
                                  os.path.expanduser("~/.florida-session.pkl"))
@@ -64,11 +64,15 @@ def cmd_create(svc, args):
     dp = DPConfig(mechanism=args.dp, clip_norm=args.clip,
                   noise_multiplier=args.noise) if args.dp != "off" \
         else DPConfig()
+    comp = CompressionConfig(kind="topk", frac=args.topk_frac,
+                             error_feedback=not args.no_error_feedback) \
+        if args.topk_frac > 0 else CompressionConfig()
     tc = TaskConfig(task_name=args.task_name, app_name=args.app_name,
                     workflow_name=args.workflow,
                     clients_per_round=args.clients_per_round,
                     n_rounds=args.rounds, strategy=args.strategy,
                     mode=args.mode, vg_size=args.vg_size, dp=dp,
+                    compression=comp,
                     priority=args.priority, weight=args.weight,
                     epsilon_budget=args.epsilon_budget,
                     target_metric=args.target_metric,
@@ -165,6 +169,12 @@ def main(argv=None):
     c.add_argument("--dp", default="off", choices=["off", "local", "global"])
     c.add_argument("--clip", type=float, default=0.5)
     c.add_argument("--noise", type=float, default=1.0)
+    c.add_argument("--topk-frac", type=float, default=0.0,
+                   help="top-k update compression: transmit this fraction "
+                        "of the flat update per round (0 = dense)")
+    c.add_argument("--no-error-feedback", action="store_true",
+                   help="disable the per-client residual carry (plain "
+                        "rand-k; diagnostics only)")
     c.add_argument("--seed", type=int, default=0)
     c.add_argument("--no-deploy", action="store_true",
                    help="leave the task CREATED (deploy it later)")

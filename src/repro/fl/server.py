@@ -39,7 +39,16 @@ def _churn_metrics(info) -> dict:
            "n_dropped": info.n_dropped}
     if info.n_dropped:
         out["recovery_s"] = info.recovery_s
+    if info.upload_bytes:
+        out["upload_bytes_per_client"] = info.upload_bytes
     return out
+
+
+def _model_size(model) -> int:
+    """Flat coordinate count of a model pytree (the compressor's domain)."""
+    import numpy as np
+    return int(sum(int(np.prod(jnp.shape(leaf)) or 1)
+                   for leaf in jax.tree.leaves(model)))
 
 
 @dataclass
@@ -76,6 +85,10 @@ class ManagementService:
         self._collectors: dict[int, _RoundCollector] = {}
         self._async: dict[int, AsyncServer] = {}
         self._accountants: dict[int, dp_mod.RdpAccountant] = {}
+        # task_id -> TopKCompressor (tasks with compression.kind != "none");
+        # holds the per-client error-feedback residuals, so it must live as
+        # long as the task
+        self._compressors: dict[int, Any] = {}
 
     # ------------------------------------------------------------------
     # user-interface API (dashboard / CLI)
@@ -108,6 +121,9 @@ class ManagementService:
             self._strategy_state[rec.task_id] = strategy.init_state(
                 initial_model)
         self._strategies[rec.task_id] = strategy
+        comp = config.compression.make_compressor(_model_size(initial_model))
+        if comp is not None:
+            self._compressors[rec.task_id] = comp
         if config.dp.mechanism != "off":
             self._accountants[rec.task_id] = dp_mod.RdpAccountant(
                 config.dp, sample_rate=1.0)  # rate set per round below
@@ -211,6 +227,18 @@ class ManagementService:
                               metrics=metrics or {})
         if rec.config.mode == "async":
             server = self._async[task_id]
+            comp = self._compressors.get(task_id)
+            if comp is not None:
+                # trusted aggregation boundary (no masks): true per-client
+                # top-k — the wire carries (indices, values), the buffer
+                # gets the dense scatter (its math is support-agnostic)
+                import numpy as np
+                from repro.core import raveling
+                _, _, dense = comp.compress_topk(
+                    client_id, np.asarray(raveling.flat_f32(update)))
+                result = ClientResult(update=jnp.asarray(dense),
+                                      n_samples=n_samples,
+                                      metrics=metrics or {})
             stepped = server.submit(
                 result,
                 update_version=rec.round_idx if update_version is None
@@ -218,7 +246,7 @@ class ManagementService:
             if stepped:
                 rec.model = server.params
                 rec.round_idx += 1
-                self._finish_round(rec, {"n": server.strategy.buffer_size})
+                self._finish_round(rec, self._async_metrics(rec, server))
             return stepped
         coll = self._collectors.get(task_id)
         if coll is None or client_id not in coll.cohort \
@@ -324,7 +352,8 @@ class ManagementService:
                 metrics_list,
                 round_idx=coll.round_idx, vg_size=rec.config.vg_size,
                 secure_cfg=rec.config.secure_agg, dp_cfg=rec.config.dp,
-                cohort=list(coll.cohort) if coll.dropped else None)
+                cohort=list(coll.cohort) if coll.dropped else None,
+                compressor=self._compressors.get(task_id))
         except AggregationRefused:
             self._void_round(rec, coll)
             return True
@@ -368,6 +397,15 @@ class ManagementService:
         server = self._async[task_id]
         cids = list(client_ids)
         rows = pe.ravel_rows(stacked_updates)
+        comp = self._compressors.get(task_id)
+        if comp is not None and rows.shape[0] == len(cids):
+            # compress in submission order so the residual evolution is
+            # bit-identical to len(cids) per-client submit_update calls
+            import numpy as np
+            host = np.asarray(rows, np.float32)
+            rows = jnp.asarray(np.stack(
+                [comp.compress_topk(cid, host[j])[2]
+                 for j, cid in enumerate(cids)]))
         if rows.shape[0] != len(cids):
             # a shape/id mismatch is a caller bug, not a rejected
             # submission — dropping the group silently would corrupt the
@@ -393,8 +431,16 @@ class ManagementService:
         for _ in steps:
             rec.model = server.params
             rec.round_idx += 1
-            self._finish_round(rec, {"n": server.strategy.buffer_size})
+            self._finish_round(rec, self._async_metrics(rec, server))
         return steps
+
+    def _async_metrics(self, rec: TaskRecord, server: AsyncServer) -> dict:
+        out = {"n": server.strategy.buffer_size}
+        comp = self._compressors.get(rec.task_id)
+        if comp is not None:
+            out["upload_bytes_per_client"] = comp.payload_bytes(
+                with_indices=True)
+        return out
 
     def async_buffer_room(self, task_id: int) -> int:
         """Submissions until the next async server step (>= 1). Sync tasks
@@ -445,7 +491,8 @@ class ManagementService:
                 rec.model, strategy, state, coll.results,
                 round_idx=coll.round_idx, vg_size=rec.config.vg_size,
                 secure_cfg=rec.config.secure_agg, dp_cfg=rec.config.dp,
-                cohort=list(coll.cohort) if coll.dropped else None)
+                cohort=list(coll.cohort) if coll.dropped else None,
+                compressor=self._compressors.get(rec.task_id))
         except AggregationRefused:
             self._void_round(rec, coll)
             return

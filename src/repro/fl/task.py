@@ -11,6 +11,7 @@ from typing import Any, Callable, Optional
 
 from repro.core.dp import DPConfig
 from repro.core.secure_agg import SecureAggConfig
+from repro.core.sparse import SparseConfig, TopKCompressor, resolve_k
 
 
 class TaskStatus(enum.Enum):
@@ -44,6 +45,44 @@ class SelectionCriteria:
 
 
 @dataclass
+class CompressionConfig:
+    """Update-compression policy for a task (the sub-1%-round knobs).
+
+    ``kind``: "none" | "topk". Top-k rides the round-common shared-index
+    draw with error feedback on the sync secure-agg path and true
+    per-client top-k (indices + values) on the async trusted path — see
+    ``repro.core.sparse``. ``k`` (absolute) wins over ``frac``
+    (fraction of the flat update); residuals are carried per client when
+    ``error_feedback``.
+
+    LoRA/adapter tuning is NOT a wire transform and composes with (not
+    through) this config: make the task's model the adapters pytree
+    (``repro.core.lora``) and any ``kind`` here then applies to the
+    adapter delta. ``lora_rank`` is recorded so the task registry keeps
+    the full recipe; 0 = dense model.
+    """
+    kind: str = "none"
+    k: int = 0
+    frac: float = 0.01
+    error_feedback: bool = True
+    seed: int = 0
+    lora_rank: int = 0
+
+    def make_compressor(self, model_size: int):
+        """-> ``TopKCompressor`` over a ``model_size``-coordinate flat
+        update, or None when compression is off."""
+        if self.kind == "none":
+            return None
+        if self.kind != "topk":
+            raise ValueError(f"unknown compression kind {self.kind!r}")
+        return TopKCompressor(
+            SparseConfig(k=resolve_k(model_size, k=self.k, frac=self.frac),
+                         error_feedback=self.error_feedback,
+                         seed=self.seed),
+            model_size)
+
+
+@dataclass
 class TaskConfig:
     task_name: str
     app_name: str
@@ -59,6 +98,8 @@ class TaskConfig:
     vg_size: int = 8                        # secure-agg virtual group size
     secure_agg: SecureAggConfig = field(default_factory=SecureAggConfig)
     dp: DPConfig = field(default_factory=DPConfig)
+    compression: CompressionConfig = field(
+        default_factory=CompressionConfig)
     selection: SelectionCriteria = field(default_factory=SelectionCriteria)
     eval_interval: int = 1
     round_timeout_s: float = 600.0          # sync round deadline: stragglers

@@ -31,6 +31,8 @@ Schemes (DESIGN.md §6):
 """
 from __future__ import annotations
 
+import logging
+
 import jax
 import jax.numpy as jnp
 
@@ -45,6 +47,8 @@ from repro.core.quantize import (MAX_MASTER_GROUPS, carry_normalize,
 from repro.models import loss_fn
 from repro.optim import adamw
 from repro.optim.adamw import apply_updates
+
+_log = logging.getLogger(__name__)
 
 
 def n_silos_for(cfg, mesh) -> int:
@@ -272,6 +276,16 @@ def make_fl_train_step(cfg, mesh, *, vg_size: int | None = None,
                 and divisible and n_vgs // n_pods < MAX_MASTER_GROUPS
                 else None)
     stage2_shards = max(n_pods if divisible else 1, min_master_shards(n_vgs))
+    # which stage-2 lowering actually won: the explicit shard_map over the
+    # pod axis, or the bit-identical zero-padded form GSPMD lowers. Launch
+    # scripts read meta["stage2_route"]; the log line is the operator's
+    # one-glance check that a topology change didn't silently demote the
+    # route (e.g. a pod count that stops dividing n_vgs).
+    stage2_route = ("shard_map_pod" if pod_axis is not None
+                    else "zero_padded_shards")
+    _log.info("fl_step stage-2 route: %s (n_vgs=%d, n_pods=%d, "
+              "divisible=%s, shards=%d)", stage2_route, n_vgs, n_pods,
+              divisible, stage2_shards)
     check_master_headroom(-(-n_vgs // stage2_shards))
     check_shard_headroom(stage2_shards)
     microbatches = microbatches or cfg.train_microbatches
@@ -370,4 +384,5 @@ def make_fl_train_step(cfg, mesh, *, vg_size: int | None = None,
                           bits=bits, clip=clip, microbatches=microbatches,
                           local_steps=local_steps,
                           stage2_shards=stage2_shards,
-                          stage2_pod_axis=pod_axis)
+                          stage2_pod_axis=pod_axis,
+                          stage2_route=stage2_route)

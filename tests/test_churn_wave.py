@@ -1,0 +1,101 @@
+"""Churn x streaming-wave contract (ISSUE 9 satellite): the wave route is
+DOCUMENTED to apply only to clean rounds (``aggregate_flat`` takes it iff
+``alive is None``) — a churn round with ``wave_clients`` set must silently
+fall back to the recovery path and still produce bits identical to the
+same round without waves. Deterministic (no hypothesis): the contract is a
+branch condition, not a distribution."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dp as dp_mod
+from repro.core import privacy_engine as pe
+from repro.core import secure_agg as sa
+from repro.core.orchestrator import _secure_mean_survivors
+from repro.core.virtual_groups import make_virtual_groups
+
+
+def _cohort(n=12, size=30, seed=5):
+    rng = np.random.RandomState(seed)
+    cids = [f"c{i:03d}" for i in range(n)]
+    flat = jnp.asarray(rng.uniform(-1, 1, (n, size)), jnp.float32)
+    return cids, flat
+
+
+def test_wave_route_skipped_under_churn(monkeypatch):
+    """Contract enforcement: with an ``alive`` mask the wave scheduler is
+    never invoked (a poisoned ``_wave_limb_state`` proves it), while the
+    same config WITHOUT churn does take the wave route."""
+    cids, flat = _cohort()
+    plan = make_virtual_groups(cids, 4, seed=1)
+    rs = jnp.asarray([3, 9], jnp.uint32)
+    key = jax.random.PRNGKey(0)
+    scfg = sa.SecureAggConfig(wave_clients=4)
+    alive = np.ones(len(cids), bool)
+    alive[[2, 7]] = False
+
+    calls = []
+    real = pe._wave_limb_state
+
+    def spy(*a, **kw):
+        calls.append(1)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(pe, "_wave_limb_state", spy)
+    pe.aggregate_flat(flat, plan, cids, rs, secure_cfg=scfg, key=key,
+                      alive=alive)
+    assert not calls, "wave scheduler ran under churn"
+    pe.aggregate_flat(flat, plan, cids, rs, secure_cfg=scfg, key=key)
+    assert calls, "clean round with wave_clients did not take the waves"
+
+
+@pytest.mark.parametrize("mech", ["off", "local"])
+def test_churn_with_wave_config_bit_identical_to_unwaved(mech):
+    """The fallback is EXACT: wave_clients set + alive mask == the plain
+    churn path == the serial survivor reference, bit for bit, across DP
+    modes and recovery."""
+    cids, flat = _cohort()
+    plan = make_virtual_groups(cids, 4, seed=2)
+    rs = jnp.asarray([11, 17], jnp.uint32)
+    key = jax.random.PRNGKey(1)
+    dcfg = dp_mod.DPConfig(
+        mechanism=mech, clip_norm=0.5,
+        noise_multiplier=0.7 if mech != "off" else 0.0)
+    alive = np.ones(len(cids), bool)
+    alive[[0, 5, 6]] = False
+
+    waved_cfg = sa.SecureAggConfig(wave_clients=4)
+    plain_cfg = sa.SecureAggConfig()
+    out_waved = pe.aggregate_flat(flat, plan, cids, rs,
+                                  secure_cfg=waved_cfg, dp_cfg=dcfg,
+                                  key=key, alive=alive)
+    out_plain = pe.aggregate_flat(flat, plan, cids, rs,
+                                  secure_cfg=plain_cfg, dp_cfg=dcfg,
+                                  key=key, alive=alive)
+    np.testing.assert_array_equal(np.asarray(out_waved),
+                                  np.asarray(out_plain))
+    # ... and both equal the serial survivor loop (fold rows = selection-
+    # time positions)
+    fold_of = {cid: j for j, cid in enumerate(cids)}
+    survivors = {cid: flat[j] for j, cid in enumerate(cids) if alive[j]}
+    serial = _secure_mean_survivors(survivors, plan, rs, key, plain_cfg,
+                                    dcfg, fold_of)
+    np.testing.assert_array_equal(np.asarray(serial),
+                                  np.asarray(out_waved))
+
+
+def test_wave_config_with_full_alive_mask_matches_clean_round():
+    """Edge of the contract: an all-True alive mask is still the churn
+    path (mask present = churn semantics), and its result must equal the
+    clean round's — the two branches implement the same mean."""
+    cids, flat = _cohort(n=8)
+    plan = make_virtual_groups(cids, 4, seed=3)
+    rs = jnp.asarray([21, 2], jnp.uint32)
+    key = jax.random.PRNGKey(2)
+    scfg = sa.SecureAggConfig(wave_clients=3)
+    clean = pe.aggregate_flat(flat, plan, cids, rs, secure_cfg=scfg,
+                              key=key)
+    masked = pe.aggregate_flat(flat, plan, cids, rs, secure_cfg=scfg,
+                               key=key, alive=np.ones(8, bool))
+    np.testing.assert_array_equal(np.asarray(clean), np.asarray(masked))

@@ -169,6 +169,51 @@ def test_hierarchical_combine_shard_map_pod_route():
                                rtol=1e-6, atol=1e-7)
 
 
+def test_stage2_route_reported_dividing_and_not():
+    """``meta["stage2_route"]`` is the build-time record of which stage-2
+    lowering won. Dividing pod/VG axes under per_pod -> the explicit
+    shard_map route; a pod count that does NOT divide n_vgs (or a
+    non-per_pod scheme) -> the zero-padded GSPMD fallback. The route is a
+    pure function of (cfg, mesh.shape), so the non-dividing case runs
+    in-process against a shape stub — no multi-device mesh needed."""
+    import logging
+    import types
+
+    cfg = get_reduced_config("deepseek-67b")
+    assert cfg.fl_scheme == "per_pod"
+    mesh = compat.make_mesh((1, 1, 1), ("pod", "data", "model"))
+    with compat.set_mesh(mesh):
+        _, meta = make_fl_train_step(cfg, mesh, microbatches=1)
+    assert meta["stage2_route"] == "shard_map_pod"
+    assert meta["stage2_pod_axis"] == "pod"
+
+    # 3 pods, n_vgs = 1 -> 1 % 3 != 0: the shard_map route must be
+    # demoted to the bit-identical zero-padded form, and say so
+    fake = types.SimpleNamespace(shape={"pod": 3, "data": 1, "model": 1})
+    logger = logging.getLogger("repro.launch.fl_step")
+    records = []
+    handler = logging.Handler()
+    handler.emit = records.append
+    logger.addHandler(handler)
+    old_level = logger.level
+    logger.setLevel(logging.INFO)
+    try:
+        _, meta = make_fl_train_step(cfg, fake, microbatches=1)
+    finally:
+        logger.setLevel(old_level)
+        logger.removeHandler(handler)
+    assert meta["stage2_route"] == "zero_padded_shards"
+    assert meta["stage2_pod_axis"] is None
+    assert any("zero_padded_shards" in r.getMessage() for r in records)
+
+    # non-per_pod scheme on the same mesh: fallback route too
+    cfg_silo = get_reduced_config("yi-9b")
+    assert cfg_silo.fl_scheme != "per_pod"
+    with compat.set_mesh(mesh):
+        _, meta = make_fl_train_step(cfg_silo, mesh, microbatches=1)
+    assert meta["stage2_route"] == "zero_padded_shards"
+
+
 def test_per_pod_round_uses_shard_map_combine():
     """End-to-end per_pod fl_round on a pod mesh: the stage-2 combine runs
     under shard_map over the pod axis and the round still trains."""
@@ -182,6 +227,7 @@ def test_per_pod_round_uses_shard_map_combine():
                                         microbatches=1, server_lr=5e-3)
         assert meta["stage2_pod_axis"] == "pod"
         assert meta["stage2_shards"] == 1
+        assert meta["stage2_route"] == "shard_map_pod"
         batch = _batch(cfg, meta["n_silos"], 4, 16)
         step = jax.jit(step)
         losses = []

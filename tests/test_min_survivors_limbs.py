@@ -1,0 +1,144 @@
+"""min_survivors_per_vg x 4-limb stage 2 x dropout recovery (ISSUE 9
+satellite): partial voiding (some groups below threshold, some healthy)
+is bit-identical between the serial survivor loop and the vectorized
+recovery path — with ``SecureAggConfig(limbs=4)`` carrying the extra
+headroom lane — and a full refusal VOIDS the service round WITHOUT
+consuming the round index, on both the serial and vectorized paths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dp as dp_mod
+from repro.core import privacy_engine as pe
+from repro.core import secure_agg as sa
+from repro.core.orchestrator import _secure_mean_survivors
+from repro.core.secure_agg import AggregationRefused
+from repro.core.virtual_groups import make_virtual_groups
+from repro.fl.auth import AttestationAuthority
+from repro.fl.server import ManagementService
+from repro.fl.task import TaskConfig
+from repro.core.secure_agg import SecureAggConfig
+
+
+def _round_inputs(n=12, size=25, seed=4):
+    rng = np.random.RandomState(seed)
+    cids = [f"c{i:03d}" for i in range(n)]
+    flat = jnp.asarray(rng.uniform(-1, 1, (n, size)), jnp.float32)
+    return cids, flat
+
+
+@pytest.mark.parametrize("limbs", [3, 4])
+@pytest.mark.parametrize("mech", ["off", "local"])
+def test_partial_voiding_parity_serial_vs_vectorized(limbs, mech):
+    """Kill one member of one VG (group survives, recovery runs) and all
+    but one of another (group voided, its mass excluded, the divisor
+    shrinks): serial and vectorized agree bitwise at 3 AND 4 limbs."""
+    cids, flat = _round_inputs()
+    plan = make_virtual_groups(cids, 4, seed=0)     # 3 groups of 4
+    rs = jnp.asarray([5, 13], jnp.uint32)
+    key = jax.random.PRNGKey(3)
+    scfg = sa.SecureAggConfig(limbs=limbs, min_survivors_per_vg=2)
+    dcfg = dp_mod.DPConfig(
+        mechanism=mech, clip_norm=0.5,
+        noise_multiplier=0.6 if mech != "off" else 0.0)
+    groups = [list(g.members) for g in plan.groups]
+    dead = set(groups[0][:1] + groups[1][:3])       # recover vs void
+    alive = np.asarray([c not in dead for c in cids], bool)
+
+    stats: dict = {}
+    vect = pe.aggregate_flat(flat, plan, cids, rs, secure_cfg=scfg,
+                             dp_cfg=dcfg, key=key, alive=alive,
+                             stats=stats)
+    assert stats["n_voided_groups"] == 1
+    fold_of = {cid: j for j, cid in enumerate(cids)}
+    survivors = {c: flat[j] for j, c in enumerate(cids) if alive[j]}
+    serial = _secure_mean_survivors(survivors, plan, rs, key, scfg, dcfg,
+                                    fold_of)
+    np.testing.assert_array_equal(np.asarray(serial), np.asarray(vect))
+
+
+def test_limbs4_clean_round_matches_limbs3():
+    """The 4th lane is pure headroom: on a cohort where 3 lanes are exact
+    the extra limb must not change a single bit of the result."""
+    cids, flat = _round_inputs(n=8)
+    plan = make_virtual_groups(cids, 4, seed=1)
+    rs = jnp.asarray([7, 2], jnp.uint32)
+    key = jax.random.PRNGKey(0)
+    l3 = pe.aggregate_flat(flat, plan, cids, rs,
+                           secure_cfg=sa.SecureAggConfig(limbs=3), key=key)
+    l4 = pe.aggregate_flat(flat, plan, cids, rs,
+                           secure_cfg=sa.SecureAggConfig(limbs=4), key=key)
+    np.testing.assert_array_equal(np.asarray(l3), np.asarray(l4))
+
+
+def test_total_refusal_raises_on_both_paths():
+    """Every group below min_survivors_per_vg -> AggregationRefused from
+    BOTH the vectorized recovery and the serial survivor loop."""
+    cids, flat = _round_inputs(n=8)
+    plan = make_virtual_groups(cids, 4, seed=2)
+    rs = jnp.asarray([1, 1], jnp.uint32)
+    key = jax.random.PRNGKey(1)
+    scfg = sa.SecureAggConfig(limbs=4, min_survivors_per_vg=2)
+    groups = [list(g.members) for g in plan.groups]
+    dead = set(groups[0][1:]) | set(groups[1][1:])  # 1 survivor per VG
+    alive = np.asarray([c not in dead for c in cids], bool)
+    with pytest.raises(AggregationRefused):
+        pe.aggregate_flat(flat, plan, cids, rs, secure_cfg=scfg, key=key,
+                          alive=alive)
+    fold_of = {cid: j for j, cid in enumerate(cids)}
+    survivors = {c: flat[j] for j, c in enumerate(cids) if alive[j]}
+    with pytest.raises(AggregationRefused):
+        _secure_mean_survivors(survivors, plan, rs, key, scfg,
+                               dp_mod.DPConfig(), fold_of)
+
+
+def _refusal_service_round(vectorized):
+    """Drive a real service round into total refusal; return (record,
+    metrics store rows)."""
+    svc = ManagementService(seed=0)
+    cfg = TaskConfig(
+        "t", "a", "w", clients_per_round=8, n_rounds=4, vg_size=4,
+        secure_agg=SecureAggConfig(vectorized=vectorized, limbs=4,
+                                   min_survivors_per_vg=2))
+    model = {"w": jnp.zeros((6, 4), jnp.float32)}
+    tid = svc.create_task(cfg, model)
+    auth = AttestationAuthority()
+    for i in range(8):
+        assert svc.register_client(
+            tid, f"c{i}", {"os": "linux", "n_samples": 10, "battery": 0.9},
+            auth.issue(f"c{i}"))
+    round_idx, cohort = svc.begin_round(tid)
+    plan = make_virtual_groups(sorted(cohort), 4, seed=round_idx)
+    groups = [list(g.members) for g in plan.groups]
+    dead = set(groups[0][1:]) | set(groups[1][1:])
+    rng = np.random.default_rng(0)
+    for cid in sorted(cohort):
+        if cid in dead:
+            svc.report_dropout(tid, cid)
+    closed = False
+    for cid in sorted(cohort):
+        if cid in dead:
+            continue
+        closed |= svc.submit_update(
+            tid, cid, {"w": jnp.asarray(rng.normal(size=(6, 4)),
+                                        jnp.float32)}, n_samples=10)
+    rec = svc.get_task(tid)
+    voided = svc.metrics.series(tid, "round_voided")
+    return closed, round_idx, rec, voided, model
+
+
+@pytest.mark.parametrize("vectorized", [True, False])
+def test_refusal_voids_round_without_consuming_index(vectorized):
+    """ISSUE 9 acceptance: a refused aggregate VOIDS the round — model
+    untouched, round index NOT consumed (the next begin_round re-selects
+    the same index), voiding telemetry logged — identically on the
+    serial and vectorized paths."""
+    closed, round_idx, rec, voided, model0 = _refusal_service_round(
+        vectorized)
+    assert closed                       # the round did close (voided)
+    assert rec.round_idx == round_idx   # ... but the index was not spent
+    np.testing.assert_array_equal(np.asarray(rec.model["w"]),
+                                  np.asarray(model0["w"]))
+    assert rec.history == []            # no aggregated round recorded
+    assert voided, "round_voided telemetry missing"

@@ -1,0 +1,116 @@
+"""Hypothesis property sweep for the PR 7 streaming-wave route (ISSUE 9
+satellite): across random cohort sizes, wave widths that divide and don't
+divide the cohort, ragged/merged VG plans, and DP off/local/global, the
+waved pipeline is bit-identical to the single vectorized dispatch — both
+at the CANONICAL LIMB-STATE level (the integer digits before the float
+tail) and at the final float output."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import dp as dp_mod
+from repro.core import privacy_engine as pe
+from repro.core import secure_agg as sa
+from repro.core.quantize import carry_normalize, merge_limb_states
+from repro.core.virtual_groups import make_virtual_groups
+
+
+def _cohort(n, size, seed):
+    rng = np.random.RandomState(seed)
+    cids = [f"c{i:03d}" for i in range(n)]
+    flat = jnp.asarray(rng.uniform(-1.2, 1.2, (n, size)), jnp.float32)
+    return cids, flat
+
+
+def _canonical_state(states):
+    """Per-dispatch limb states -> the canonical digits of the grand
+    total. Layout-independence of the digits is exactly the property the
+    wave route relies on, so canonicalizing both sides and comparing
+    bitwise pins it."""
+    return np.asarray(merge_limb_states(jnp.asarray(states)))
+
+
+@settings(deadline=None, max_examples=40)
+@given(n=st.integers(2, 26), vg_size=st.integers(2, 7),
+       wave=st.integers(1, 30), size=st.integers(1, 80),
+       mech=st.sampled_from(["off", "local", "global"]),
+       seed=st.integers(0, 10_000))
+def test_wave_bit_identical_to_single_dispatch(n, vg_size, wave, size,
+                                               mech, seed):
+    """The acceptance property: any wave width (dividing, non-dividing,
+    degenerate 1-client, wider-than-cohort => unwaved) over any
+    ragged/merged plan and DP mode produces the same bits as one
+    dispatch."""
+    cids, flat = _cohort(n, size, seed)
+    plan = make_virtual_groups(cids, vg_size, seed=seed)
+    round_seed = jnp.asarray([seed & 0xFFFF, seed >> 3], jnp.uint32)
+    key = jax.random.PRNGKey(seed)
+    dcfg = dp_mod.DPConfig(
+        mechanism=mech, clip_norm=0.5,
+        noise_multiplier=0.8 if mech != "off" else 0.0)
+    single = pe.aggregate_flat(flat, plan, cids, round_seed,
+                               secure_cfg=sa.SecureAggConfig(),
+                               dp_cfg=dcfg, key=key)
+    waved = pe.aggregate_flat(
+        flat, plan, cids, round_seed,
+        secure_cfg=sa.SecureAggConfig(wave_clients=wave),
+        dp_cfg=dcfg, key=key)
+    np.testing.assert_array_equal(np.asarray(single), np.asarray(waved))
+
+
+@settings(deadline=None, max_examples=25)
+@given(n=st.integers(2, 20), vg_size=st.integers(2, 6),
+       wave=st.integers(1, 19), size=st.integers(1, 60),
+       mech=st.sampled_from(["off", "local"]),
+       seed=st.integers(0, 10_000))
+def test_wave_limb_states_canonically_identical(n, vg_size, wave, size,
+                                                mech, seed):
+    """Below the float tail: folding the per-wave limb states must give
+    the SAME canonical digits as folding the single dispatch's per-shard
+    states — the integer chain is exact, so this is equality of integers,
+    not of rounded floats."""
+    cids, flat = _cohort(n, size, seed)
+    plan = make_virtual_groups(cids, vg_size, seed=seed)
+    buckets = pe.plan_buckets(plan, cids)
+    round_seed = jnp.asarray([seed & 0xFFFF, seed >> 3], jnp.uint32)
+    key = jax.random.PRNGKey(seed)
+    scfg = sa.SecureAggConfig()
+    dcfg = dp_mod.DPConfig(
+        mechanism=mech, clip_norm=0.5,
+        noise_multiplier=0.8 if mech != "off" else 0.0)
+    rows_t = tuple(jnp.asarray(b.rows, jnp.int32) for b in buckets)
+    vgs_t = tuple(jnp.asarray(b.vg_ids, jnp.uint32) for b in buckets)
+    shapes = tuple((b.g, b.n_groups) for b in buckets)
+    single_states = pe._cohort_interims(
+        flat, round_seed, key, rows_t, vgs_t, bucket_shapes=shapes,
+        n_shards=1, secure_cfg=scfg, dp_cfg=dcfg)
+    wave_states = pe._waved_states(flat, buckets, round_seed, key,
+                                   max(1, wave), scfg, dcfg)
+    np.testing.assert_array_equal(_canonical_state(single_states),
+                                  _canonical_state(wave_states))
+
+
+@settings(deadline=None, max_examples=15)
+@given(n=st.integers(4, 18), vg_size=st.integers(2, 5),
+       wave=st.integers(2, 17), shards=st.integers(1, 6),
+       seed=st.integers(0, 10_000))
+def test_wave_matches_sharded_stage2(n, vg_size, wave, shards, seed):
+    """Waves and explicit stage-2 sharding are two partitions of the same
+    integer total: both must match the unsharded single dispatch."""
+    cids, flat = _cohort(n, 40, seed)
+    plan = make_virtual_groups(cids, vg_size, seed=seed)
+    round_seed = jnp.asarray([seed & 0xFFFF, 5], jnp.uint32)
+    key = jax.random.PRNGKey(seed)
+    base = pe.aggregate_flat(flat, plan, cids, round_seed, key=key)
+    waved = pe.aggregate_flat(
+        flat, plan, cids, round_seed,
+        secure_cfg=sa.SecureAggConfig(wave_clients=wave), key=key)
+    sharded = pe.aggregate_flat(flat, plan, cids, round_seed, key=key,
+                                n_shards=shards)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(waved))
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(sharded))
