@@ -8,7 +8,8 @@ PY ?= python
 
 .PHONY: verify test test-cov deps docs-check bench bench-cohort \
 	bench-secureagg-smoke bench-async-smoke bench-dropout-smoke \
-	bench-multitask-smoke bench-fleet-smoke bench-compression-smoke
+	bench-multitask-smoke bench-fleet-smoke bench-compression-smoke \
+	bench-trace-smoke
 
 # Ratcheted line-coverage floor for the privacy-critical core
 # (src/repro/core/). Raise it as coverage grows; never lower it.
@@ -19,7 +20,7 @@ deps:
 
 verify: deps test-cov docs-check bench-secureagg-smoke bench-async-smoke \
 	bench-dropout-smoke bench-multitask-smoke bench-fleet-smoke \
-	bench-compression-smoke
+	bench-compression-smoke bench-trace-smoke
 
 # the full suite: every figure/claim bench, results persisted to
 # benchmarks/results/BENCH_<suite>.json (host info + git rev included)
@@ -65,3 +66,6 @@ bench-fleet-smoke:
 
 bench-compression-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.bench_compression --quick
+
+bench-trace-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.bench_trace --quick

@@ -13,6 +13,7 @@ and persists every suite's rows to ``benchmarks/results/BENCH_<suite>.json``
   bench_kernels   -> kernel microbenchmarks
   bench_fleet     -> fleet-scale control plane (10^6 devices, wave agg)
   bench_compression -> LoRA + top-k sub-1% rounds under secure agg
+  bench_trace     -> flight-recorder overhead (<2%) + bit-identity gate
 """
 from __future__ import annotations
 
@@ -22,7 +23,7 @@ import time
 
 from benchmarks import (bench_async, bench_cohort, bench_compression,
                         bench_fleet, bench_kernels, bench_scaling,
-                        bench_secureagg, bench_spam)
+                        bench_secureagg, bench_spam, bench_trace)
 from benchmarks.common import write_bench_json
 
 SUITES = [
@@ -34,6 +35,7 @@ SUITES = [
     ("cohort_engine", bench_cohort),
     ("fleet", bench_fleet),
     ("compression", bench_compression),
+    ("trace", bench_trace),
 ]
 
 

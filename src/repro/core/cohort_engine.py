@@ -41,6 +41,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro import tracing  # stdlib-only; safe for core to depend on
 from repro.optim.adamw import Optimizer, apply_updates
 
 
@@ -195,6 +196,8 @@ class CohortEngine:
             else:
                 self._fns[key] = vmap_cohort(self.spec,
                                              personalized=personalized)
+            label = "personalized" if key else "shared"
+            tracing.register_jit(f"cohort_engine.{label}", self._fns[key])
         return self._fns[key]
 
     # -- core entry points -------------------------------------------------
@@ -213,14 +216,17 @@ class CohortEngine:
         ``ManagementService.submit_cohort``) without the unstack-to-host
         round trip that ``run_cohort`` pays."""
         w = self.wave_size
-        if w and len(client_ids) > w:
-            return self._run_waves(params, list(client_ids), round_idx, w)
-        batches = stack_trees([self.batch_fn(cid, round_idx)
-                               for cid in client_ids])
-        if self.mesh is not None:
-            self._check_divisible(len(client_ids))
-        deltas, losses = self._cohort_fn(False)(params, batches)
-        return deltas, losses, self._n_samples(batches, stacked=True)
+        with tracing.span("local_train", n=len(client_ids),
+                          round=round_idx):
+            if w and len(client_ids) > w:
+                return self._run_waves(params, list(client_ids),
+                                       round_idx, w)
+            batches = stack_trees([self.batch_fn(cid, round_idx)
+                                   for cid in client_ids])
+            if self.mesh is not None:
+                self._check_divisible(len(client_ids))
+            deltas, losses = self._cohort_fn(False)(params, batches)
+            return deltas, losses, self._n_samples(batches, stacked=True)
 
     def _run_waves(self, params, client_ids, round_idx: int, w: int):
         """Stream an oversized cohort through fixed-width ``w``-client
@@ -238,14 +244,17 @@ class CohortEngine:
             n_real = len(chunk)
             if n_real < w:
                 chunk = chunk + [chunk[-1]] * (w - n_real)
-            batches = stack_trees([self.batch_fn(cid, round_idx)
-                                   for cid in chunk])
-            deltas, losses = fn(params, batches)
-            if n_samples is None:
-                n_samples = self._n_samples(batches, stacked=True)
-            host = jax.tree.map(np.asarray, deltas)
-            delta_parts.append(jax.tree.map(lambda a: a[:n_real], host))
-            loss_parts.append(np.asarray(losses)[:n_real])
+            with tracing.span("train_wave", wave=s // w, w=w,
+                              n_real=n_real):
+                batches = stack_trees([self.batch_fn(cid, round_idx)
+                                       for cid in chunk])
+                deltas, losses = fn(params, batches)
+                if n_samples is None:
+                    n_samples = self._n_samples(batches, stacked=True)
+                host = jax.tree.map(np.asarray, deltas)
+                delta_parts.append(jax.tree.map(lambda a: a[:n_real],
+                                                host))
+                loss_parts.append(np.asarray(losses)[:n_real])
         stacked = jax.tree.map(lambda *xs: np.concatenate(xs, axis=0),
                                *delta_parts)
         return stacked, jnp.asarray(np.concatenate(loss_parts)), n_samples
@@ -267,14 +276,17 @@ class CohortEngine:
         ``AsyncServer.submit_batch``) without the unstack-to-host round
         trip. Positional like its per-client twin (async event groups may
         repeat a client)."""
-        stacked_params = jax.tree.map(lambda *xs: jnp.stack(xs),
-                                      *params_list)
-        batches = stack_trees([self.batch_fn(cid, r)
-                               for cid, r in zip(client_ids, round_idxs)])
-        if self.mesh is not None:
-            self._check_divisible(len(client_ids))
-        deltas, losses = self._cohort_fn(True)(stacked_params, batches)
-        return deltas, losses, self._n_samples(batches, stacked=True)
+        with tracing.span("local_train", n=len(client_ids),
+                          personalized=True):
+            stacked_params = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                          *params_list)
+            batches = stack_trees([self.batch_fn(cid, r)
+                                   for cid, r in zip(client_ids,
+                                                     round_idxs)])
+            if self.mesh is not None:
+                self._check_divisible(len(client_ids))
+            deltas, losses = self._cohort_fn(True)(stacked_params, batches)
+            return deltas, losses, self._n_samples(batches, stacked=True)
 
     # -- adapters ----------------------------------------------------------
 

@@ -33,6 +33,7 @@ from repro.core import raveling
 from repro.core import secure_agg as sa
 from repro.core.strategies import FedBuff
 from repro.core.virtual_groups import make_virtual_groups
+from repro import tracing  # stdlib-only; safe for core to depend on
 
 
 @dataclass
@@ -50,6 +51,9 @@ class RoundInfo:
     # compressed rounds: bytes per client entering secure aggregation (the
     # measured upload the ROADMAP <1%-of-model acceptance reads); 0 = dense
     upload_bytes: int = 0
+    # stage-2 aggregation path this round took: "single_dispatch" / "waved"
+    # / "churn_recovery" (vectorized engine) or "serial" (reference loop)
+    stage2_route: str = "serial"
 
 
 @dataclass
@@ -217,7 +221,7 @@ def run_sync_round(params, strategy, strategy_state,
             delta = unflatten(pe.aggregate_flat(
                 flat, plan, cids, round_seed,
                 secure_cfg=secure_cfg, dp_cfg=dp_cfg, key=key,
-                n_shards=n_shards))
+                n_shards=n_shards, stats=stats))
         else:
             delta = _secure_mean_serial(
                 {cid: client_results[cid].update for cid in cids}, plan,
@@ -249,9 +253,11 @@ def run_sync_round(params, strategy, strategy_state,
     # aggregate above is the privacy-preserving uniform mean, so strategies
     # that need per-client weights blend the (non-private) metric weights at
     # the interim level: we apply the strategy on the single cohort mean.
-    delta = strategy.combine([delta], [1.0],
-                             [avg_metrics(client_results)])
-    params, strategy_state = strategy.apply(params, strategy_state, delta)
+    with tracing.span("server_update", round=round_idx):
+        delta = strategy.combine([delta], [1.0],
+                                 [avg_metrics(client_results)])
+        params, strategy_state = strategy.apply(params, strategy_state,
+                                                delta)
 
     info = RoundInfo(round_idx, len(cids), len(plan.groups),
                      metrics=avg_metrics(client_results),
@@ -259,7 +265,8 @@ def run_sync_round(params, strategy, strategy_state,
                      n_selected=len(protocol_order),
                      n_dropped=len(dropped),
                      recovery_s=stats.get("recovery_s", 0.0),
-                     upload_bytes=stats.get("upload_bytes", 0))
+                     upload_bytes=stats.get("upload_bytes", 0),
+                     stage2_route=stats.get("stage2_route", "serial"))
     return params, strategy_state, info
 
 
@@ -318,13 +325,16 @@ def run_sync_round_stacked(params, strategy, strategy_state,
                                      jax.random.fold_in(key, 10_000))
 
     metrics = _avg_metric_dicts(metrics_list or [])
-    delta = strategy.combine([delta], [1.0], [metrics])
-    params, strategy_state = strategy.apply(params, strategy_state, delta)
+    with tracing.span("server_update", round=round_idx):
+        delta = strategy.combine([delta], [1.0], [metrics])
+        params, strategy_state = strategy.apply(params, strategy_state,
+                                                delta)
     info = RoundInfo(round_idx, len(cids), len(plan.groups), metrics=metrics,
                      n_shards=n_shards,
                      n_selected=len(protocol_order), n_dropped=n_dropped,
                      recovery_s=stats.get("recovery_s", 0.0),
-                     upload_bytes=stats.get("upload_bytes", 0))
+                     upload_bytes=stats.get("upload_bytes", 0),
+                     stage2_route=stats.get("stage2_route", "serial"))
     return params, strategy_state, info
 
 
@@ -413,8 +423,10 @@ class AsyncServer:
             if self.dp_cfg.noise_multiplier > 0 else 0.0
 
     def _step(self):
-        self.params, self.state = self.strategy.drain(self.params,
-                                                      self.state)
+        with tracing.span("drain", step=self.n_server_steps,
+                          buffer_size=self.strategy.buffer_size):
+            self.params, self.state = self.strategy.drain(self.params,
+                                                          self.state)
         self.n_server_steps += 1
 
     def submit(self, result: ClientResult, update_version: int):
@@ -464,10 +476,11 @@ class AsyncServer:
         steps, i = [], 0
         while i < k:
             take = min(self.strategy.room(), k - i)
-            full = self.strategy.offer_rows(
-                rows[i:i + take],
-                weights[i:i + take], versions[i:i + take],
-                self.model_version)
+            with tracing.span("buffer_write", k=take):
+                full = self.strategy.offer_rows(
+                    rows[i:i + take],
+                    weights[i:i + take], versions[i:i + take],
+                    self.model_version)
             i += take
             if full:
                 self._step()

@@ -65,6 +65,7 @@ from repro.core.quantize import (check_headroom, check_master_headroom,
 from repro.core.secure_agg import (AggregationRefused, SecureAggConfig,
                                    _shard_limbs_jit, combine_limb_states,
                                    group_seed, resolve_master_shards)
+from repro import tracing  # stdlib-only; safe for core to depend on
 
 
 @dataclass(frozen=True)
@@ -266,12 +267,15 @@ def _waved_states(flat, buckets, round_seed, key, wave, secure_cfg, dp_cfg):
                 chunk = np.concatenate([chunk,
                                         np.repeat(chunk[-1:], pad, axis=0)])
                 cv = np.concatenate([cv, np.repeat(cv[-1:], pad)])
-            states.append(_wave_limb_state(
-                jnp.asarray(flat[chunk.ravel()]),
-                jnp.asarray(chunk.ravel().astype(np.uint32)),
-                round_seed, key, jnp.asarray(cv),
-                jnp.asarray(np.arange(m_w) < m_real),
-                g=b.g, secure_cfg=secure_cfg, dp_cfg=dp_cfg))
+            with tracing.span("wave", wave=len(states), g=b.g,
+                              n_groups=m_real) \
+                    .mark_fused("dp", "quantize", "mask", "vg_sum"):
+                states.append(_wave_limb_state(
+                    jnp.asarray(flat[chunk.ravel()]),
+                    jnp.asarray(chunk.ravel().astype(np.uint32)),
+                    round_seed, key, jnp.asarray(cv),
+                    jnp.asarray(np.arange(m_w) < m_real),
+                    g=b.g, secure_cfg=secure_cfg, dp_cfg=dp_cfg))
     return jnp.stack(states)
 
 
@@ -344,15 +348,28 @@ def aggregate_flat(flat, plan, client_order, round_seed, *,
             # compiled waves, exact partial limb folds (bit-identical —
             # limb digits are layout-independent and the float tail is
             # the same shared executable)
-            states = _waved_states(flat, buckets, round_seed, key, wave,
-                                   secure_cfg, dp_cfg)
-            check_shard_headroom(states.shape[0])
-            return combine_limb_states(states, n, secure_cfg)
-        states = _cohort_interims(
-            jnp.asarray(flat), round_seed, key, rows_t, vgs_t,
-            bucket_shapes=bucket_shapes, n_shards=n_shards,
-            secure_cfg=secure_cfg, dp_cfg=dp_cfg)
-        return combine_limb_states(states, n, secure_cfg)
+            if stats is not None:
+                stats["stage2_route"] = "waved"
+            with tracing.span("secure_agg", route="waved", n=n,
+                              n_shards=n_shards):
+                states = _waved_states(flat, buckets, round_seed, key,
+                                       wave, secure_cfg, dp_cfg)
+                check_shard_headroom(states.shape[0])
+                with tracing.span("limb_combine",
+                                  n_states=int(states.shape[0])):
+                    return combine_limb_states(states, n, secure_cfg)
+        if stats is not None:
+            stats["stage2_route"] = "single_dispatch"
+        with tracing.span("secure_agg", route="single_dispatch", n=n,
+                          n_shards=n_shards):
+            with tracing.span("cohort_interims", n=n) \
+                    .mark_fused("dp", "quantize", "mask", "vg_sum"):
+                states = _cohort_interims(
+                    jnp.asarray(flat), round_seed, key, rows_t, vgs_t,
+                    bucket_shapes=bucket_shapes, n_shards=n_shards,
+                    secure_cfg=secure_cfg, dp_cfg=dp_cfg)
+            with tracing.span("limb_combine", n_shards=n_shards):
+                return combine_limb_states(states, n, secure_cfg)
 
     from repro.core import dropout
     alive = np.asarray(alive, bool)
@@ -385,15 +402,23 @@ def aggregate_flat(flat, plan, client_order, round_seed, *,
                 f"min_survivors_per_vg={min_surv}")
     if stats is not None:
         stats["n_voided_groups"] = n_voided_groups
+        stats["stage2_route"] = "churn_recovery"
     n_survivors = int(alive.sum())
-    interims = _cohort_interims_churn(
-        jnp.asarray(flat), round_seed, key, rows_t, vgs_t,
-        jnp.asarray(alive), bucket_shapes=bucket_shapes,
-        secure_cfg=secure_cfg, dp_cfg=dp_cfg)
-    interims = dropout.recover_interims(interims, buckets, alive,
-                                        round_seed, stats=stats)
-    states = _shard_limbs_jit(interims, n_shards, secure_cfg.limbs)
-    return combine_limb_states(states, n_survivors, secure_cfg)
+    with tracing.span("secure_agg", route="churn_recovery", n=n,
+                      n_survivors=n_survivors, n_shards=n_shards):
+        with tracing.span("cohort_interims", n=n, churn=True) \
+                .mark_fused("dp", "quantize", "mask", "vg_sum"):
+            interims = _cohort_interims_churn(
+                jnp.asarray(flat), round_seed, key, rows_t, vgs_t,
+                jnp.asarray(alive), bucket_shapes=bucket_shapes,
+                secure_cfg=secure_cfg, dp_cfg=dp_cfg)
+        with tracing.span("mask_recovery",
+                          n_dropped=n - n_survivors):
+            interims = dropout.recover_interims(interims, buckets, alive,
+                                                round_seed, stats=stats)
+        with tracing.span("limb_combine", n_shards=n_shards):
+            states = _shard_limbs_jit(interims, n_shards, secure_cfg.limbs)
+            return combine_limb_states(states, n_survivors, secure_cfg)
 
 
 def aggregate_stacked(stacked_updates, plan, client_order, round_seed, *,

@@ -30,8 +30,10 @@ import pickle
 import sys
 
 from repro.core.dp import DPConfig
+from repro.fl import tracing
 from repro.fl.dashboard import (render_fleet, render_metrics,
-                                render_task_list, render_task_view)
+                                render_status, render_task_list,
+                                render_task_view, render_trace)
 from repro.fl.scheduler import ControlPlane
 from repro.fl.server import ManagementService
 from repro.fl.task import CompressionConfig, TaskConfig
@@ -43,7 +45,16 @@ DEFAULT_SESSION = os.environ.get("FLORIDA_SESSION",
 def load_service(path=DEFAULT_SESSION) -> ManagementService:
     if os.path.exists(path):
         with open(path, "rb") as f:
-            return pickle.load(f)
+            svc = pickle.load(f)
+        # sessions saved before the observability layer grew these
+        if not hasattr(svc, "meters"):
+            from repro.fl.telemetry import MetricsRegistry
+            svc.meters = MetricsRegistry()
+        if not hasattr(svc, "flight"):
+            svc.flight = None
+        if not hasattr(svc, "_jit_snapshot"):
+            svc._jit_snapshot = tracing.jit_cache_total()
+        return svc
     return ManagementService()
 
 
@@ -97,7 +108,26 @@ def _spam_world(model0=None):
 def cmd_run(svc, args):
     """Drive task(s) with simulated SDK clients (the CLI's test harness).
     One task id -> the direct single-task simulators; several -> the
-    ControlPlane-scheduled multi-task simulator over one shared fleet."""
+    ControlPlane-scheduled multi-task simulator over one shared fleet.
+
+    Tracing is ON by default for CLI runs (``--no-trace`` opts out): a
+    collecting tracer records the full round span tree, the service gets
+    a flight recorder next to the session file, and the run's Perfetto
+    timeline is exported to ``<session>.flight/perfetto_run.json``."""
+    if args.no_trace:
+        _run_tasks(svc, args)
+        return
+    svc.flight = tracing.FlightRecorder(args.session + ".flight")
+    with tracing.use_tracer(tracing.Tracer()) as tracer:
+        try:
+            _run_tasks(svc, args)
+        finally:
+            out = os.path.join(svc.flight.root, "perfetto_run.json")
+            tracer.export_perfetto(out)
+            print(f"trace: {tracer.n_spans} spans -> {out}")
+
+
+def _run_tasks(svc, args):
     from repro.fl.simulator import (make_heterogeneous_clients,
                                     run_async_simulation,
                                     run_multi_task_simulation,
@@ -192,8 +222,17 @@ def main(argv=None):
     r = sub.add_parser("run")
     r.add_argument("task_id", type=int, nargs="+")
     r.add_argument("--clients", type=int, default=16)
+    r.add_argument("--no-trace", action="store_true",
+                   help="disable the flight recorder + Perfetto export "
+                        "for this run")
     g = sub.add_parser("registry")
     g.add_argument("--save-dir", default=None)
+    sub.add_parser("status")
+    t = sub.add_parser("trace")
+    t.add_argument("task_id", type=int)
+    t.add_argument("--perfetto", default=None, metavar="OUT",
+                   help="also rebuild a Perfetto trace_events JSON from "
+                        "the task's flight records and write it here")
 
     args = ap.parse_args(argv)
     svc = load_service(args.session)
@@ -223,6 +262,20 @@ def main(argv=None):
         print(f"task {args.task_id} cancelled")
     elif args.cmd == "run":
         cmd_run(svc, args)
+    elif args.cmd == "status":
+        print(render_status(svc))
+    elif args.cmd == "trace":
+        print(render_trace(svc, args.task_id))
+        if args.perfetto:
+            if svc.flight is None:
+                print("no flight recorder: nothing to export")
+            else:
+                import json
+                events = svc.flight.read(args.task_id)
+                with open(args.perfetto, "w") as f:
+                    json.dump(tracing.perfetto_from_flight(
+                        events, args.task_id), f)
+                print(f"wrote {args.perfetto} ({len(events)} rounds)")
     save_service(svc, args.session)
 
 

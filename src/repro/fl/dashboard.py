@@ -17,14 +17,16 @@ def sparkline(values, width=48):
 
 
 def render_task_list(svc) -> str:
+    # round column is "rrr/nnn": 3 digits a side keeps the columns
+    # aligned past round 99 (the old 2-digit field drifted)
     rows = [f"{'id':>4} {'task':<18} {'status':<10} {'mode':<6} "
-            f"{'round':>5} {'clients':>7}"]
+            f"{'round':>7} {'clients':>7}"]
     rows.append("-" * len(rows[0]))
     for t in svc.list_tasks():
         registered = len(svc.selection.registered(t))
         rows.append(f"{t.task_id:>4} {t.config.task_name:<18} "
                     f"{t.status.value:<10} {t.config.mode:<6} "
-                    f"{t.round_idx:>2}/{t.config.n_rounds:<2} "
+                    f"{t.round_idx:>3}/{t.config.n_rounds:<3} "
                     f"{registered:>7}")
     return "\n".join(rows)
 
@@ -103,6 +105,57 @@ def render_metrics(svc, task_id: int) -> str:
         return rows[0] + " (none)"
     for m in metrics:
         rounds, vals = svc.metrics.series(task_id, m)
+        if not vals:
+            continue   # non-numeric series (stage2_route etc.)
         rows.append(f"  {m:<18} {sparkline(vals)}  "
                     f"last={vals[-1]:.4g} (n={len(vals)})")
     return "\n".join(rows)
+
+
+def render_status(svc) -> str:
+    """``florida status``: the task list plus the service's typed meter
+    registry (counters / gauges / histogram means)."""
+    lines = [render_task_list(svc), "", "meters:"]
+    snap = svc.meters.snapshot()
+    if not snap:
+        lines.append("  (none)")
+    for row in snap:
+        labels = ",".join(f"{k}={v}" for k, v in
+                          sorted(row["labels"].items()))
+        name = row["name"] + (f"{{{labels}}}" if labels else "")
+        if row["kind"] == "histogram":
+            lines.append(f"  {name:<40} n={row['count']:<6} "
+                         f"mean={row['mean']:.4g}")
+        else:
+            lines.append(f"  {name:<40} {row['value']:.6g}")
+    return "\n".join(lines)
+
+
+def render_trace(svc, task_id: int, last: int = 8) -> str:
+    """``florida trace <task>``: the flight-recorder round transcript —
+    per-round stage tree with wall-clock timings."""
+    if svc.flight is None:
+        return f"task {task_id}: no flight recorder installed"
+    events = svc.flight.read(task_id)
+    if not events:
+        return f"task {task_id}: no flight records"
+    lines = [f"flight transcript for task {task_id} "
+             f"({len(events)} events, showing last {min(last, len(events))}):"]
+    for ev in events[-last:]:
+        head = f"round {ev.get('round'):>3} [{ev.get('event')}]"
+        parts = [f"cohort={len(ev.get('cohort', []))}",
+                 f"survivors={len(ev.get('survivors', []))}"]
+        if ev.get("stage2_route"):
+            parts.append(f"route={ev['stage2_route']}")
+        if ev.get("n_shards"):
+            parts.append(f"shards={ev['n_shards']}")
+        if ev.get("void_reason"):
+            parts.append(f"void={ev['void_reason']}")
+        if ev.get("wall_ms") is not None:
+            parts.append(f"wall={ev['wall_ms']:.1f}ms")
+        lines.append(f"  {head}  " + " ".join(parts))
+        for st in ev.get("stages", []):
+            fused = " (fused)" if st.get("fused") else ""
+            lines.append(f"    {'  ' * st['depth']}{st['name']:<20} "
+                         f"{st['dur_ms']:>9.3f}ms{fused}")
+    return "\n".join(lines)

@@ -34,6 +34,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
+from repro import tracing
 from repro.fl.server import ManagementService
 from repro.fl.task import TaskRecord, TaskStatus
 
@@ -144,16 +145,19 @@ class ControlPlane:
         Returns None when no sync task is ready."""
         if now is not None:
             self.directory.now = now
-        tid = self.next_task(self.directory.now)
-        if tid is None:
-            return None
-        round_idx, cohort = self.service.begin_round(tid,
-                                                     available=available)
-        if not cohort:
-            return None
-        grant = RoundGrant(tid, round_idx, list(cohort))
+        with tracing.span("grant_round") as sp:
+            tid = self.next_task(self.directory.now)
+            if tid is None:
+                return None
+            round_idx, cohort = self.service.begin_round(
+                tid, available=available)
+            if not cohort:
+                return None
+            sp.set(task=tid, round=round_idx, n_cohort=len(cohort))
+            grant = RoundGrant(tid, round_idx, list(cohort))
         self._active[tid] = grant
         self.rounds_granted[tid] = self.rounds_granted.get(tid, 0) + 1
+        self.service.meters.counter("rounds_granted", task=tid).inc()
         return grant
 
     def active_grants(self) -> list:
@@ -188,6 +192,8 @@ class ControlPlane:
         self._active.pop(task_id, None)
         rec = self.service.get_task(task_id)
         self.service.selection.reset_round(rec)
+        self.service.meters.gauge("lease_seconds", task=task_id).set(
+            self.directory.lease_seconds.get(task_id, 0.0))
         return self.service.check_stop(task_id)
 
     # -- telemetry --------------------------------------------------------

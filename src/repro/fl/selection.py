@@ -41,6 +41,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro import tracing
 from repro.fl.auth import AuthenticationService
 from repro.fl.directory import DeviceDirectory
 from repro.fl.task import TaskRecord
@@ -234,8 +235,10 @@ class SelectionService:
             idx = np.asarray(
                 self._rng.sample(pool, min(k_target, len(pool))), np.int64)
             picks = [ids[i] for i in idx]
-        status[idx] = _SELECTED
-        self.directory.acquire(task.task_id, picks, idx=idx)
+        with tracing.span("lease_acquire", task=task.task_id,
+                          k=k_target, n=len(picks)):
+            status[idx] = _SELECTED
+            self.directory.acquire(task.task_id, picks, idx=idx)
         return picks
 
     def select_cohort(self, task: TaskRecord, overprovision: float = 1.0,

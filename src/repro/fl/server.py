@@ -13,6 +13,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro import tracing
 from repro.core import dp as dp_mod
 from repro.core import privacy_engine as pe
 from repro.core.orchestrator import (AsyncServer, ClientResult,
@@ -24,7 +25,7 @@ from repro.fl.directory import DeviceDirectory
 from repro.fl.registry import ModelRegistry
 from repro.fl.selection import SelectionService
 from repro.fl.task import TaskConfig, TaskRecord, TaskStatus
-from repro.fl.telemetry import MetricsStore
+from repro.fl.telemetry import MetricsRegistry, MetricsStore
 from repro.checkpoint import deserialize_pytree, serialize_pytree
 
 
@@ -78,6 +79,12 @@ class ManagementService:
         self.selection = SelectionService(self.auth, seed=seed,
                                           directory=self.directory)
         self.metrics = MetricsStore()
+        self.meters = MetricsRegistry()
+        # flight recorder (per-task JSONL round transcripts); None = off.
+        # The CLI run path installs one next to the session file
+        self.flight: tracing.FlightRecorder | None = None
+        # jit-cache watermark for the per-round jit_cache_misses delta
+        self._jit_snapshot = tracing.jit_cache_total()
         self.registry = ModelRegistry()
         self._tasks: dict[int, TaskRecord] = {}
         self._strategies: dict[int, Any] = {}
@@ -303,16 +310,20 @@ class ManagementService:
                              "starts (submissions or dropouts already "
                              "recorded)")
         unavailable = [c for c in unavailable if c in coll.cohort]
-        released = set(unavailable)
-        for cid in unavailable:
-            self.selection.release(rec, cid)
-        cohort = [c for c in coll.cohort if c not in released]
-        # the released members are back in the pool but must not be drawn
-        # straight back into the cohort they were just removed from
-        refill = self.selection.backfill(
-            rec, len(coll.cohort) - len(cohort),
-            available=lambda cid: cid not in released
-            and (available is None or available(cid)))
+        with tracing.span("backfill", task=task_id,
+                          n_released=len(unavailable)) as sp:
+            released = set(unavailable)
+            for cid in unavailable:
+                self.selection.release(rec, cid)
+            cohort = [c for c in coll.cohort if c not in released]
+            # the released members are back in the pool but must not be
+            # drawn straight back into the cohort they were just removed
+            # from
+            refill = self.selection.backfill(
+                rec, len(coll.cohort) - len(cohort),
+                available=lambda cid: cid not in released
+                and (available is None or available(cid)))
+            sp.set(n_refilled=len(refill))
         coll.cohort = sorted(cohort + refill)
         return list(coll.cohort)
 
@@ -347,15 +358,18 @@ class ManagementService:
         state = self._strategy_state[task_id]
         metrics_list = metrics_list or [{} for _ in cids]
         try:
-            rec.model, state, info = run_sync_round_stacked(
-                rec.model, strategy, state, cids, stacked_updates,
-                metrics_list,
-                round_idx=coll.round_idx, vg_size=rec.config.vg_size,
-                secure_cfg=rec.config.secure_agg, dp_cfg=rec.config.dp,
-                cohort=list(coll.cohort) if coll.dropped else None,
-                compressor=self._compressors.get(task_id))
+            with tracing.span("aggregate", task=task_id,
+                              round=coll.round_idx) as agg_sp:
+                rec.model, state, info = run_sync_round_stacked(
+                    rec.model, strategy, state, cids, stacked_updates,
+                    metrics_list,
+                    round_idx=coll.round_idx, vg_size=rec.config.vg_size,
+                    secure_cfg=rec.config.secure_agg,
+                    dp_cfg=rec.config.dp,
+                    cohort=list(coll.cohort) if coll.dropped else None,
+                    compressor=self._compressors.get(task_id))
         except AggregationRefused:
-            self._void_round(rec, coll)
+            self._void_round(rec, coll, reason="aggregation_refused")
             return True
         self._strategy_state[task_id] = state
         for cid in cids:
@@ -364,10 +378,12 @@ class ManagementService:
         # per-client submit_update cannot re-trigger aggregation
         self._collectors.pop(task_id, None)
         rec.round_idx += 1
+        self._record_flight(rec, coll, info, agg_sp, survivors=cids)
         self._finish_round(rec, dict(info.metrics, n=info.n_participants,
                                      n_groups=info.n_groups,
                                      n_shards=info.n_shards,
                                      n_samples_per_client=n_samples,
+                                     stage2_route=info.stage2_route,
                                      **_churn_metrics(info)))
         return True
 
@@ -465,19 +481,29 @@ class ManagementService:
         if rec.status is not TaskStatus.RUNNING:
             return rec.round_idx, []
         self.selection.reset_round(rec)   # last round's selected/done/dropped
-        cohort = self.selection.select_cohort(
-            rec, overprovision=rec.config.overprovision,
-            deadline=rec.config.round_timeout_s, available=available)
+        with tracing.span("selection", task=task_id,
+                          round=rec.round_idx) as sp:
+            cohort = self.selection.select_cohort(
+                rec, overprovision=rec.config.overprovision,
+                deadline=rec.config.round_timeout_s, available=available)
+            sp.set(n_cohort=len(cohort))
         self._collectors[task_id] = _RoundCollector(rec.round_idx, cohort)
         return rec.round_idx, cohort
 
-    def _void_round(self, rec: TaskRecord, coll: _RoundCollector):
+    def _void_round(self, rec: TaskRecord, coll: _RoundCollector,
+                    reason: str = "all_dropped"):
         """Close the round WITHOUT aggregating: either nobody survived, or
         secure aggregation REFUSED the survivor set (every virtual group
         fell below ``min_survivors_per_vg`` — releasing such an aggregate
         would hand bare updates to the aggregator). The round index is not
         consumed; the next ``begin_round`` re-selects."""
         self._collectors.pop(rec.task_id, None)
+        self.meters.counter("rounds_voided", task=rec.task_id).inc()
+        if self.flight is not None:
+            self.flight.record(rec.task_id, tracing.round_event(
+                round_idx=rec.round_idx, cohort=list(coll.cohort),
+                survivors=sorted(coll.results), voided=True,
+                void_reason=reason))
         self.metrics.log(rec.task_id, rec.round_idx, round_voided=1,
                          n_selected=len(coll.cohort),
                          n_survived=len(coll.results),
@@ -487,14 +513,17 @@ class ManagementService:
         strategy = self._strategies[rec.task_id]
         state = self._strategy_state[rec.task_id]
         try:
-            rec.model, state, info = run_sync_round(
-                rec.model, strategy, state, coll.results,
-                round_idx=coll.round_idx, vg_size=rec.config.vg_size,
-                secure_cfg=rec.config.secure_agg, dp_cfg=rec.config.dp,
-                cohort=list(coll.cohort) if coll.dropped else None,
-                compressor=self._compressors.get(rec.task_id))
+            with tracing.span("aggregate", task=rec.task_id,
+                              round=coll.round_idx) as agg_sp:
+                rec.model, state, info = run_sync_round(
+                    rec.model, strategy, state, coll.results,
+                    round_idx=coll.round_idx, vg_size=rec.config.vg_size,
+                    secure_cfg=rec.config.secure_agg,
+                    dp_cfg=rec.config.dp,
+                    cohort=list(coll.cohort) if coll.dropped else None,
+                    compressor=self._compressors.get(rec.task_id))
         except AggregationRefused:
-            self._void_round(rec, coll)
+            self._void_round(rec, coll, reason="aggregation_refused")
             return
         self._strategy_state[rec.task_id] = state
         # the round is closed — drop the collector so a straggling retry
@@ -502,14 +531,51 @@ class ManagementService:
         # round) cannot re-trigger the aggregation
         self._collectors.pop(rec.task_id, None)
         rec.round_idx += 1
+        self._record_flight(rec, coll, info, agg_sp,
+                            survivors=sorted(coll.results))
         self._finish_round(rec, dict(info.metrics, n=info.n_participants,
                                      n_groups=info.n_groups,
                                      n_shards=info.n_shards,
+                                     stage2_route=info.stage2_route,
                                      **_churn_metrics(info)))
+
+    def _record_flight(self, rec: TaskRecord, coll: _RoundCollector,
+                       info, span_tree, *, survivors):
+        """Append the closed round's transcript event (cohort, survivors,
+        stage timings from the aggregate span subtree, stage2 route) to
+        the task's flight-recorder JSONL, when a recorder is installed."""
+        if self.flight is None:
+            return
+        self.flight.record(rec.task_id, tracing.round_event(
+            round_idx=info.round_idx, cohort=list(coll.cohort),
+            survivors=list(survivors), n_shards=info.n_shards,
+            stage2_route=info.stage2_route, span_tree=span_tree,
+            metrics=_churn_metrics(info)))
 
     def _finish_round(self, rec: TaskRecord, metrics: dict):
         rec.history.append({"round": rec.round_idx, **metrics})
         self.metrics.log(rec.task_id, rec.round_idx, **metrics)
+        tid = rec.task_id
+        self.meters.counter("rounds_completed", task=tid).inc()
+        # shape-contract probe: new compiled executables since the last
+        # finished round across the shared jitted entry points
+        cur = tracing.jit_cache_total()
+        self.meters.counter("jit_cache_misses").inc(
+            max(0, cur - self._jit_snapshot))
+        self._jit_snapshot = cur
+        if "upload_bytes_per_client" in metrics:
+            self.meters.histogram("upload_bytes_per_client", task=tid) \
+                .observe(metrics["upload_bytes_per_client"])
+        if "recovery_s" in metrics:
+            self.meters.histogram("recovery_s", task=tid) \
+                .observe(metrics["recovery_s"])
+        if self.flight is not None and rec.config.mode == "async":
+            # async rounds close inside _finish_round (no collector /
+            # aggregate span to lift a transcript from)
+            self.flight.record(tid, {
+                "event": "server_step", "round": rec.round_idx,
+                "metrics": {k: v for k, v in metrics.items()
+                            if isinstance(v, (int, float, str))}})
         acc = self._accountants.get(rec.task_id)
         if acc is not None:
             pool = max(1, len(self.selection.registered(rec)))
@@ -524,6 +590,9 @@ class ManagementService:
                         else metrics.get("n", rec.config.clients_per_round))
             acc.q = min(1.0, per_step / pool)
             acc.step()
+            eps = self.epsilon(rec.task_id)
+            if eps is not None:
+                self.meters.gauge("epsilon_spent", task=tid).set(eps)
         self.check_stop(rec.task_id)
 
     def check_stop(self, task_id: int):

@@ -36,6 +36,7 @@ from typing import Callable
 
 import numpy as np
 
+from repro import tracing
 from repro.fl.client import FederatedLearningClient, WorkflowDetails, \
     _normalize_trainer_output
 from repro.fl.server import ManagementService
@@ -115,43 +116,52 @@ def run_sync_simulation(service: ManagementService, task_id: int,
 
     durations, history, clock = [], [], 0.0
     while task.status.value == "running":
-        round_idx, cohort = service.begin_round(task_id)
-        if not cohort:
-            break
-        blob = service.model_snapshot(task_id)
-        round_wall = 0.0
-        if engine is not None:
-            from repro.checkpoint import deserialize_pytree
-            if engine.template is None:
-                raise ValueError(
-                    "CohortEngine.template must be the model pytree "
-                    "structure to use the simulator fast path")
-            params = deserialize_pytree(blob, like=engine.template)
-            # fused path: the stacked cohort output feeds the vectorized
-            # privacy pipeline directly — no unstack-to-host, no
-            # per-client submit round-trips
-            stacked, losses, n_samples = engine.run_cohort_stacked(
-                params, list(cohort), round_idx)
-            losses = np.asarray(losses)
-            if not service.submit_cohort(
-                    task_id, list(cohort), stacked, n_samples,
-                    [{"loss": float(l)} for l in losses]):
-                raise RuntimeError(
-                    f"bulk submission rejected for round {round_idx} "
-                    f"(cohort {cohort})")
-            for cid in cohort:
-                round_wall = max(round_wall, clients[cid].duration(rng))
-        else:
-            for cid in cohort:
-                sc = clients[cid]
-                out = sc.trainer(blob, round_idx)
-                update, n_samples, metrics = _normalize_trainer_output(out)
-                service.submit_update(task_id, cid, update, n_samples,
-                                      metrics)
-                round_wall = max(round_wall, sc.duration(rng))  # barrier
+        with tracing.span("round", task=task_id) as round_sp:
+            round_idx, cohort = service.begin_round(task_id)
+            if not cohort:
+                break
+            round_sp.set(round=round_idx, n_cohort=len(cohort))
+            blob = service.model_snapshot(task_id)
+            round_wall = 0.0
+            if engine is not None:
+                from repro.checkpoint import deserialize_pytree
+                if engine.template is None:
+                    raise ValueError(
+                        "CohortEngine.template must be the model pytree "
+                        "structure to use the simulator fast path")
+                params = deserialize_pytree(blob, like=engine.template)
+                # fused path: the stacked cohort output feeds the
+                # vectorized privacy pipeline directly — no
+                # unstack-to-host, no per-client submit round-trips
+                stacked, losses, n_samples = engine.run_cohort_stacked(
+                    params, list(cohort), round_idx)
+                losses = np.asarray(losses)
+                if not service.submit_cohort(
+                        task_id, list(cohort), stacked, n_samples,
+                        [{"loss": float(l)} for l in losses]):
+                    raise RuntimeError(
+                        f"bulk submission rejected for round {round_idx} "
+                        f"(cohort {cohort})")
+                for cid in cohort:
+                    round_wall = max(round_wall,
+                                     clients[cid].duration(rng))
+            else:
+                for cid in cohort:
+                    sc = clients[cid]
+                    with tracing.span("local_train", client=cid,
+                                      round=round_idx):
+                        out = sc.trainer(blob, round_idx)
+                    update, n_samples, metrics = \
+                        _normalize_trainer_output(out)
+                    service.submit_update(task_id, cid, update, n_samples,
+                                          metrics)
+                    round_wall = max(round_wall,
+                                     sc.duration(rng))  # barrier
         round_wall += server_agg_s
         clock += round_wall
         durations.append(round_wall)
+        service.meters.histogram("round_duration_s", task=task_id) \
+            .observe(round_wall)
         row = dict(task.history[-1]) if task.history else {}
         if eval_fn is not None:
             row["eval_accuracy"] = float(eval_fn(task.model))
@@ -230,29 +240,37 @@ def _run_sync_churn(service, task_id, clients, rng, server_agg_s,
             continue
         voided = 0
         blob = service.model_snapshot(task_id)
-        if engine is not None:
-            params = deserialize_pytree(blob, like=engine.template)
-            stacked, losses, n_samples = engine.run_cohort_stacked(
-                params, survivors, round_idx)
-            losses = np.asarray(losses)
-            if not service.submit_cohort(
-                    task_id, survivors, stacked, n_samples,
-                    [{"loss": float(l)} for l in losses]):
-                raise RuntimeError(
-                    f"bulk survivor submission rejected for round "
-                    f"{round_idx} (survivors {survivors})")
-        else:
-            for cid in survivors:
-                sc = clients[cid]
-                out = sc.trainer(blob, round_idx)
-                update, n_samples, metrics = _normalize_trainer_output(out)
-                service.submit_update(task_id, cid, update, n_samples,
-                                      metrics)
+        with tracing.span("round", task=task_id, round=round_idx,
+                          n_cohort=len(cohort),
+                          n_dropped=len(dropped)):
+            if engine is not None:
+                params = deserialize_pytree(blob, like=engine.template)
+                stacked, losses, n_samples = engine.run_cohort_stacked(
+                    params, survivors, round_idx)
+                losses = np.asarray(losses)
+                if not service.submit_cohort(
+                        task_id, survivors, stacked, n_samples,
+                        [{"loss": float(l)} for l in losses]):
+                    raise RuntimeError(
+                        f"bulk survivor submission rejected for round "
+                        f"{round_idx} (survivors {survivors})")
+            else:
+                for cid in survivors:
+                    sc = clients[cid]
+                    with tracing.span("local_train", client=cid,
+                                      round=round_idx):
+                        out = sc.trainer(blob, round_idx)
+                    update, n_samples, metrics = \
+                        _normalize_trainer_output(out)
+                    service.submit_update(task_id, cid, update, n_samples,
+                                          metrics)
         round_wall = (deadline if dropped
                       else max(dur[cid] for cid in survivors))
         round_wall += server_agg_s
         clock += round_wall
         durations.append(round_wall)
+        service.meters.histogram("round_duration_s", task=task_id) \
+            .observe(round_wall)
         steps += 1
         row = dict(task.history[-1]) if task.history else {}
         if eval_fn is not None:
@@ -637,30 +655,38 @@ def run_multi_task_simulation(plane, clients: dict[str, SimClient],
         tr.voided = 0
         blob = service.model_snapshot(tid)
         engine = engines.get(tid)
-        if engine is not None:
-            if engine.template is None:
-                raise ValueError(
-                    "CohortEngine.template must be the model pytree "
-                    "structure to use the simulator fast path")
-            params = deserialize_pytree(blob, like=engine.template)
-            stacked, losses, n_samples = engine.run_cohort_stacked(
-                params, survivors, round_idx)
-            losses = np.asarray(losses)
-            if not service.submit_cohort(
-                    tid, survivors, stacked, n_samples,
-                    [{"loss": float(l)} for l in losses]):
-                raise RuntimeError(
-                    f"bulk submission rejected for task {tid} round "
-                    f"{round_idx} (survivors {survivors})")
-        else:
-            for cid in survivors:
-                update, n_samples, metrics = _train(tid, cid, blob,
-                                                    round_idx)
-                service.submit_update(tid, cid, update, n_samples, metrics)
+        with tracing.span("round", task=tid, round=round_idx,
+                          n_cohort=len(cohort),
+                          n_dropped=len(dropped)):
+            if engine is not None:
+                if engine.template is None:
+                    raise ValueError(
+                        "CohortEngine.template must be the model pytree "
+                        "structure to use the simulator fast path")
+                params = deserialize_pytree(blob, like=engine.template)
+                stacked, losses, n_samples = engine.run_cohort_stacked(
+                    params, survivors, round_idx)
+                losses = np.asarray(losses)
+                if not service.submit_cohort(
+                        tid, survivors, stacked, n_samples,
+                        [{"loss": float(l)} for l in losses]):
+                    raise RuntimeError(
+                        f"bulk submission rejected for task {tid} round "
+                        f"{round_idx} (survivors {survivors})")
+            else:
+                for cid in survivors:
+                    with tracing.span("local_train", client=cid,
+                                      round=round_idx):
+                        update, n_samples, metrics = _train(
+                            tid, cid, blob, round_idx)
+                    service.submit_update(tid, cid, update, n_samples,
+                                          metrics)
         aggregated = rec.round_idx > round_idx   # False: privacy refusal
         plane.complete_round(tid, now=t_end)
         tr.steps += int(aggregated)
         tr.durations.append(round_wall)
+        service.meters.histogram("round_duration_s", task=tid) \
+            .observe(round_wall)
         tr.clock = t_end
         row = dict(rec.history[-1]) if rec.history else {}
         eval_fn = eval_fns.get(tid)

@@ -1,10 +1,170 @@
-"""Metrics store backing the Florida dashboard / task view (paper §3.3):
-per-round training metrics, evaluation metrics, and run-time performance."""
+"""Metrics backing the Florida dashboard / task view (paper §3.3):
+per-round training metrics, evaluation metrics, and run-time performance.
+
+Two layers:
+
+:class:`MetricsStore`
+    The per-task round-series store the dashboard plots. Rows keep their
+    RAW values — numerics are floated for the series math, but string /
+    structured context (``stage2_route``, void reasons) survives instead
+    of crashing ``float()`` — and the whole store round-trips through
+    :meth:`save`/:meth:`load` (JSON with a wall-clock +
+    ``benchmarks.common.host_info()`` header) byte-identically.
+
+:class:`MetricsRegistry`
+    Typed operational meters replacing free-form dict rows: counters
+    (monotonic — ``jit_cache_misses``, ``rounds_completed``), gauges
+    (last-value — ``epsilon_spent``), histograms with FIXED bucket edges
+    (``round_duration_s``, ``upload_bytes_per_client``, ``lease_seconds``)
+    so cross-run snapshots are mergeable and dashboards never re-bucket.
+    Labels are kwargs (``registry.counter("rounds_voided", task=3)``);
+    one (name, labels) pair is one meter, and re-declaring a name with a
+    different type raises.
+"""
 from __future__ import annotations
 
 import json
+import time
 from collections import defaultdict
 from dataclasses import dataclass, field
+
+# fixed histogram bucket edges per well-known metric (upper bounds of the
+# first len(edges) buckets; one overflow bucket past the last edge)
+FIXED_BUCKETS = {
+    "round_duration_s": (0.05, 0.1, 0.25, 0.5, 1.0, 2.0, 5.0, 10.0, 30.0,
+                         60.0, 120.0),
+    "upload_bytes_per_client": (1e3, 1e4, 1e5, 1e6, 1e7, 1e8, 1e9),
+    "lease_seconds": (1.0, 5.0, 15.0, 60.0, 300.0, 1800.0, 3600.0),
+    "recovery_s": (1e-3, 1e-2, 0.1, 1.0, 10.0),
+}
+DEFAULT_BUCKETS = (1e-3, 1e-2, 0.1, 1.0, 10.0, 100.0, 1000.0)
+
+
+@dataclass
+class Counter:
+    """Monotonic count. ``inc`` rejects negative deltas — a decreasing
+    'counter' is a bug the registry should surface, not smooth over."""
+    value: float = 0.0
+
+    def inc(self, v: float = 1.0):
+        if v < 0:
+            raise ValueError(f"counter increment must be >= 0, got {v}")
+        self.value += v
+
+
+@dataclass
+class Gauge:
+    value: float = 0.0
+
+    def set(self, v: float):
+        self.value = float(v)
+
+
+@dataclass
+class Histogram:
+    """Fixed-edge histogram: ``counts[i]`` counts observations <=
+    ``edges[i]`` (cumulative-free, per-bucket), ``counts[-1]`` the
+    overflow past the last edge."""
+    edges: tuple = DEFAULT_BUCKETS
+    counts: list = None
+    total: float = 0.0
+    count: int = 0
+
+    def __post_init__(self):
+        self.edges = tuple(float(e) for e in self.edges)
+        if list(self.edges) != sorted(self.edges):
+            raise ValueError("histogram edges must be sorted")
+        if self.counts is None:
+            self.counts = [0] * (len(self.edges) + 1)
+
+    def observe(self, v: float):
+        v = float(v)
+        for i, e in enumerate(self.edges):
+            if v <= e:
+                self.counts[i] += 1
+                break
+        else:
+            self.counts[-1] += 1
+        self.total += v
+        self.count += 1
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+
+class MetricsRegistry:
+    """Typed meter registry. Meters are plain dataclasses, so the whole
+    registry pickles with the CLI session file."""
+
+    _KINDS = {"counter": Counter, "gauge": Gauge, "histogram": Histogram}
+
+    def __init__(self):
+        # (name, (("label", value), ...)) -> (kind, meter)
+        self._meters: dict = {}
+
+    def _get(self, kind: str, name: str, labels: dict, **kw):
+        key = (name, tuple(sorted(labels.items())))
+        hit = self._meters.get(key)
+        if hit is not None:
+            if hit[0] != kind:
+                raise TypeError(
+                    f"metric {name!r} already registered as {hit[0]}, "
+                    f"requested as {kind}")
+            return hit[1]
+        meter = self._KINDS[kind](**kw)
+        self._meters[key] = (kind, meter)
+        return meter
+
+    def counter(self, name: str, **labels) -> Counter:
+        return self._get("counter", name, labels)
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        return self._get("gauge", name, labels)
+
+    def histogram(self, name: str, edges=None, **labels) -> Histogram:
+        if edges is None:
+            edges = FIXED_BUCKETS.get(name, DEFAULT_BUCKETS)
+        return self._get("histogram", name, labels, edges=tuple(edges))
+
+    def value(self, name: str, default=None, **labels):
+        """Scalar read: counter/gauge value, histogram mean."""
+        hit = self._meters.get((name, tuple(sorted(labels.items()))))
+        if hit is None:
+            return default
+        kind, meter = hit
+        return meter.mean if kind == "histogram" else meter.value
+
+    def snapshot(self) -> list:
+        """Sorted, JSON-ready rows — the ``florida status`` payload."""
+        rows = []
+        for (name, labels), (kind, meter) in sorted(self._meters.items()):
+            row = {"name": name, "labels": dict(labels), "kind": kind}
+            if kind == "histogram":
+                row.update(count=meter.count, sum=meter.total,
+                           mean=meter.mean, edges=list(meter.edges),
+                           buckets=list(meter.counts))
+            else:
+                row["value"] = meter.value
+            rows.append(row)
+        return rows
+
+
+def _host_info() -> dict:
+    """``benchmarks.common.host_info()`` when the benchmarks package is
+    importable (it lives outside ``src``), else a stdlib-only subset —
+    the save header must never make the service layer depend on the
+    bench tree."""
+    try:
+        from benchmarks.common import host_info
+        return host_info()
+    except Exception:
+        import os
+        import platform
+        return {"platform": platform.platform(),
+                "machine": platform.machine(),
+                "python": platform.python_version(),
+                "cpu_count": os.cpu_count()}
 
 
 @dataclass
@@ -14,12 +174,23 @@ class MetricsStore:
 
     def log(self, task_id: int, round_idx: int, **metrics):
         for k, v in metrics.items():
+            # numerics are floated (series math); anything else is kept
+            # RAW — the old unconditional float() silently dropped string
+            # context like stage2_route at the caller (or crashed)
+            if isinstance(v, bool) or not isinstance(v, (int, float)):
+                try:
+                    v = float(v)
+                except (TypeError, ValueError):
+                    pass
+            else:
+                v = float(v)
             self._rows[task_id].append(
-                {"round": round_idx, "metric": k, "value": float(v)})
+                {"round": round_idx, "metric": k, "value": v})
 
     def series(self, task_id: int, metric: str):
-        """-> (rounds, values) for dashboard plots."""
-        rows = [r for r in self._rows[task_id] if r["metric"] == metric]
+        """-> (rounds, values) for dashboard plots (numeric rows only)."""
+        rows = [r for r in self._rows[task_id] if r["metric"] == metric
+                and isinstance(r["value"], (int, float))]
         rows.sort(key=lambda r: r["round"])
         return ([r["round"] for r in rows], [r["value"] for r in rows])
 
@@ -70,3 +241,41 @@ class MetricsStore:
 
     def to_json(self, task_id: int) -> str:
         return json.dumps(self._rows[task_id])
+
+    # -- whole-store persistence ------------------------------------------
+
+    def save(self, path: str, *, now: float | None = None,
+             host: dict | None = None) -> str:
+        """Persist EVERY task's rows (the old ``to_json`` exported one
+        task and nothing else). Header: wall clock + host metadata so a
+        saved store is attributable. ``now``/``host`` are injectable for
+        reproducible bytes (the round-trip test)."""
+        now = time.time() if now is None else float(now)
+        payload = {
+            "version": 1,
+            "saved_at_unix": round(now, 3),
+            "saved_at": time.strftime("%Y-%m-%dT%H:%M:%SZ",
+                                      time.gmtime(now)),
+            "host": _host_info() if host is None else host,
+            "tasks": {str(tid): self._rows[tid]
+                      for tid in sorted(self._rows)},
+        }
+        with open(path, "w") as f:
+            json.dump(payload, f, sort_keys=True, separators=(",", ":"))
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "MetricsStore":
+        """Inverse of :meth:`save`; the parsed header lands on
+        ``store.header``. ``load(p).save(q)`` with the header's
+        ``saved_at_unix``/``host`` re-injected is byte-identical to the
+        original file."""
+        with open(path) as f:
+            payload = json.load(f)
+        store = cls()
+        for tid, rows in payload.get("tasks", {}).items():
+            store._rows[int(tid)] = rows
+        store.header = {k: payload[k] for k in
+                        ("version", "saved_at_unix", "saved_at", "host")
+                        if k in payload}
+        return store

@@ -1,0 +1,26 @@
+"""Public surface of the flight-recorder tracing layer (service-layer
+name; see :mod:`repro.tracing` for the implementation and design notes).
+
+The implementation lives at the top of the ``repro`` namespace because
+``repro.core`` modules (privacy_engine, orchestrator, cohort_engine)
+instrument their hot paths with it: importing ``repro.fl.tracing`` from
+core would run ``repro/fl/__init__.py`` mid-import of the very core
+modules the service layer is built on (a hard cycle). ``repro.tracing``
+is stdlib-only, so ANY layer may import it first.
+
+All state is module-global in ``repro.tracing`` and every name here is a
+re-export, so ``fl.tracing.set_tracer(...)`` and ``repro.tracing
+.get_tracer()`` observe the same tracer.
+"""
+from repro.tracing import (FlightRecorder, NullTracer, Span, Tracer,
+                           enabled, get_tracer, jit_cache_sizes,
+                           jit_cache_total, perfetto_from_flight,
+                           register_jit, round_event, set_tracer, span,
+                           stage_list, use_tracer)
+
+__all__ = [
+    "FlightRecorder", "NullTracer", "Span", "Tracer", "enabled",
+    "get_tracer", "jit_cache_sizes", "jit_cache_total",
+    "perfetto_from_flight", "register_jit", "round_event", "set_tracer",
+    "span", "stage_list", "use_tracer",
+]

@@ -1,9 +1,12 @@
 """CLI + dashboard rendering (paper §3.3)."""
 import jax.numpy as jnp
+import numpy as np
 
+from repro import tracing
 from repro.fl import ManagementService, TaskConfig
-from repro.fl.dashboard import (render_metrics, render_task_list,
-                                render_task_view, sparkline)
+from repro.fl.dashboard import (render_metrics, render_status,
+                                render_task_list, render_task_view,
+                                render_trace, sparkline)
 
 
 def _svc_with_task(**kw):
@@ -103,3 +106,134 @@ def test_fleet_render():
     svc, tid = _svc_with_task()
     out = render_fleet(ControlPlane(svc))
     assert "spam-demo" in out and "registry: 0" in out
+
+
+# ---------------------------------------------------------------------------
+# renderer edge cases (ISSUE 10 satellite)
+# ---------------------------------------------------------------------------
+
+def test_sparkline_constant_series():
+    # all-equal values: the range fallback must not divide by zero, and
+    # every point lands on the same block
+    s = sparkline([2.0] * 10)
+    assert len(s) == 10 and len(set(s)) == 1
+    assert sparkline([0.0]) != "(no data)"
+
+
+def test_sparkline_window_width():
+    s = sparkline(list(range(200)), width=48)
+    assert len(s) == 48
+    assert s[-1] == sparkline([0, 1])[-1]   # max block at the tail
+
+
+def test_task_list_alignment_past_round_99():
+    svc = ManagementService()
+    t1 = svc.create_task(
+        TaskConfig("long-runner", "app", "wf", clients_per_round=2,
+                   n_rounds=150, vg_size=2), {"w": jnp.zeros(4)})
+    t2 = svc.create_task(
+        TaskConfig("fresh", "app", "wf", clients_per_round=2,
+                   n_rounds=3, vg_size=2), {"w": jnp.zeros(4)})
+    svc.get_task(t1).round_idx = 120
+    out = render_task_list(svc)
+    assert "120/150" in out
+    # 3-digit round fields keep every data row the same width — the old
+    # 2-digit format drifted the columns once a task passed round 99
+    lines = out.splitlines()
+    assert len({len(ln) for ln in lines[2:]}) == 1
+
+
+# ---------------------------------------------------------------------------
+# scripted 2-task simulation driving every renderer (ISSUE 10 satellite)
+# ---------------------------------------------------------------------------
+
+def _trainer_factory(i):
+    def trainer(blob, round_idx):
+        return {"w": np.full(8, 0.01, np.float32)}, 10, {"loss": 1.0}
+    return trainer
+
+
+def _run_two_task_sim(tmp_path):
+    from repro.fl import ControlPlane, run_multi_task_simulation
+    from repro.fl.simulator import make_heterogeneous_clients
+    plane = ControlPlane(seed=0)
+    tids = [plane.create_task(
+        TaskConfig(name, "app", "wf", clients_per_round=4, n_rounds=2,
+                   vg_size=2), {"w": np.zeros(8, np.float32)})
+        for name in ("alpha", "beta")]
+    for t in tids:
+        plane.deploy(t)
+    svc = plane.service
+    svc.flight = tracing.FlightRecorder(str(tmp_path / "flight"))
+    with tracing.use_tracer(tracing.Tracer()) as tr:
+        run_multi_task_simulation(
+            plane, make_heterogeneous_clients(8, _trainer_factory),
+            seed=0)
+    return plane, svc, tids, tr
+
+
+def test_two_task_sim_drives_all_renderers(tmp_path):
+    from repro.fl.dashboard import render_fleet
+    plane, svc, tids, tr = _run_two_task_sim(tmp_path)
+
+    out = render_task_list(svc)
+    assert "alpha" in out and "beta" in out and "completed" in out
+
+    view = render_task_view(svc, tids[0])
+    assert "rounds: 2/2" in view and "round history:" in view
+
+    fleet = render_fleet(plane)
+    assert "registry: 2 published model(s)" in fleet
+    assert "8 devices" in fleet
+
+    status = render_status(svc)
+    assert "meters:" in status
+    assert "rounds_completed{task=%d}" % tids[0] in status
+    assert "rounds_granted" in status and "jit_cache_misses" in status
+    assert "round_duration_s" in status and "lease_seconds" in status
+
+    # scheduler-layer meters landed too (fair-share lease accounting)
+    for tid in tids:
+        assert svc.meters.value("rounds_granted", task=tid) == 2.0
+        assert svc.meters.value("lease_seconds", task=tid) is not None
+
+    # the grant decisions were traced alongside the round pipeline
+    names = {s.name for r in tr.roots() for s in _span_tree(r)}
+    assert {"grant_round", "lease_acquire", "local_train", "aggregate",
+            "secure_agg", "server_update"} <= names
+
+
+def _span_tree(span):
+    out = [span]
+    for c in span.children:
+        out.extend(_span_tree(c))
+    return out
+
+
+def test_render_trace_transcript(tmp_path):
+    _, svc, tids, _ = _run_two_task_sim(tmp_path)
+    out = render_trace(svc, tids[1])
+    assert f"flight transcript for task {tids[1]}" in out
+    assert "round   0 [round]" in out and "round   1 [round]" in out
+    assert "cohort=4 survivors=4" in out
+    assert "route=single_dispatch" in out
+    assert "aggregate" in out and "secure_agg" in out
+    assert "(fused)" in out            # dp/quantize/mask/vg_sum rows
+    # unknown task / missing recorder degrade to messages, not crashes
+    assert "no flight records" in render_trace(svc, 999)
+    svc.flight = None
+    assert "no flight recorder" in render_trace(svc, tids[0])
+
+
+def test_cli_status_and_trace_commands(tmp_path, capsys):
+    from repro.fl import cli
+    session = str(tmp_path / "s.pkl")
+    cli.main(["--session", session, "create", "--task-name", "t1",
+              "--app-name", "a", "--workflow", "w",
+              "--clients-per-round", "2", "--rounds", "2"])
+    capsys.readouterr()
+    cli.main(["--session", session, "status"])
+    out = capsys.readouterr().out
+    assert "t1" in out and "meters:" in out
+    cli.main(["--session", session, "trace", "1"])
+    assert "no flight recorder" in capsys.readouterr().out
